@@ -1,0 +1,48 @@
+"""Fig. 14 analog: reconstruction quality vs compression ratio when tuning
+alpha (KS threshold) vs r (min/max relative tolerance)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import IdealemCodec, quality_measures
+
+from .common import csv_row, mag_channels
+
+
+def run(n=65_536):
+    rows = []
+    x = mag_channels(n)["BANK514L1MAG"]
+    base = quality_measures(x)
+    # alpha sweep at fixed r=0.5 (paper: alpha = 0.02..0.2)
+    for alpha in [0.02, 0.05, 0.1, 0.2]:
+        c = IdealemCodec(mode="std", block_size=32, num_dict=255, alpha=alpha,
+                         rel_tol=0.5, backend="numpy")
+        t0 = time.time()
+        blob = c.encode(x)
+        y = c.decode(blob)
+        m = quality_measures(y)
+        rows.append(csv_row(
+            f"fig14/alpha={alpha}", (time.time() - t0) * 1e6 / n,
+            f"ratio={c.compression_ratio(x, blob):.1f};"
+            f"m1={m['m1_num_peaks']:.0f};m5={m['m5_num_big_jumps']:.0f};"
+            f"m1_orig={base['m1_num_peaks']:.0f};m5_orig={base['m5_num_big_jumps']:.0f}"))
+    # r sweep at fixed alpha=0.01 (paper: r = 0.1..0.4)
+    for r in [0.1, 0.2, 0.3, 0.4]:
+        c = IdealemCodec(mode="std", block_size=32, num_dict=255, alpha=0.01,
+                         rel_tol=r, backend="numpy")
+        t0 = time.time()
+        blob = c.encode(x)
+        y = c.decode(blob)
+        m = quality_measures(y)
+        rows.append(csv_row(
+            f"fig14/r={r}", (time.time() - t0) * 1e6 / n,
+            f"ratio={c.compression_ratio(x, blob):.1f};"
+            f"m1={m['m1_num_peaks']:.0f};m5={m['m5_num_big_jumps']:.0f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

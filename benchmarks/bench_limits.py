@@ -1,0 +1,51 @@
+"""Props 6.1/6.2 + Cors 6.1/6.2: empirical convergence to the theoretical
+maximum compression ratios (8B std, 8cB std-D1, (8/9)B residual)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import IdealemCodec
+from repro.data import synthetic
+
+from .common import csv_row
+
+
+def run():
+    rows = []
+    B = 16
+    # Prop 6.1: single gaussian source, multi-dict -> 8B
+    x = np.random.default_rng(0).normal(size=B * 20_000)
+    c = IdealemCodec(mode="std", block_size=B, num_dict=8, alpha=0.01,
+                     rel_tol=0.5, backend="numpy")
+    t0 = time.time()
+    ratio = c.compression_ratio(x, c.encode(x))
+    rows.append(csv_row("limits/prop6.1_std", (time.time() - t0) * 1e6 / len(x),
+                        f"ratio={ratio:.1f};limit={8 * B};frac={ratio / (8 * B):.3f}"))
+    # Cor 6.1: identical blocks, D=1, c=255 -> 8cB
+    x = np.tile(np.random.default_rng(1).normal(size=B), 60_000)
+    c = IdealemCodec(mode="std", block_size=B, num_dict=1, alpha=0.01,
+                     rel_tol=0.5, max_count=255, backend="numpy")
+    t0 = time.time()
+    ratio = c.compression_ratio(x, c.encode(x))
+    rows.append(csv_row("limits/cor6.1_std_D1", (time.time() - t0) * 1e6 / len(x),
+                        f"ratio={ratio:.1f};limit={8 * 255 * B};"
+                        f"frac={ratio / (8 * 255 * B):.3f}"))
+    # Prop 6.2: smooth ramp, residual mode -> (8/9)B
+    B2 = 112
+    x = synthetic.pmu_angle(B2 * 3_000, noise=0.01)
+    c = IdealemCodec(mode="residual", block_size=B2, num_dict=8, alpha=0.01,
+                     rel_tol=0.5, value_range=(0.0, 360.0), backend="numpy")
+    t0 = time.time()
+    ratio = c.compression_ratio(x, c.encode(x))
+    lim = 8 * B2 / 9
+    rows.append(csv_row("limits/prop6.2_residual",
+                        (time.time() - t0) * 1e6 / len(x),
+                        f"ratio={ratio:.2f};limit={lim:.2f};frac={ratio / lim:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

@@ -1,0 +1,54 @@
+"""Table I analog: compression ratios, IDEALEM vs ZFP/ISABELA/SZ-like.
+
+Paper settings: IDEALEM D=255 alpha=0.01; MAG -> std mode B=32;
+ANG -> residual mode B=112 (delta also reported).  Upper bounds: 256 (std),
+99.56 (residual).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.baselines import IsabelaLikeCodec, SzLikeCodec, ZfpLikeCodec
+from repro.configs import idealem_paper as papercfg
+
+from .common import ang_channels, csv_row, mag_channels
+
+
+def run(n=None):
+    rows = []
+    chans = {}
+    chans.update(mag_channels(*([n] if n else [])))
+    chans.update(ang_channels(*([n] if n else [])))
+    for name, x in chans.items():
+        is_ang = name.endswith("ANG")
+        t0 = time.time()
+        if is_ang:
+            codec = papercfg.ang_codec()
+            blob = codec.encode(x)
+            ratios = {"idealem": codec.compression_ratio(x, blob)}
+            dcodec = papercfg.ang_codec(delta=True)
+            ratios["idealem_delta"] = dcodec.compression_ratio(x, dcodec.encode(x))
+        else:
+            codec = papercfg.mag_codec()
+            blob = codec.encode(x)
+            ratios = {"idealem": codec.compression_ratio(x, blob)}
+        t_idealem = time.time() - t0
+
+        ratios["zfp_like"] = ZfpLikeCodec(tolerance=(0.5 if is_ang else 0.08)) \
+            .compression_ratio(x, ZfpLikeCodec(tolerance=(0.5 if is_ang else 0.08)).encode(x))
+        ratios["sz_like"] = SzLikeCodec(rel_bound_ratio=1e-3) \
+            .compression_ratio(x, SzLikeCodec(rel_bound_ratio=1e-3).encode(x))
+        isa = IsabelaLikeCodec(window=512, num_coeff=15, error_rate=5.0)
+        ratios["isabela_like"] = isa.compression_ratio(x, isa.encode(x))
+
+        derived = ";".join(f"{k}={v:.2f}" for k, v in ratios.items())
+        rows.append(csv_row(f"table1/{name}", t_idealem * 1e6 / max(len(x), 1),
+                            derived))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

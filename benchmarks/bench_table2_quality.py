@@ -1,0 +1,46 @@
+"""Table II analog: six reconstruction-quality measures, original vs each
+codec's reconstruction."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.baselines import IsabelaLikeCodec, SzLikeCodec, ZfpLikeCodec
+from repro.configs import idealem_paper as papercfg
+from repro.core import quality_measures
+
+from .common import ang_channels, csv_row, mag_channels
+
+
+def _measures_str(m):
+    return ";".join(f"{k.split('_')[0]}={v:.4g}" for k, v in m.items())
+
+
+def run(n=None):
+    rows = []
+    chans = {}
+    chans.update(mag_channels(*([n] if n else [])))
+    chans.update(ang_channels(*([n] if n else [])))
+    for name, x in chans.items():
+        is_ang = name.endswith("ANG")
+        codecs = {
+            "original": None,
+            "idealem": papercfg.ang_codec() if is_ang else papercfg.mag_codec(),
+            "zfp_like": ZfpLikeCodec(tolerance=0.5 if is_ang else 0.08),
+            "sz_like": SzLikeCodec(rel_bound_ratio=1e-3),
+            "isabela_like": IsabelaLikeCodec(),
+        }
+        for cname, codec in codecs.items():
+            t0 = time.time()
+            y = x if codec is None else codec.decode(codec.encode(x))
+            m = quality_measures(y)
+            rows.append(csv_row(f"table2/{name}/{cname}",
+                                (time.time() - t0) * 1e6 / len(x),
+                                _measures_str(m)))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

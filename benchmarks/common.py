@@ -1,0 +1,37 @@
+"""Shared benchmark utilities: the synthetic uPMU channel set standing in for
+the paper's LBNL data (Table I uses 4 MAG + 4 ANG channels from two uPMUs)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.data import synthetic
+
+# paper channels: A6BUS1/BANK514 x C1/L1 x MAG/ANG.  ~1 GB each in the paper;
+# we scale to N samples per channel (CPU harness).
+N_SAMPLES = 262_144
+
+
+def mag_channels(n: int = N_SAMPLES):
+    return {
+        "A6BUS1C1MAG": synthetic.pmu_magnitude(n, level=120.0, noise=0.4,
+                                               tap_step=2.0, seed=1),
+        "A6BUS1L1MAG": synthetic.pmu_magnitude(n, level=7200.0, noise=1.5,
+                                               tap_step=45.0, seed=2),
+        "BANK514C1MAG": synthetic.pmu_magnitude(n, level=95.0, noise=1.1,
+                                                n_shifts=8, tap_step=3.0, seed=3),
+        "BANK514L1MAG": synthetic.pmu_magnitude(n, level=7180.0, noise=0.9,
+                                                tap_step=44.9, seed=4),
+    }
+
+
+def ang_channels(n: int = N_SAMPLES):
+    return {
+        "A6BUS1C1ANG": synthetic.pmu_angle(n, slope=0.72, noise=0.04, seed=5),
+        "A6BUS1L1ANG": synthetic.pmu_angle(n, slope=0.31, noise=0.02, seed=6),
+        "BANK514C1ANG": synthetic.pmu_angle(n, slope=0.72, noise=0.06, seed=7),
+        "BANK514L1ANG": synthetic.pmu_angle(n, slope=0.29, noise=0.03, seed=8),
+    }
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.3f},{derived}"

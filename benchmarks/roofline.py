@@ -1,0 +1,99 @@
+"""Roofline analysis from dry-run artifacts (EXPERIMENTS.md Sec. Roofline).
+
+Per (arch x shape x mesh):
+  compute term    = HLO_FLOPs_per_chip / peak_FLOPs        [s]
+  memory term     = HLO_bytes_per_chip / HBM_bw            [s]
+  collective term = wire_bytes_per_chip / ICI_link_bw      [s]
+
+(The dry-run artifacts are per-chip: the analyzed module is the SPMD-
+partitioned per-device program; dividing totals by chips is equivalent.)
+Hardware: TPU v5e-class -- 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link ICI.
+
+MODEL_FLOPS = 6*N*D (train) or 2*N*D (inference), N_active for MoE; the
+ratio MODEL_FLOPS/HLO_FLOPs exposes remat/redundancy waste.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def cell_terms(rec: Dict) -> Optional[Dict]:
+    if rec.get("status") != "ok":
+        return None
+    chips = rec["chips"]
+    tokens = rec["global_batch"] * (
+        rec["seq_len"] if rec["kind"] in ("train", "prefill") else 1)
+    factor = 6 if rec["kind"] == "train" else 2
+    model_flops = factor * rec["n_active"] * tokens / chips
+    t_c = rec["flops_per_chip"] / PEAK_FLOPS
+    t_m = rec["bytes_per_chip"] / HBM_BW
+    t_x = rec["collective_wire_bytes_per_chip"] / ICI_BW
+    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_x),
+              key=lambda kv: kv[1])[0]
+    useful = model_flops / rec["flops_per_chip"] if rec["flops_per_chip"] else 0
+    bound = max(t_c, t_m, t_x)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "kind": rec["kind"],
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+        "dominant": dom,
+        "model_flops_per_chip": model_flops,
+        "hlo_flops_per_chip": rec["flops_per_chip"],
+        "useful_flop_ratio": useful,
+        # fraction of roofline: time the chip would spend at peak on useful
+        # work over the critical-path bound (no-overlap worst case)
+        "roofline_frac": (model_flops / PEAK_FLOPS) / bound if bound else 0.0,
+    }
+
+
+def load(art_dir: str) -> List[Dict]:
+    out = []
+    for f in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        rec = json.load(open(f))
+        t = cell_terms(rec)
+        if t:
+            out.append(t)
+    return out
+
+
+def table(art_dir: str = "artifacts/dryrun", mesh: str = "16x16") -> str:
+    rows = [t for t in load(art_dir) if t["mesh"] == mesh]
+    hdr = (f"{'arch':24s} {'shape':12s} {'compute_s':>10s} {'memory_s':>10s} "
+           f"{'collect_s':>10s} {'dominant':>10s} {'useful':>7s} {'roofl%':>7s}")
+    lines = [hdr]
+    for t in rows:
+        lines.append(
+            f"{t['arch']:24s} {t['shape']:12s} {t['compute_s']:10.4f} "
+            f"{t['memory_s']:10.4f} {t['collective_s']:10.4f} "
+            f"{t['dominant']:>10s} {t['useful_flop_ratio']:7.3f} "
+            f"{100 * t['roofline_frac']:7.2f}")
+    return "\n".join(lines)
+
+
+def run():
+    from .common import csv_row
+    rows = []
+    for label, d in [("baseline", "artifacts/dryrun"),
+                     ("optimized", "artifacts/dryrun_opt")]:
+        for t in load(d):
+            rows.append(csv_row(
+                f"roofline[{label}]/{t['arch']}/{t['shape']}/{t['mesh']}", 0.0,
+                f"compute_s={t['compute_s']:.4f};memory_s={t['memory_s']:.4f};"
+                f"collective_s={t['collective_s']:.4f};dom={t['dominant']};"
+                f"useful={t['useful_flop_ratio']:.3f};"
+                f"roofline_frac={t['roofline_frac']:.4f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    d = sys.argv[1] if len(sys.argv) > 1 else "artifacts/dryrun"
+    mesh = sys.argv[2] if len(sys.argv) > 2 else "16x16"
+    print(table(d, mesh))

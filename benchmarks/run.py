@@ -1,0 +1,42 @@
+"""Benchmark driver: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines.  Roofline rows are emitted
+when dry-run artifacts exist (run scripts/run_dryrun_sweep.sh first).
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import (bench_fig3_pvalue, bench_fig12_spectral,
+                   bench_fig14_tradeoff, bench_fig15_speed, bench_gradcomp,
+                   bench_limits, bench_table1_ratio, bench_table2_quality,
+                   roofline)
+    modules = [
+        ("table1", bench_table1_ratio),
+        ("table2", bench_table2_quality),
+        ("fig3", bench_fig3_pvalue),
+        ("fig12", bench_fig12_spectral),
+        ("fig14", bench_fig14_tradeoff),
+        ("fig15", bench_fig15_speed),
+        ("limits", bench_limits),
+        ("gradcomp", bench_gradcomp),
+        ("roofline", roofline),
+    ]
+    failed = []
+    for name, mod in modules:
+        try:
+            for row in mod.run():
+                print(row, flush=True)
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"FAILED benches: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

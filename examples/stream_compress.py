@@ -1,0 +1,60 @@
+"""Streaming telemetry pipeline: a fleet of sensor channels compressed
+online with IDEALEM (vmap-batched device encoder), with decode verification
+-- the paper's deployment scenario as a data-pipeline substrate.
+
+  PYTHONPATH=src python examples/stream_compress.py --channels 16
+"""
+import argparse
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import IdealemCodec
+from repro.core.encoder import encode_decisions_batched
+from repro.core.ks import critical_distance
+from repro.data import synthetic
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--channels", type=int, default=16)
+    ap.add_argument("--samples", type=int, default=32 * 512)
+    ap.add_argument("--block", type=int, default=32)
+    args = ap.parse_args()
+
+    B = args.block
+    chans = np.stack([
+        synthetic.pmu_magnitude(args.samples, level=100 + 5 * i, noise=1.0,
+                                seed=i) for i in range(args.channels)
+    ])
+
+    # --- device path: all channels encoded in one vmapped scan ---
+    blocks = jnp.asarray(
+        chans.reshape(args.channels, -1, B), dtype=jnp.float32)
+    d_crit = float(critical_distance(0.01, B, B))
+    t0 = time.time()
+    is_hit, slot, ovw = encode_decisions_batched(
+        blocks, num_dict=255, d_crit=d_crit, rel_tol=0.5)
+    is_hit = np.asarray(is_hit)
+    dt = time.time() - t0
+    rate = args.channels * args.samples / dt / 1e6
+    print(f"device encoder: {args.channels} channels x {args.samples} samples "
+          f"in {dt:.2f}s ({rate:.1f} Msamples/s), "
+          f"hit rate {is_hit.mean():.2%}")
+
+    # --- host path: full byte-stream roundtrip per channel ---
+    codec = IdealemCodec(mode="std", block_size=B, num_dict=255, alpha=0.01,
+                         rel_tol=0.5)
+    ratios = []
+    for ch in chans[:4]:
+        blob = codec.encode(ch)
+        y = codec.decode(blob)
+        assert len(y) == len(ch)
+        ratios.append(codec.compression_ratio(ch, blob))
+    print(f"stream ratios (first 4 channels): "
+          f"{[round(r, 1) for r in ratios]}")
+
+
+if __name__ == "__main__":
+    main()

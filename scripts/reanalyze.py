@@ -1,0 +1,33 @@
+"""Re-run the trip-count-aware HLO analysis over saved dry-run artifacts
+(no recompilation; reads <tag>.hlo.zst next to each <tag>.json)."""
+import glob
+import json
+import os
+import sys
+
+import zstandard as zstd
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+from repro.launch.hlo_cost import analyze  # noqa: E402
+
+
+def main(art_dir: str) -> None:
+    for jf in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        hf = jf.replace(".json", ".hlo.zst")
+        if not os.path.exists(hf):
+            continue
+        rec = json.load(open(jf))
+        if rec.get("status") != "ok":
+            continue
+        text = zstd.ZstdDecompressor().decompress(open(hf, "rb").read()).decode()
+        cost = analyze(text)
+        rec["flops_per_chip"] = cost["flops"]
+        rec["bytes_per_chip"] = cost["bytes"]
+        rec["collectives"] = cost["collectives"]
+        rec["collective_wire_bytes_per_chip"] = cost["collective_wire_bytes"]
+        json.dump(rec, open(jf, "w"), indent=1)
+        print("reanalyzed", os.path.basename(jf))
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "artifacts/dryrun")

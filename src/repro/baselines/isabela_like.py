@@ -1,0 +1,118 @@
+"""ISABELA-like codec (simplified; Lakshminarasimhan et al. 2011 skeleton).
+
+Per window of W samples: sort (monotone curve) -> cubic B-spline fit with K
+coefficients (scipy.splrep) -> store knots/coefficients + the sorted-index
+permutation (the Achilles heel the paper points out: index storage caps the
+ratio) + per-point corrections where the relative error bound is violated.
+"""
+from __future__ import annotations
+
+import struct
+from dataclasses import dataclass
+
+import numpy as np
+import zstandard as zstd
+from scipy.interpolate import splev, splrep
+
+_MAGIC = b"ISBL"
+
+
+@dataclass
+class IsabelaLikeCodec:
+    window: int = 512
+    num_coeff: int = 15
+    error_rate: float = 5.0  # relative error bound, percent (per point)
+
+    def _fit(self, sw: np.ndarray):
+        t = np.linspace(0, 1, len(sw))
+        # knots chosen so coefficient count ~= num_coeff
+        nk = max(self.num_coeff - 4, 1)
+        knots = np.linspace(0, 1, nk + 2)[1:-1]
+        tck = splrep(t, sw, t=knots, k=3)
+        return tck
+
+    def encode(self, x: np.ndarray) -> bytes:
+        x = np.ascontiguousarray(x, dtype=np.float64)
+        n = len(x)
+        out = bytearray(struct.pack("<4sIIId", _MAGIC, n, self.window,
+                                    self.num_coeff, self.error_rate))
+        idx_parts, coef_parts, corr_parts = [], [], []
+        n_windows = 0
+        for s in range(0, n, self.window):
+            w = x[s:s + self.window]
+            if len(w) < 8:  # tiny tail: store raw
+                corr_parts.append(np.concatenate([[len(w)], np.arange(len(w)), w]))
+                idx_parts.append(np.arange(len(w), dtype=np.int32))
+                coef_parts.append(np.zeros(0))
+                n_windows += 1
+                continue
+            order = np.argsort(w, kind="stable")
+            sw = w[order]
+            tck = self._fit(sw)
+            t = np.linspace(0, 1, len(sw))
+            approx = splev(t, tck)
+            scale = np.maximum(np.abs(sw), 1e-30)
+            bad = np.abs(approx - sw) / scale > self.error_rate / 100.0
+            corr_idx = np.nonzero(bad)[0]
+            corr_parts.append(np.concatenate(
+                [[len(corr_idx)], corr_idx.astype(np.float64), sw[corr_idx]]))
+            coef_parts.append(np.concatenate(
+                [[float(len(tck[0]))], tck[0], tck[1], [float(len(sw))]]))
+            idx_parts.append(order.astype(np.int32))
+            n_windows += 1
+        idx = np.concatenate(idx_parts) if idx_parts else np.zeros(0, np.int32)
+        coef = np.concatenate(coef_parts) if coef_parts else np.zeros(0)
+        corr = np.concatenate(corr_parts) if corr_parts else np.zeros(0)
+        cctx = zstd.ZstdCompressor(level=9)
+        bidx = cctx.compress(np.diff(idx, prepend=0).astype(np.int32).tobytes())
+        bcoef = cctx.compress(coef.tobytes())
+        bcorr = cctx.compress(corr.tobytes())
+        out += struct.pack("<IIII", n_windows, len(bidx), len(bcoef), len(bcorr))
+        out += bidx + bcoef + bcorr
+        return bytes(out)
+
+    def decode(self, blob: bytes) -> np.ndarray:
+        magic, n, window, num_coeff, err = struct.unpack_from("<4sIIId", blob, 0)
+        assert magic == _MAGIC
+        off = struct.calcsize("<4sIIId")
+        n_windows, li, lc, lr = struct.unpack_from("<IIII", blob, off)
+        off += struct.calcsize("<IIII")
+        dctx = zstd.ZstdDecompressor()
+        idx = np.cumsum(np.frombuffer(dctx.decompress(blob[off:off + li]),
+                                      dtype=np.int32)); off += li
+        coef = np.frombuffer(dctx.decompress(blob[off:off + lc]),
+                             dtype=np.float64); off += lc
+        corr = np.frombuffer(dctx.decompress(blob[off:off + lr]),
+                             dtype=np.float64); off += lr
+        out = np.zeros(n)
+        ip = cp = rp = 0
+        pos = 0
+        for _ in range(n_windows):
+            wlen = min(window, n - pos)
+            ncorr = int(corr[rp]); rp += 1
+            cidx = corr[rp:rp + ncorr].astype(np.int64); rp += ncorr
+            cval = corr[rp:rp + ncorr]; rp += ncorr
+            if wlen < 8:
+                w = np.zeros(wlen)
+                w[cidx] = cval
+                out[pos:pos + wlen] = w
+                ip += wlen
+                pos += wlen
+                continue
+            n_knots = int(coef[cp]); cp += 1
+            knots = coef[cp:cp + n_knots]; cp += n_knots
+            c = coef[cp:cp + n_knots]; cp += n_knots  # splrep pads c to len(t)
+            m = int(coef[cp]); cp += 1
+            t = np.linspace(0, 1, m)
+            sw = splev(t, (knots, c, 3))
+            sw[cidx] = cval
+            order = idx[ip:ip + m]; ip += m
+            w = np.zeros(m)
+            w[order] = sw
+            out[pos:pos + m] = w
+            pos += m
+        return out
+
+    @staticmethod
+    def compression_ratio(x: np.ndarray, blob: bytes) -> float:
+        return x.nbytes / len(blob)

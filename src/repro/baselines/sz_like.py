@@ -1,0 +1,101 @@
+"""SZ-like codec (simplified; Di & Cappello 2016 / Tao 2017 skeleton).
+
+Streaming multi-model prediction from *decoded* history (so decode is exact
+within the bound): preceding-neighbor, linear, and quadratic extrapolation.
+The best predictor's error is quantized into 2^q bins of width 2*bound; in-
+range codes are entropy-coded (zstd stand-in for Huffman); out-of-range
+values are stored raw ("unpredictable data").  Error bound is relative to
+the global value range, as in the paper's SZ configuration.
+"""
+from __future__ import annotations
+
+import struct
+from dataclasses import dataclass
+
+import numpy as np
+import zstandard as zstd
+
+_MAGIC = b"SZLK"
+
+
+@dataclass
+class SzLikeCodec:
+    rel_bound_ratio: float = 1e-3  # of global range
+    quant_bits: int = 12
+
+    def encode(self, x: np.ndarray) -> bytes:
+        x = np.ascontiguousarray(x, dtype=np.float64)
+        n = len(x)
+        rng = float(np.max(x) - np.min(x)) if n else 0.0
+        bound = max(self.rel_bound_ratio * rng, 1e-300)
+        half = 1 << (self.quant_bits - 1)
+        codes = np.zeros(n, dtype=np.int32)
+        raw_vals = []
+        d0 = d1 = d2 = 0.0  # rolling decoded history (floats: hot loop)
+        xl = x.tolist()
+        for i in range(n):
+            p0 = d2
+            p1 = 2.0 * d2 - d1
+            p2 = 3.0 * d2 - 3.0 * d1 + d0
+            if i < 3:
+                p1 = p1 if i >= 2 else p0
+                p2 = p0
+            xi = xl[i]
+            e0, e1, e2 = xi - p0, xi - p1, xi - p2
+            a0, a1, a2 = abs(e0), abs(e1), abs(e2)
+            if a0 <= a1 and a0 <= a2:
+                best, err, pred = 0, e0, p0
+            elif a1 <= a2:
+                best, err, pred = 1, e1, p1
+            else:
+                best, err, pred = 2, e2, p2
+            q = int(round(err / (2 * bound)))
+            if -half + 1 <= q <= half - 1 and i > 0:
+                codes[i] = (best << self.quant_bits) | (q + half)
+                val = pred + q * 2 * bound
+            else:
+                codes[i] = 0  # escape
+                raw_vals.append(xi)
+                val = xi
+            d0, d1, d2 = d1, d2, val
+        cctx = zstd.ZstdCompressor(level=9)
+        bcodes = cctx.compress(codes.astype(np.int32).tobytes())
+        braw = cctx.compress(np.asarray(raw_vals).tobytes())
+        hdr = struct.pack("<4sIddII", _MAGIC, n, bound, rng, len(bcodes), len(braw))
+        return hdr + bcodes + braw
+
+    def decode(self, blob: bytes) -> np.ndarray:
+        magic, n, bound, _rng, lc, lr = struct.unpack_from("<4sIddII", blob, 0)
+        assert magic == _MAGIC
+        off = struct.calcsize("<4sIddII")
+        dctx = zstd.ZstdDecompressor()
+        codes = np.frombuffer(dctx.decompress(blob[off:off + lc]), dtype=np.int32)
+        off += lc
+        raw = np.frombuffer(dctx.decompress(blob[off:off + lr]), dtype=np.float64)
+        half = 1 << (self.quant_bits - 1)
+        out = np.zeros(n)
+        d0 = d1 = d2 = 0.0
+        rp = 0
+        cl = codes.tolist()
+        rl = raw.tolist()
+        for i in range(n):
+            c = cl[i]
+            if c == 0:
+                val = rl[rp]; rp += 1
+            else:
+                best = c >> self.quant_bits
+                q = (c & ((1 << self.quant_bits) - 1)) - half
+                p0 = d2
+                p1 = 2.0 * d2 - d1
+                p2 = 3.0 * d2 - 3.0 * d1 + d0
+                if i < 3:
+                    p1 = p1 if i >= 2 else p0
+                    p2 = p0
+                val = (p0, p1, p2)[best] + q * 2 * bound
+            out[i] = val
+            d0, d1, d2 = d1, d2, val
+        return out
+
+    @staticmethod
+    def compression_ratio(x: np.ndarray, blob: bytes) -> float:
+        return x.nbytes / len(blob)

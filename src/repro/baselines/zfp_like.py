@@ -1,0 +1,62 @@
+"""ZFP-like 1-D fixed-accuracy codec (simplified; Lindstrom 2014 skeleton).
+
+Pipeline per 4-sample block: ZFP's orthogonal-ish decorrelating transform
+(the documented 1-D matrix) -> uniform quantization to the user tolerance
+(DC coefficient delta-coded across blocks) -> zstd entropy stage (stand-in
+for ZFP's embedded bit-plane group coding).  Euclidean-error-bounded, like
+the real ZFP and unlike IDEALEM.
+"""
+from __future__ import annotations
+
+import struct
+from dataclasses import dataclass
+
+import numpy as np
+import zstandard as zstd
+
+_MAGIC = b"ZFPL"
+
+# ZFP's 1-D decorrelating transform (forward), rows = output coefficients.
+_M = np.array(
+    [
+        [4, 4, 4, 4],
+        [5, 1, -1, -5],
+        [-4, 4, 4, -4],
+        [-2, 6, -6, 2],
+    ],
+    dtype=np.float64,
+) / 16.0
+_MINV = np.linalg.inv(_M)
+
+
+@dataclass
+class ZfpLikeCodec:
+    tolerance: float = 1e-3
+
+    def encode(self, x: np.ndarray) -> bytes:
+        x = np.ascontiguousarray(x, dtype=np.float64)
+        n = len(x)
+        if n == 0:
+            comp = zstd.ZstdCompressor(level=9).compress(b"")
+            return struct.pack("<4sIId", _MAGIC, 0, len(comp), self.tolerance) + comp
+        pad = (-n) % 4
+        xp = np.pad(x, (0, pad), mode="edge") if pad else x
+        coeff = xp.reshape(-1, 4) @ _M.T
+        q = np.round(coeff / self.tolerance).astype(np.int64)
+        q[:, 0] = np.concatenate([[q[0, 0]], np.diff(q[:, 0])])
+        comp = zstd.ZstdCompressor(level=9).compress(q.tobytes())
+        return struct.pack("<4sIId", _MAGIC, n, len(comp), self.tolerance) + comp
+
+    def decode(self, blob: bytes) -> np.ndarray:
+        magic, n, clen, tol = struct.unpack_from("<4sIId", blob, 0)
+        assert magic == _MAGIC
+        off = struct.calcsize("<4sIId")
+        raw = zstd.ZstdDecompressor().decompress(blob[off:off + clen])
+        q = np.frombuffer(raw, dtype=np.int64).reshape(-1, 4).copy()
+        q[:, 0] = np.cumsum(q[:, 0])
+        blocks = (q * tol) @ _MINV.T
+        return blocks.reshape(-1)[:n]
+
+    @staticmethod
+    def compression_ratio(x: np.ndarray, blob: bytes) -> float:
+        return x.nbytes / len(blob)

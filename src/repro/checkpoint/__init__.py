@@ -1,0 +1,3 @@
+from .ckpt import save, restore, latest_step, async_save
+
+__all__ = ["save", "restore", "latest_step", "async_save"]

@@ -1,0 +1,117 @@
+"""Checkpointing: manifest + per-leaf arrays, atomic rename, async save,
+optional IDEALEM or zstd payload compression.
+
+Layout:  <dir>/step_<N>.tmp/ -> (atomic rename) -> <dir>/step_<N>/
+           manifest.json      tree structure, shapes, dtypes, codec
+           leaf_<i>.bin       raw | zstd | idealem-compressed payload
+
+A half-written checkpoint can never be picked up by ``latest_step`` because
+the rename is the commit point -- the crash-consistency contract the fault-
+tolerance driver (repro.runtime) relies on.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+import zstandard as zstd
+
+from repro.core import IdealemCodec
+
+_CODEC_NONE, _CODEC_ZSTD, _CODEC_IDEALEM = "none", "zstd", "idealem"
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return [np.asarray(x) for x in leaves], treedef
+
+
+def _encode_leaf(arr: np.ndarray, codec: str) -> Tuple[bytes, str]:
+    raw = arr.tobytes()
+    if codec == _CODEC_ZSTD:
+        return zstd.ZstdCompressor(level=3).compress(raw), _CODEC_ZSTD
+    if codec == _CODEC_IDEALEM and arr.dtype in (np.float32, np.float64) \
+            and arr.size >= 4096:
+        c = IdealemCodec(mode="std", block_size=64, num_dict=255, alpha=0.05,
+                         rel_tol=0.3, backend="numpy")
+        blob = c.encode(arr.reshape(-1).astype(np.float64))
+        if len(blob) < len(raw):
+            return blob, _CODEC_IDEALEM
+        return zstd.ZstdCompressor(level=3).compress(raw), _CODEC_ZSTD
+    return raw, _CODEC_NONE
+
+
+def _decode_leaf(data: bytes, codec: str, shape, dtype) -> np.ndarray:
+    if codec == _CODEC_ZSTD:
+        data = zstd.ZstdDecompressor().decompress(data)
+        return np.frombuffer(data, dtype=dtype).reshape(shape).copy()
+    if codec == _CODEC_IDEALEM:
+        c = IdealemCodec(mode="std", block_size=64, num_dict=255, alpha=0.05,
+                         rel_tol=0.3, backend="numpy")
+        flat = c.decode(data).astype(dtype)
+        return flat.reshape(shape)
+    return np.frombuffer(data, dtype=dtype).reshape(shape).copy()
+
+
+def save(path: str, step: int, tree: Any, codec: str = _CODEC_NONE) -> str:
+    """Write checkpoint atomically; returns the final directory."""
+    final = os.path.join(path, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    leaves, treedef = _flatten(tree)
+    manifest = {"step": step, "treedef": str(treedef), "leaves": []}
+    for i, arr in enumerate(leaves):
+        blob, used = _encode_leaf(arr, codec)
+        with open(os.path.join(tmp, f"leaf_{i}.bin"), "wb") as f:
+            f.write(blob)
+        manifest["leaves"].append(
+            {"shape": list(arr.shape), "dtype": str(arr.dtype), "codec": used})
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)  # commit point
+    return final
+
+
+def async_save(path: str, step: int, tree: Any,
+               codec: str = _CODEC_NONE) -> threading.Thread:
+    """Snapshot to host memory synchronously, write in a background thread."""
+    leaves, treedef = _flatten(tree)  # device->host copy happens here
+    snapshot = jax.tree.unflatten(treedef, leaves)
+    t = threading.Thread(target=save, args=(path, step, snapshot, codec))
+    t.start()
+    return t
+
+
+def latest_step(path: str) -> Optional[int]:
+    if not os.path.isdir(path):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(path)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore(path: str, step: int, like: Any) -> Any:
+    """Restore into the structure of `like` (shapes/dtypes validated)."""
+    d = os.path.join(path, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    like_leaves, treedef = jax.tree.flatten(like)
+    assert len(like_leaves) == len(manifest["leaves"]), "tree structure mismatch"
+    out = []
+    for i, (ref, meta) in enumerate(zip(like_leaves, manifest["leaves"])):
+        with open(os.path.join(d, f"leaf_{i}.bin"), "rb") as f:
+            data = f.read()
+        arr = _decode_leaf(data, meta["codec"], meta["shape"], meta["dtype"])
+        assert tuple(arr.shape) == tuple(np.shape(ref)), \
+            f"leaf {i}: {arr.shape} vs {np.shape(ref)}"
+        out.append(arr)
+    return jax.tree.unflatten(treedef, out)

@@ -1,0 +1,81 @@
+"""Architecture registry: the 10 assigned archs (+ the paper's own config).
+
+Each module defines ``FULL`` (the exact published config) and ``SMOKE``
+(a reduced same-family config for CPU tests).  Shapes are defined here too:
+every LM arch pairs with train_4k / prefill_32k / decode_32k / long_500k.
+"""
+from __future__ import annotations
+
+import importlib
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+ARCHS = [
+    "granite_moe_1b_a400m",
+    "mixtral_8x22b",
+    "granite_3_8b",
+    "gemma3_27b",
+    "stablelm_12b",
+    "glm4_9b",
+    "zamba2_1_2b",
+    "rwkv6_3b",
+    "llama_3_2_vision_90b",
+    "whisper_tiny",
+]
+
+# canonical ids as assigned (dash form) -> module name
+ALIASES = {a.replace("_", "-"): a for a in ARCHS}
+ALIASES.update({
+    "granite-moe-1b-a400m": "granite_moe_1b_a400m",
+    "mixtral-8x22b": "mixtral_8x22b",
+    "granite-3-8b": "granite_3_8b",
+    "gemma3-27b": "gemma3_27b",
+    "stablelm-12b": "stablelm_12b",
+    "glm4-9b": "glm4_9b",
+    "zamba2-1.2b": "zamba2_1_2b",
+    "rwkv6-3b": "rwkv6_3b",
+    "llama-3.2-vision-90b": "llama_3_2_vision_90b",
+    "whisper-tiny": "whisper_tiny",
+})
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+# archs with sub-quadratic context handling run long_500k; pure full-attention
+# archs skip it (DESIGN.md Sec. 5)
+LONG_CONTEXT_OK = {
+    "mixtral_8x22b",      # SWA
+    "gemma3_27b",         # 5:1 local:global
+    "zamba2_1_2b",        # hybrid SSM (+ windowed shared attn)
+    "rwkv6_3b",           # attention-free
+}
+
+
+def get_config(arch: str, smoke: bool = False):
+    mod_name = ALIASES.get(arch, arch).replace("-", "_").replace(".", "_")
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.SMOKE if smoke else mod.FULL
+
+
+def cells(arch: Optional[str] = None) -> Tuple[Tuple[str, str], ...]:
+    """All (arch, shape) dry-run cells, honoring the long_500k skip list."""
+    out = []
+    for a in ([ALIASES.get(arch, arch)] if arch else ARCHS):
+        for s in SHAPES:
+            if s == "long_500k" and a not in LONG_CONTEXT_OK:
+                continue
+            out.append((a, s))
+    return tuple(out)

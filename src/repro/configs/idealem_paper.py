@@ -1,0 +1,21 @@
+"""The paper's own experiment configuration (Table I): IDEALEM parameters
+for uPMU magnitude (standard mode) and phase angle (residual/delta mode)."""
+from repro.core import IdealemCodec
+
+# MAG channels: standard mode, B=32, D=255, alpha=0.01 (Sec. VII-A)
+MAG = dict(mode="std", block_size=32, num_dict=255, alpha=0.01, rel_tol=0.5)
+
+# ANG channels: residual mode, B=112, D=255, alpha=0.01, range [0, 360)
+ANG_RESIDUAL = dict(mode="residual", block_size=112, num_dict=255, alpha=0.01,
+                    rel_tol=0.5, value_range=(0.0, 360.0))
+ANG_DELTA = dict(mode="delta", block_size=112, num_dict=255, alpha=0.01,
+                 rel_tol=0.5, value_range=(0.0, 360.0))
+
+
+def mag_codec(**kw) -> IdealemCodec:
+    return IdealemCodec(**{**MAG, **kw})
+
+
+def ang_codec(delta: bool = False, **kw) -> IdealemCodec:
+    base = ANG_DELTA if delta else ANG_RESIDUAL
+    return IdealemCodec(**{**base, **kw})

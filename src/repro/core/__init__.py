@@ -1,0 +1,25 @@
+"""IDEALEM core: statistical-similarity data reduction (the paper's contribution).
+
+Public API:
+  IdealemCodec           -- end-to-end encode/decode with the paper's stream format
+  encode_decisions       -- jit/vmap-able device-side encoder (lax.scan)
+  ks_statistic, ks_pvalue, critical_distance
+  residual/delta transforms, quality measures
+"""
+from .idealem import IdealemCodec
+from .ks import critical_distance, ks_pvalue, ks_statistic, ks_statistic_many
+from .encoder import encode_decisions, encode_decisions_batched
+from .metrics import quality_measures, amplitude_spectrum, spectral_band_error
+
+__all__ = [
+    "IdealemCodec",
+    "critical_distance",
+    "ks_pvalue",
+    "ks_statistic",
+    "ks_statistic_many",
+    "encode_decisions",
+    "encode_decisions_batched",
+    "quality_measures",
+    "amplitude_spectrum",
+    "spectral_band_error",
+]

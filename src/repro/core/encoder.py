@@ -1,0 +1,139 @@
+"""The IDEALEM encoder as a jit-compiled ``lax.scan`` (DESIGN.md Sec. 2).
+
+The reference C encoder walks the dictionary and early-exits at the first
+KS pass.  On TPU we compute the min/max gate (eq. 3) and the KS distance
+against *all* D entries as dense masked work and select the lowest-index
+passing entry -- decision-identical to the early-exit scan, but fully
+vectorized (VPU) and batchable over channels with ``vmap``.
+
+Per-block outputs are fixed-shape decisions (is_hit, slot, overwrite); the
+variable-length byte stream is assembled host-side by ``repro.core.stream``
+from these decisions plus the raw blocks.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .ks import ks_statistic_many
+
+__all__ = ["DictState", "EncoderParams", "init_state", "encode_decisions"]
+
+
+class DictState(NamedTuple):
+    """Carry state of the encoder scan: the FIFO dictionary buffer."""
+
+    sorted_blocks: jax.Array  # (D, n) sorted source-distribution samples
+    dmin: jax.Array  # (D,)
+    dmax: jax.Array  # (D,)
+    valid: jax.Array  # (D,) bool
+    count: jax.Array  # () int32, number of inserts so far (FIFO position)
+
+
+class EncoderParams(NamedTuple):
+    d_crit: float  # critical KS distance (from alpha via ks.critical_distance)
+    rel_tol: float  # relative tolerance r for the min/max check (eq. 3)
+    use_minmax: bool  # paper's new gate; False = "KS test only" mode
+    use_ks: bool = True  # False = min/max check alone (ablation)
+
+
+def init_state(num_dict: int, n: int, dtype=jnp.float32) -> DictState:
+    return DictState(
+        sorted_blocks=jnp.zeros((num_dict, n), dtype=dtype),
+        dmin=jnp.zeros((num_dict,), dtype=dtype),
+        dmax=jnp.zeros((num_dict,), dtype=dtype),
+        valid=jnp.zeros((num_dict,), dtype=bool),
+        count=jnp.zeros((), dtype=jnp.int32),
+    )
+
+
+def _minmax_gate(xmin, xmax, dmin, dmax, r):
+    """Eq. (3): both block extremes inside +-w*r of the stored extremes."""
+    w = dmax - dmin
+    t = w * r
+    return (
+        (xmin >= dmin - t)
+        & (xmin <= dmin + t)
+        & (xmax >= dmax - t)
+        & (xmax <= dmax + t)
+    )
+
+
+def _step(matcher, params: EncoderParams, state: DictState, block: jax.Array):
+    num_dict = state.sorted_blocks.shape[0]
+    xs = jnp.sort(block)
+    xmin, xmax = xs[0], xs[-1]
+
+    if params.use_minmax:
+        mm = _minmax_gate(xmin, xmax, state.dmin, state.dmax, params.rel_tol)
+    else:
+        mm = jnp.ones((num_dict,), dtype=bool)
+
+    if params.use_ks:
+        ks = matcher(xs, state.sorted_blocks)  # (D,)
+        ks_ok = ks <= params.d_crit
+    else:
+        ks_ok = jnp.ones((num_dict,), dtype=bool)
+
+    ok = state.valid & mm & ks_ok
+    is_hit = jnp.any(ok)
+    first_hit = jnp.argmax(ok)  # lowest passing slot == early-exit result
+
+    # FIFO insert slot on miss: fill 0..D-1, then overwrite oldest.
+    ins_slot = jnp.mod(state.count, num_dict)
+    overwrite = (~is_hit) & (state.count >= num_dict)
+    slot = jnp.where(is_hit, first_hit, ins_slot).astype(jnp.int32)
+
+    do_ins = ~is_hit
+    new_sorted = jax.lax.dynamic_update_slice(
+        state.sorted_blocks, xs[None, :], (ins_slot, 0)
+    )
+    upd = jnp.arange(num_dict) == ins_slot
+    new_state = DictState(
+        sorted_blocks=jnp.where(do_ins, new_sorted, state.sorted_blocks),
+        dmin=jnp.where(do_ins & upd, xmin, state.dmin),
+        dmax=jnp.where(do_ins & upd, xmax, state.dmax),
+        valid=jnp.where(do_ins & upd, True, state.valid),
+        count=state.count + do_ins.astype(jnp.int32),
+    )
+    return new_state, (is_hit, slot, overwrite)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_dict", "d_crit", "rel_tol", "use_minmax", "use_ks", "matcher")
+)
+def encode_decisions(
+    blocks: jax.Array,
+    *,
+    num_dict: int,
+    d_crit: float,
+    rel_tol: float = 0.1,
+    use_minmax: bool = True,
+    use_ks: bool = True,
+    matcher: Optional[Callable] = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Encode a (nb, n) stack of (already transformed) blocks.
+
+    Returns (is_hit (nb,), slot (nb,), overwrite (nb,)).
+    ``matcher(xs_sorted, dict_sorted) -> (D,)`` defaults to the pure-jnp KS
+    oracle; pass ``repro.kernels.ops.dict_match_ks`` for the Pallas kernel.
+    Batch over channels with ``jax.vmap`` on the leading axis.
+    """
+    if matcher is None:
+        matcher = ks_statistic_many
+    params = EncoderParams(
+        d_crit=d_crit, rel_tol=rel_tol, use_minmax=use_minmax, use_ks=use_ks
+    )
+    state0 = init_state(num_dict, blocks.shape[-1], dtype=blocks.dtype)
+    step = functools.partial(_step, matcher, params)
+    _, (is_hit, slot, overwrite) = jax.lax.scan(step, state0, blocks)
+    return is_hit, slot, overwrite
+
+
+def encode_decisions_batched(blocks_cn, **kw):
+    """vmap over a leading channel axis: blocks (C, nb, n)."""
+    fn = functools.partial(encode_decisions, **kw)
+    return jax.vmap(fn)(blocks_cn)

@@ -1,0 +1,136 @@
+"""User-facing IDEALEM codec: orchestrates transform -> decisions -> stream.
+
+>>> codec = IdealemCodec(mode="std", block_size=32, num_dict=255, alpha=0.01)
+>>> blob = codec.encode(x)            # x: 1-D numpy float array
+>>> y = codec.decode(blob)            # same length, statistically similar
+>>> codec.compression_ratio(x, blob)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import numpy as np
+
+from . import stream as stream_mod
+from .ks import critical_distance
+from .stream import MODE_DELTA, MODE_RESIDUAL, MODE_STD, StreamHeader
+from .transforms import np_wrap_centered
+
+_MODES = {"std": MODE_STD, "residual": MODE_RESIDUAL, "delta": MODE_DELTA}
+
+
+@dataclass
+class IdealemCodec:
+    mode: str = "std"
+    block_size: int = 32
+    num_dict: int = 255
+    alpha: float = 0.01
+    rel_tol: float = 0.1
+    use_minmax: bool = True
+    use_ks: bool = True
+    max_count: int = 255
+    value_range: Optional[Tuple[float, float]] = None
+    backend: str = "jax"  # "jax" | "numpy" | "pallas"
+    decode_seed: int = 0
+    d_crit: float = field(init=False)
+
+    def __post_init__(self):
+        if self.mode not in _MODES:
+            raise ValueError(f"mode must be one of {list(_MODES)}")
+        if not (1 <= self.num_dict <= 255):
+            raise ValueError("num_dict must be in [1, 255]")
+        if not (1 <= self.max_count <= 255):
+            raise ValueError("max_count must be in [1, 255]")
+        if self.block_size < 2:
+            raise ValueError("block_size must be >= 2")
+        n = self._lem_n()
+        self.d_crit = critical_distance(self.alpha, n, n)
+
+    # ------------------------------------------------------------- internals
+    def _lem_n(self) -> int:
+        return self.block_size if self.mode == "std" else self.block_size - 1
+
+    def _split(self, x: np.ndarray):
+        nb = len(x) // self.block_size
+        blocks = x[: nb * self.block_size].reshape(nb, self.block_size)
+        tail = x[nb * self.block_size:]
+        return blocks, tail
+
+    def _transform(self, blocks: np.ndarray):
+        """Returns (payload for LEM+stream, bases or None). Host-side f64."""
+        if self.mode == "std":
+            return blocks, None
+        bases = blocks[:, 0].copy()
+        if self.mode == "residual":
+            t = blocks[:, 1:] - bases[:, None]
+        else:
+            t = np.diff(blocks, axis=1)
+        if self.value_range is not None:
+            t = np_wrap_centered(t, *self.value_range)
+        return t, bases
+
+    def _decide(self, payload: np.ndarray):
+        kw = dict(
+            num_dict=self.num_dict,
+            d_crit=float(self.d_crit),
+            rel_tol=float(self.rel_tol),
+            use_minmax=self.use_minmax,
+            use_ks=self.use_ks,
+        )
+        if self.backend == "numpy":
+            from .npref import encode_decisions_np
+            return encode_decisions_np(payload, **kw)
+        from .encoder import encode_decisions
+        import jax.numpy as jnp
+        matcher = None
+        if self.backend == "pallas":
+            from repro.kernels.ops import dict_match_ks
+            matcher = dict_match_ks
+        out = encode_decisions(jnp.asarray(payload, dtype=jnp.float32),
+                               matcher=matcher, **kw)
+        return tuple(np.asarray(o) for o in out)
+
+    # ------------------------------------------------------------ public API
+    def encode(self, x: np.ndarray) -> bytes:
+        x = np.ascontiguousarray(x)
+        if x.ndim != 1:
+            raise ValueError("IDEALEM compresses 1-D arrays (vmap for batches)")
+        blocks, tail = self._split(x)
+        payload, bases = self._transform(blocks)
+        if len(blocks):
+            is_hit, slot, overwrite = self._decide(payload)
+        else:
+            is_hit = slot = overwrite = np.zeros((0,), dtype=np.int32)
+        header = StreamHeader(
+            mode=_MODES[self.mode],
+            block_size=self.block_size,
+            num_dict=self.num_dict,
+            max_count=self.max_count,
+            dtype=x.dtype,
+            value_range=self.value_range,
+            n_blocks=len(blocks),
+            tail=tail,
+        )
+        return stream_mod.assemble_stream(
+            header, blocks, payload, bases, is_hit, slot, overwrite
+        )
+
+    def decode(self, blob: bytes) -> np.ndarray:
+        return stream_mod.decode_stream(blob, seed=self.decode_seed)
+
+    @staticmethod
+    def compression_ratio(x: np.ndarray, blob: bytes) -> float:
+        return x.nbytes / len(blob)
+
+    def encode_stats(self, x: np.ndarray) -> dict:
+        blob = self.encode(x)
+        _, events = stream_mod.parse_stream(blob)
+        hits = sum(1 for e in events if e["kind"] == "hit")
+        return {
+            "ratio": self.compression_ratio(x, blob),
+            "bytes": len(blob),
+            "blocks": len(events),
+            "hits": hits,
+            "hit_rate": hits / max(len(events), 1),
+        }

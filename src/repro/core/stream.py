@@ -1,0 +1,250 @@
+"""Byte-exact IDEALEM stream format (paper Sec. V, Figs. 8-11).
+
+The device-side encoder (``repro.core.encoder``) emits fixed-shape per-block
+decisions; this module assembles/parses the variable-length byte stream on the
+host, preserving the paper's layout:
+
+  std mode, D>=2 (Fig. 8):   miss: [idx u8][raw block 8B]   hit: [idx u8]
+                             FIFO overwrite prefixes 0xFF (so D <= 255).
+  std mode, D==1 (Fig. 9):   [raw block][hit-count bytes ...] repeated; a
+                             count byte equal to max_count c means another
+                             count byte follows (footnotes 7-8).
+  res/delta, D>=2 (Fig.10):  miss: [idx][base f64][transformed (B-1)*8]
+                             hit:  [idx][base f64]
+  res/delta, D==1 (Fig.11):  [base][transformed]([count e][e bases])...
+
+Misses are written verbatim (decoder reproduces them exactly); hits are
+reconstructed by random permutation of the stored block (std mode) or by
+re-anchoring the stored transformed values on the hit's base value
+(res/delta mode; no permutation -- paper Sec. V-B2).
+
+A 40-byte header + raw tail (samples not filling a block) precedes the body.
+"""
+from __future__ import annotations
+
+import struct
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import numpy as np
+
+from .transforms import np_wrap_range
+
+__all__ = ["StreamHeader", "assemble_stream", "parse_stream", "decode_stream"]
+
+MAGIC = b"IDLM"
+VERSION = 2
+MODE_STD, MODE_RESIDUAL, MODE_DELTA = 0, 1, 2
+_HDR = struct.Struct("<4sBBHBBBBddIH")  # 40 bytes
+
+
+@dataclass
+class StreamHeader:
+    mode: int
+    block_size: int
+    num_dict: int
+    max_count: int
+    dtype: np.dtype
+    value_range: Optional[Tuple[float, float]]
+    n_blocks: int
+    tail: np.ndarray
+
+    @property
+    def itemsize(self) -> int:
+        return int(np.dtype(self.dtype).itemsize)
+
+
+def _pack_header(h: StreamHeader) -> bytes:
+    flags = 0
+    rmin = rmax = 0.0
+    if h.value_range is not None:
+        flags |= 1
+        rmin, rmax = float(h.value_range[0]), float(h.value_range[1])
+    if np.dtype(h.dtype) == np.float32:
+        flags |= 2
+    elif np.dtype(h.dtype) != np.float64:
+        raise ValueError(f"unsupported dtype {h.dtype}")
+    buf = _HDR.pack(
+        MAGIC, VERSION, h.mode, h.block_size, h.num_dict, h.max_count,
+        flags, 0, rmin, rmax, h.n_blocks, len(h.tail),
+    )
+    return buf + np.asarray(h.tail, dtype=h.dtype).tobytes()
+
+
+def _unpack_header(buf: memoryview) -> Tuple[StreamHeader, int]:
+    (magic, ver, mode, bsz, ndict, maxc, flags, _rsv, rmin, rmax,
+     n_blocks, tail_len) = _HDR.unpack_from(buf, 0)
+    if magic != MAGIC or ver != VERSION:
+        raise ValueError("bad IDEALEM stream header")
+    dtype = np.float32 if (flags & 2) else np.float64
+    off = _HDR.size
+    tail = np.frombuffer(buf, dtype=dtype, count=tail_len, offset=off).copy()
+    off += tail_len * np.dtype(dtype).itemsize
+    rng = (rmin, rmax) if (flags & 1) else None
+    return (
+        StreamHeader(mode, bsz, ndict, maxc, np.dtype(dtype), rng, n_blocks, tail),
+        off,
+    )
+
+
+def _emit_counts(out: bytearray, k: int, c: int) -> None:
+    """Hit-count run-length bytes: byte==c signals continuation."""
+    while True:
+        e = min(k, c)
+        out.append(e)
+        k -= e
+        if e < c:
+            break
+
+
+def assemble_stream(
+    header: StreamHeader,
+    raw_blocks: np.ndarray,      # (nb, B) original values
+    payload_blocks: np.ndarray,  # (nb, B) std mode / (nb, B-1) res-delta
+    bases: Optional[np.ndarray],  # (nb,) res/delta mode only
+    is_hit: np.ndarray,
+    slot: np.ndarray,
+    overwrite: np.ndarray,
+) -> bytes:
+    """Serialize encoder decisions into the paper's byte format."""
+    mode, ndict, c = header.mode, header.num_dict, header.max_count
+    dt = np.dtype(header.dtype)
+    out = bytearray(_pack_header(header))
+    nb = len(raw_blocks)
+    assert header.n_blocks == nb
+
+    if ndict >= 2:
+        for i in range(nb):
+            if is_hit[i]:
+                out.append(int(slot[i]))
+                if mode != MODE_STD:
+                    out += np.asarray(bases[i], dtype=dt).tobytes()
+            else:
+                if overwrite[i]:
+                    out.append(0xFF)
+                out.append(int(slot[i]))
+                if mode == MODE_STD:
+                    out += np.ascontiguousarray(raw_blocks[i], dtype=dt).tobytes()
+                else:
+                    out += np.asarray(bases[i], dtype=dt).tobytes()
+                    out += np.ascontiguousarray(payload_blocks[i], dtype=dt).tobytes()
+    else:  # single dictionary block: hit-count structure
+        i = 0
+        while i < nb:
+            assert not is_hit[i], "first block of a run must be a miss"
+            if mode == MODE_STD:
+                out += np.ascontiguousarray(raw_blocks[i], dtype=dt).tobytes()
+            else:
+                out += np.asarray(bases[i], dtype=dt).tobytes()
+                out += np.ascontiguousarray(payload_blocks[i], dtype=dt).tobytes()
+            j = i + 1
+            hit_bases = []
+            while j < nb and is_hit[j]:
+                if mode != MODE_STD:
+                    hit_bases.append(bases[j])
+                j += 1
+            k = j - i - 1
+            if mode == MODE_STD:
+                _emit_counts(out, k, c)
+            else:
+                # interleave counts with their base values (Fig. 11)
+                done = 0
+                while True:
+                    e = min(k - done, c)
+                    out.append(e)
+                    for b in hit_bases[done:done + e]:
+                        out += np.asarray(b, dtype=dt).tobytes()
+                    done += e
+                    if e < c:
+                        break
+            i = j
+    return bytes(out)
+
+
+def parse_stream(data: bytes):
+    """Parse a stream into (header, events); each event is a dict with
+    kind in {'miss','hit'} plus per-kind payload."""
+    buf = memoryview(data)
+    header, off = _unpack_header(buf)
+    dt = np.dtype(header.dtype)
+    isz = dt.itemsize
+    bsz = header.block_size
+    n_payload = bsz if header.mode == MODE_STD else bsz - 1
+    events = []
+
+    def read_vals(n):
+        nonlocal off
+        v = np.frombuffer(buf, dtype=dt, count=n, offset=off).copy()
+        off += n * isz
+        return v
+
+    if header.num_dict >= 2:
+        fill = 0
+        while len(events) < header.n_blocks:
+            b = buf[off]; off += 1
+            ovw = False
+            if b == 0xFF:
+                ovw = True
+                b = buf[off]; off += 1
+            s = int(b)
+            if ovw or (s == fill and fill < header.num_dict):
+                ev = {"kind": "miss", "slot": s, "overwrite": ovw}
+                if header.mode != MODE_STD:
+                    ev["base"] = float(read_vals(1)[0])
+                ev["payload"] = read_vals(n_payload)
+                if not ovw:
+                    fill += 1
+                events.append(ev)
+            else:
+                ev = {"kind": "hit", "slot": s}
+                if header.mode != MODE_STD:
+                    ev["base"] = float(read_vals(1)[0])
+                events.append(ev)
+    else:
+        c = header.max_count
+        while len(events) < header.n_blocks:
+            ev = {"kind": "miss", "slot": 0, "overwrite": False}
+            if header.mode != MODE_STD:
+                ev["base"] = float(read_vals(1)[0])
+            ev["payload"] = read_vals(n_payload)
+            events.append(ev)
+            while True:
+                e = buf[off]; off += 1
+                for _ in range(e):
+                    hev = {"kind": "hit", "slot": 0}
+                    if header.mode != MODE_STD:
+                        hev["base"] = float(read_vals(1)[0])
+                    events.append(hev)
+                if e < c:
+                    break
+    return header, events
+
+
+def decode_stream(data: bytes, seed: int = 0) -> np.ndarray:
+    """Full decoder: parse + reconstruct (paper Sec. V-A2 / V-B2)."""
+    header, events = parse_stream(data)
+    rng = np.random.default_rng(seed)
+    dictionary = {}
+    out = []
+    for ev in events:
+        if ev["kind"] == "miss":
+            dictionary[ev["slot"]] = ev["payload"]
+            payload = ev["payload"]
+        else:
+            payload = dictionary[ev["slot"]]
+        if header.mode == MODE_STD:
+            if ev["kind"] == "miss":
+                out.append(payload)  # initiating sequence kept verbatim
+            else:
+                out.append(rng.permutation(payload))  # without replacement
+        else:
+            base = ev["base"]
+            if header.mode == MODE_RESIDUAL:
+                vals = np.concatenate([[base], base + payload])
+            else:  # delta
+                vals = np.concatenate([[base], base + np.cumsum(payload)])
+            if header.value_range is not None:
+                vals = np_wrap_range(vals, *header.value_range)
+            out.append(vals)
+    out.append(header.tail)
+    return np.concatenate(out) if out else np.zeros((0,), dtype=header.dtype)

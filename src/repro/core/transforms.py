@@ -1,0 +1,91 @@
+"""Residual and delta transforms for non-stationary data (paper Sec. IV-A).
+
+Each block b_j = (x_{jB}, ..., x_{jB+B-1}) keeps its first sample as the
+*base value*; the LEM processing then runs on the B-1 transformed values:
+
+  residual:  x^r_{jB+k} = x_{jB+k} - x_{jB}          (eq. 4)
+  delta:     x^d_{jB+k} = x_{jB+k} - x_{jB+k-1}      (eq. 6)
+
+Bounded ranges (e.g. phase angles in [0, 360)): transformed values are wrapped
+into [-(rmax-rmin)/2, +(rmax-rmin)/2) and reconstructed values into
+[rmin, rmax) (paper Sec. IV-A, the 359deg -> 1deg = +2 example).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "wrap_centered",
+    "wrap_range",
+    "residual_forward",
+    "residual_inverse",
+    "delta_forward",
+    "delta_inverse",
+]
+
+
+def wrap_centered(v, rmin: float, rmax: float):
+    """Wrap transformed values into [-(rmax-rmin)/2, +(rmax-rmin)/2)."""
+    w = rmax - rmin
+    return jnp.mod(v + 0.5 * w, w) - 0.5 * w
+
+
+def wrap_range(v, rmin: float, rmax: float):
+    """Wrap reconstructed values into [rmin, rmax)."""
+    w = rmax - rmin
+    return jnp.mod(v - rmin, w) + rmin
+
+
+def residual_forward(blocks, value_range: Optional[Tuple[float, float]] = None):
+    """blocks (..., B) -> (bases (...,), residuals (..., B-1))."""
+    blocks = jnp.asarray(blocks)
+    base = blocks[..., 0]
+    res = blocks[..., 1:] - base[..., None]
+    if value_range is not None:
+        res = wrap_centered(res, *value_range)
+    return base, res
+
+
+def residual_inverse(base, res, value_range: Optional[Tuple[float, float]] = None):
+    """(bases (...,), residuals (..., B-1)) -> blocks (..., B)."""
+    vals = jnp.concatenate(
+        [jnp.asarray(base)[..., None], jnp.asarray(base)[..., None] + res], axis=-1
+    )
+    if value_range is not None:
+        vals = wrap_range(vals, *value_range)
+    return vals
+
+
+def delta_forward(blocks, value_range: Optional[Tuple[float, float]] = None):
+    """blocks (..., B) -> (bases (...,), deltas (..., B-1))."""
+    blocks = jnp.asarray(blocks)
+    base = blocks[..., 0]
+    d = blocks[..., 1:] - blocks[..., :-1]
+    if value_range is not None:
+        d = wrap_centered(d, *value_range)
+    return base, d
+
+
+def delta_inverse(base, deltas, value_range: Optional[Tuple[float, float]] = None):
+    """(bases (...,), deltas (..., B-1)) -> blocks (..., B) via cumsum."""
+    base = jnp.asarray(base)[..., None]
+    vals = jnp.concatenate([base, base + jnp.cumsum(deltas, axis=-1)], axis=-1)
+    if value_range is not None:
+        vals = wrap_range(vals, *value_range)
+    return vals
+
+
+# ---------------------------------------------------------------- numpy twins
+# (used by the host-side stream codec / reference encoder; identical math)
+
+def np_wrap_centered(v, rmin, rmax):
+    w = rmax - rmin
+    return np.mod(v + 0.5 * w, w) - 0.5 * w
+
+
+def np_wrap_range(v, rmin, rmax):
+    w = rmax - rmin
+    return np.mod(v - rmin, w) + rmin

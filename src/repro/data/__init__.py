@@ -1,0 +1,4 @@
+from . import synthetic
+from .pipeline import Prefetcher, compress_channels, place_on_mesh
+
+__all__ = ["synthetic", "Prefetcher", "compress_channels", "place_on_mesh"]

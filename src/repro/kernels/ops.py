@@ -1,0 +1,52 @@
+"""Jit'd public wrappers around the Pallas ``dict_match`` kernel.
+
+``dict_match``     -- (ks, mm) for arbitrary D (pads to TILE_D multiple)
+``dict_match_ks``  -- encoder-compatible matcher: returns the KS distance with
+                      failed min/max gates masked to +inf, so the encoder's
+                      single `ks <= d_crit` comparison applies both checks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .dict_match import TILE_D, dict_match_pallas
+from .ref import dict_match_ref
+
+__all__ = ["dict_match", "dict_match_ks", "dict_match_reference"]
+
+# On CPU we must run the kernel in interpret mode; on TPU compile for real.
+_INTERPRET = jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("rel_tol",))
+def dict_match(xs_sorted, dict_blocks, dmin, dmax, rel_tol: float = 0.1):
+    """Pad-to-tile wrapper; returns (ks (D,), mm (D,))."""
+    num_d, n = dict_blocks.shape
+    pad = (-num_d) % TILE_D
+    if pad:
+        dict_blocks = jnp.pad(dict_blocks, ((0, pad), (0, 0)))
+        dmin = jnp.pad(dmin, (0, pad))
+        dmax = jnp.pad(dmax, (0, pad))
+    ks, mm = dict_match_pallas(xs_sorted, dict_blocks, dmin, dmax, rel_tol,
+                               interpret=_INTERPRET)
+    return ks[:num_d], mm[:num_d]
+
+
+def dict_match_ks(xs_sorted, dict_sorted, rel_tol: float = 0.5):
+    """Matcher signature used by ``repro.core.encoder.encode_decisions``.
+
+    The encoder applies its own min/max gate; this variant returns the raw KS
+    distances (gate handled by the encoder mask), computed by the kernel.
+    """
+    dmin = dict_sorted[:, 0]
+    dmax = dict_sorted[:, -1]
+    ks, _ = dict_match(xs_sorted, dict_sorted, dmin, dmax, rel_tol)
+    return ks
+
+
+def dict_match_reference(xs_sorted, dict_blocks, dmin, dmax, rel_tol: float = 0.1):
+    """Pure-jnp oracle with the public signature."""
+    return dict_match_ref(xs_sorted, dict_blocks, dmin, dmax, rel_tol)

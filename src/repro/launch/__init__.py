@@ -1,0 +1,3 @@
+from .mesh import batch_axes, make_debug_mesh, make_production_mesh
+
+__all__ = ["batch_axes", "make_debug_mesh", "make_production_mesh"]

@@ -1,0 +1,379 @@
+"""Trip-count-aware HLO cost analysis.
+
+XLA's built-in ``compiled.cost_analysis()`` visits each while-loop body ONCE,
+so with scanned layers / microbatches / attention chunks it undercounts FLOPs
+and bytes by orders of magnitude.  This module parses ``compiled.as_text()``
+into computations, builds the call graph (while bodies carry their
+``known_trip_count``, fusions/calls carry weight 1), and accumulates:
+
+  - flops:       2 * numel(result) * prod(contracting dims) per dot op
+                 (matmul convention; elementwise flops are negligible for
+                 these workloads and excluded, as in MFU accounting)
+  - bytes:       operand+result bytes of ops at fusion boundaries (fusion
+                 internals live in registers/VMEM); dynamic-slice family
+                 counted by slice size, not full-operand size
+  - collectives: per-kind wire bytes per chip under a ring cost model,
+                 multiplied by the enclosing loops' trip counts
+
+All numbers are per chip: the module analyzed is the SPMD-partitioned
+per-device program.
+"""
+from __future__ import annotations
+
+import json
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+                "u4": 1, "s4": 1}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(?[^=]+?\)?)\s*"
+                     r"([\w\-]+)\(")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count[^\d]*(\d+)')
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_CALLS_RE = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SLICE_OPS = {"dynamic-slice", "dynamic-update-slice", "gather", "scatter"}
+_FREE_OPS = {"get-tuple-element", "tuple", "parameter", "bitcast", "constant",
+             "iota", "after-all", "partition-id", "replica-id", "bitcast-convert"}
+# ops a TPU compiler fuses into producers/consumers essentially always --
+# standalone occurrences on the CPU-optimized module are not HBM traffic
+_FUSABLE_OPS = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "convert",
+    "compare", "select", "exponential", "log", "tanh", "logistic", "power",
+    "sqrt", "rsqrt", "negate", "abs", "floor", "ceil", "sign", "cosine",
+    "sine", "is-finite", "and", "or", "not", "xor", "clamp", "broadcast",
+    "reduce-precision", "exponential-minus-one", "log-plus-one", "reshape",
+    "shift-left", "shift-right-logical", "shift-right-arithmetic", "remainder",
+}
+
+
+def _shape_info(type_str: str) -> Tuple[int, List[List[int]]]:
+    """(total bytes, list of dims lists) for a possibly-tuple type string."""
+    total = 0
+    shapes = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        ds = [int(d) for d in dims.split(",") if d]
+        n = 1
+        for d in ds:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+        shapes.append(ds)
+    return total, shapes
+
+
+class _Comp:
+    def __init__(self, name: str):
+        self.name = name
+        self.lines: List[str] = []
+        self.symtab: Dict[str, str] = {}  # value name -> type string
+        self.flops = 0.0
+        self.bytes = 0.0
+        # fusion-call bytes deferred until the callee's triviality is known
+        self.fusion_bytes: List[Tuple[str, float]] = []
+        self.n_heavy_ops = 0  # dots/reduces/sorts etc. inside this comp
+        # if the root is an in-place dynamic-update-slice, the write traffic
+        # is the update slice, not the full result buffer
+        self.root_dus_update_bytes: Optional[float] = None
+        self.coll: Dict[str, List[float]] = defaultdict(lambda: [0, 0.0])
+        self.edges: List[Tuple[str, float, str]] = []  # (callee, weight, kind)
+
+
+def parse_computations(text: str) -> Tuple[Dict[str, _Comp], Optional[str]]:
+    comps: Dict[str, _Comp] = {}
+    entry = None
+    cur: Optional[_Comp] = None
+    comment_re = re.compile(r"/\*.*?\*/")
+    for raw in text.splitlines():
+        line = comment_re.sub("", raw).rstrip()
+        if cur is None:
+            m = _COMP_HDR_RE.match(line)
+            if m and line.endswith("{"):
+                cur = _Comp(m.group(1))
+                comps[cur.name] = cur
+                if line.startswith("ENTRY"):
+                    entry = cur.name
+                # parameter shapes from the signature
+                for pm in re.finditer(r"([\w.\-]+):\s*(\([^)]*\)|\w+\[[\d,]*\])",
+                                      m.group(2)):
+                    cur.symtab[pm.group(1)] = pm.group(2)
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        cur.lines.append(line)
+        d = _DEF_RE.match(line)
+        if d:
+            cur.symtab[d.group(1)] = d.group(2)
+    return comps, entry
+
+
+def _operand_names(line: str, after: int) -> List[str]:
+    """Operand value names from the op's argument list."""
+    start = line.find("(", after)
+    depth, end = 0, start
+    for i in range(start, len(line)):
+        if line[i] == "(":
+            depth += 1
+        elif line[i] == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    return _OPERAND_RE.findall(line[start:end + 1])
+
+
+def _operand_bytes(comp: _Comp, line: str, after: int) -> float:
+    """Sum of operand sizes named in the op's argument list."""
+    total = 0.0
+    for name in _operand_names(line, after):
+        t = comp.symtab.get(name)
+        if t:
+            total += _shape_info(t)[0]
+    return total
+
+
+def _analyze_comp(comp: _Comp) -> None:
+    for line in comp.lines:
+        d = _DEF_RE.match(line)
+        if not d:
+            continue
+        _, type_str, op = d.group(1), d.group(2), d.group(3)
+        res_bytes, res_shapes = _shape_info(type_str)
+
+        if line.lstrip().startswith("ROOT") and op == "dynamic-update-slice":
+            ops = _operand_names(line, len(d.group(0)) - 1)
+            if len(ops) > 1:
+                ut = comp.symtab.get(ops[1])
+                comp.root_dus_update_bytes = (
+                    _shape_info(ut)[0] if ut else res_bytes)
+
+        if op == "while":
+            b = _BODY_RE.search(line)
+            c = _COND_RE.search(line)
+            t = _TRIP_RE.search(line)
+            trip = float(t.group(1)) if t else 1.0
+            if b:
+                comp.edges.append((b.group(1), trip, "while"))
+            if c:
+                comp.edges.append((c.group(1), trip + 1, "while"))
+            continue
+        cm = _CALLS_RE.search(line)
+        if cm:
+            comp.edges.append((cm.group(1), 1.0, "call"))
+
+        if op in ("dot", "dot-general", "convolution"):
+            mcon = _CONTRACT_RE.search(line)
+            lhs = _OPERAND_RE.findall(line[line.find("(", len(d.group(0)) - 1):])
+            k = 1.0
+            if mcon and lhs:
+                lhs_t = comp.symtab.get(lhs[0], "")
+                _, lhs_shapes = _shape_info(lhs_t)
+                if lhs_shapes:
+                    for ci in [int(x) for x in mcon.group(1).split(",") if x]:
+                        if ci < len(lhs_shapes[0]):
+                            k *= lhs_shapes[0][ci]
+            out_elems = 0.0
+            for s in res_shapes:
+                n = 1
+                for x in s:
+                    n *= x
+                out_elems += n
+            comp.flops += 2.0 * out_elems * k
+
+        for kind in _COLLECTIVES:
+            if op == kind or op == kind + "-start":
+                n = 1
+                g = _GROUPS_BRACE_RE.search(line)
+                if g:
+                    n = len(g.group(1).split(","))
+                else:
+                    g = _GROUPS_IOTA_RE.search(line)
+                    if g:
+                        n = int(g.group(2))
+                # the CPU backend PROMOTES bf16 reductions to f32
+                # (to_apply=%..._promoted); on TPU these run in bf16, so
+                # charge wire bytes at the unpromoted width
+                if "promoted" in line:
+                    res_bytes = res_bytes / 2
+                if n > 1:
+                    if kind == "all-reduce":
+                        wire = 2.0 * (n - 1) / n * res_bytes
+                    elif kind == "all-gather":
+                        wire = (n - 1) / n * res_bytes
+                    elif kind == "reduce-scatter":
+                        wire = float(n - 1) * res_bytes
+                    elif kind == "all-to-all":
+                        wire = (n - 1) / n * res_bytes
+                    else:
+                        wire = float(res_bytes)
+                    comp.coll[kind][0] += 1
+                    comp.coll[kind][1] += wire
+                break
+
+        # bytes at fusion boundaries only; elementwise/broadcast ops fuse on
+        # TPU and are excluded (their values are counted as operands of the
+        # real consumers)
+        if op in _FREE_OPS or op.endswith("-done") or op in _FUSABLE_OPS:
+            continue
+        if op in _SLICE_OPS:
+            if op in ("dynamic-update-slice", "scatter"):
+                # in-place update: traffic ~ 2x the update slice, not the
+                # full buffer (which is the result type)
+                ops = _operand_names(line, len(d.group(0)) - 1)
+                upd_idx = 1 if op == "dynamic-update-slice" else 2
+                upd_t = comp.symtab.get(ops[upd_idx]) if len(ops) > upd_idx else None
+                comp.bytes += 2.0 * (_shape_info(upd_t)[0] if upd_t else res_bytes)
+            else:
+                comp.bytes += 2.0 * res_bytes
+        elif op in ("while", "conditional", "call", "optimization-barrier"):
+            # control flow: the body's traffic is accounted via multipliers;
+            # charging the carried tuple here would double count
+            continue
+        elif op == "fusion":
+            cm2 = _CALLS_RE.search(line)
+            if cm2:
+                # input charge resolved later from the callee's parameter
+                # usage (dynamic-slice params charge slice-size only)
+                comp.fusion_bytes.append((cm2.group(1), float(res_bytes)))
+            else:
+                comp.bytes += res_bytes + _operand_bytes(
+                    comp, line, len(d.group(0)) - 1)
+        else:
+            if op in ("dot", "dot-general", "convolution", "reduce", "sort",
+                      "reduce-window", "rng", "rng-bit-generator"):
+                comp.n_heavy_ops += 1
+            comp.bytes += res_bytes + _operand_bytes(comp, line,
+                                                     len(d.group(0)) - 1)
+
+
+def analyze(text: str) -> Dict:
+    comps, entry = parse_computations(text)
+    for c in comps.values():
+        _analyze_comp(c)
+
+    # propagate multipliers from entry through the call DAG (Kahn order)
+    if entry is None:
+        return {"flops": 0, "bytes": 0, "collectives": {}}
+    from collections import deque
+    indeg = {name: 0 for name in comps}
+    for c in comps.values():
+        for callee, _w, _k in c.edges:
+            if callee in indeg:
+                indeg[callee] += 1
+    mult: Dict[str, float] = {name: 0.0 for name in comps}
+    mult[entry] = 1.0
+    q = deque([n for n in comps if indeg[n] == 0])
+    while q:
+        cur = q.popleft()
+        for callee, w, _k in comps[cur].edges:
+            if callee in comps:
+                mult[callee] += mult[cur] * w
+                indeg[callee] -= 1
+                if indeg[callee] == 0:
+                    q.append(callee)
+
+    # resolve deferred fusion-call bytes: calls into "light" computations
+    # (pure elementwise/broadcast pipelines, which the TPU compiler fuses
+    # into neighbors) are not HBM traffic
+    def _light(name: str) -> bool:
+        c = comps.get(name)
+        if c is None:
+            return False
+        return (c.n_heavy_ops == 0 and c.bytes == 0.0
+                and not c.fusion_bytes and len(c.lines) <= 10)
+
+    # input charge of a fusion: parameters consumed only by dynamic-slice
+    # inside the fusion read slice-size bytes, not the full (e.g. stacked
+    # scan-parameter) operand
+    _param_charge_cache: Dict[str, float] = {}
+
+    def _param_charge(name: str) -> float:
+        if name in _param_charge_cache:
+            return _param_charge_cache[name]
+        c = comps.get(name)
+        charge = 0.0
+        if c is not None:
+            params = []  # (pname, type)
+            for line in c.lines:
+                d = _DEF_RE.match(line)
+                if d and d.group(3) == "parameter":
+                    params.append((d.group(1), d.group(2)))
+            for pname, ptype in params:
+                use_re = re.compile(r"%" + re.escape(pname) + r"(?![\w.])")
+                slice_bytes = 0.0
+                full = False
+                used = False
+                for line in c.lines:
+                    d = _DEF_RE.match(line)
+                    if not d or d.group(1) == pname:
+                        continue
+                    if use_re.search(line):
+                        used = True
+                        op = d.group(3)
+                        if op == "dynamic-slice":
+                            slice_bytes += _shape_info(d.group(2))[0]
+                        elif op == "dynamic-update-slice":
+                            ops = _operand_names(line, len(d.group(0)) - 1)
+                            if ops and ops[0] == pname and len(ops) > 1:
+                                ut = c.symtab.get(ops[1])
+                                slice_bytes += _shape_info(ut)[0] if ut else 0
+                            else:  # param is the update itself
+                                slice_bytes += _shape_info(ptype)[0]
+                        else:
+                            full = True
+                            break
+                if not used:
+                    continue
+                charge += _shape_info(ptype)[0] if full else slice_bytes
+        _param_charge_cache[name] = charge
+        return charge
+
+    total_flops = 0.0
+    total_bytes = 0.0
+    coll: Dict[str, Dict[str, float]] = {}
+    # fusion-internal computations: bytes already counted at the call site,
+    # so only count bytes for computations reached via while/entry (regions)
+    fused_callees = set()
+    for c in comps.values():
+        for callee, _w, kind in c.edges:
+            if kind == "call":
+                fused_callees.add(callee)
+    for name, c in comps.items():
+        m = mult.get(name, 0.0)
+        if m <= 0:
+            continue
+        total_flops += m * c.flops
+        if name not in fused_callees:
+            own = c.bytes
+            for callee, res_b in c.fusion_bytes:
+                if not _light(callee):
+                    cal = comps.get(callee)
+                    if cal is not None and cal.root_dus_update_bytes is not None:
+                        res_b = 2.0 * cal.root_dus_update_bytes
+                    own += res_b + _param_charge(callee)
+            total_bytes += m * own
+        for kind, (cnt, wire) in c.coll.items():
+            d = coll.setdefault(kind, {"count": 0.0, "wire_bytes": 0.0})
+            d["count"] += m * cnt
+            d["wire_bytes"] += m * wire
+    return {
+        "flops": total_flops,
+        "bytes": total_bytes,
+        "collectives": coll,
+        "collective_wire_bytes": sum(d["wire_bytes"] for d in coll.values()),
+    }

@@ -1,0 +1,49 @@
+"""Serving launcher: batched decode with the ServeEngine.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-3b --smoke \
+      --batch 4 --prompt-len 16 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import ALIASES, get_config
+from repro.models import lm
+from repro.serve import ServeEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="rwkv6-3b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--max-seq", type=int, default=256)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = get_config(ALIASES.get(args.arch, args.arch), smoke=args.smoke)
+    params = lm.init_params(jax.random.key(0), cfg)
+    mem_len = (cfg.num_image_tokens if cfg.family == "vlm"
+               else cfg.encoder_seq if cfg.family == "audio" else 0)
+    engine = ServeEngine(cfg, params, max_seq=args.max_seq,
+                         memory_len=mem_len, temperature=args.temperature)
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab_size,
+                           size=(args.batch, args.prompt_len)).astype(np.int32)
+    t0 = time.time()
+    out = engine.generate(prompts, args.gen)
+    dt = time.time() - t0
+    tps = args.batch * args.gen / dt
+    print(f"arch={cfg.name} generated {out.shape} in {dt:.2f}s "
+          f"({tps:.1f} tok/s batched)")
+    print("sample:", out[0][:16].tolist())
+
+
+if __name__ == "__main__":
+    main()

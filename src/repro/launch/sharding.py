@@ -1,0 +1,214 @@
+"""Sharding policy: pytree-path based PartitionSpecs for params, optimizer
+state, caches and batches.
+
+Baseline layout (Megatron TP x FSDP/ZeRO-1):
+  - `model` axis: attention head projections, FFN hidden, vocab, (experts).
+  - `data` axis: FSDP shard of every large parameter's other big dim; the
+    optimizer state mirrors the param specs (ZeRO-1).
+  - batch dims: ('pod','data') multi-pod, ('data',) single-pod.
+  - long-context decode (batch=1): the KV-cache *sequence* dim shards over
+    the batch axes instead (sequence parallelism); GSPMD turns the cache
+    attention into a distributed softmax (partial max/sum + all-reduce).
+
+Axes are dropped when a dim is not divisible by the mesh axis size (GSPMD
+would pad; for the baseline we prefer clean layouts and replicate instead).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import ModelConfig
+
+__all__ = ["param_specs", "batch_specs", "cache_specs", "to_shardings",
+           "activation_rules"]
+
+
+def _axis_size(mesh: Mesh, name) -> int:
+    if name is None:
+        return 1
+    if isinstance(name, (tuple, list)):
+        return int(np.prod([mesh.shape[a] for a in name]))
+    return mesh.shape[name]
+
+
+def _fit(spec: P, shape, mesh: Mesh) -> P:
+    """Drop axes that don't divide the corresponding dim."""
+    out = []
+    for i, ax in enumerate(spec):
+        if ax is None or i >= len(shape):
+            out.append(None)
+            continue
+        out.append(ax if shape[i] % _axis_size(mesh, ax) == 0 else None)
+    return P(*out)
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+
+
+# --------------------------------------------------------------- param rules
+def _param_rule(pstr: str, ndim: int, cfg: ModelConfig, ep: bool) -> P:
+    """Spec for the *unstacked* parameter (scan dim handled by caller)."""
+    name = pstr.rsplit("/", 1)[-1]
+    d = {"f": "data", "m": "model"}
+    if name in ("wq", "wk", "wv", "up", "gate", "in_proj", "wr", "wg",
+                "w_lora_a"):
+        return P("data", "model")
+    if name in ("wo", "down", "out_proj", "wv_cm", "w_lora_b"):
+        return P("model", "data")
+    if name == "table":      # (vocab, d): vocab on model, d FSDP
+        return P("model", "data")
+    if name == "unembed":    # (d, vocab)
+        return P("data", "model")
+    if name == "router":
+        return P("data", None)
+    if name in ("experts_up", "experts_gate"):  # (E, d, f)
+        return P("model", "data", None) if ep else P(None, "data", "model")
+    if name == "experts_down":  # (E, f, d)
+        return P("model", None, "data") if ep else P(None, "model", "data")
+    if name == "conv_w":
+        return P(None, "model")
+    if name == "u":
+        return P("model", None)
+    # rwkv channel-mix wk/wv share names with time-mix; handled above (wk
+    # (d,ff) -> data,model fits both). wv in channel mix is (ff, d):
+    if name == "wk":
+        return P("data", "model")
+    if name == "wv" and ndim == 2:
+        return P("data", "model")
+    return P(*([None] * ndim))  # norms, biases, mu, scalars: replicated
+
+
+def param_specs(params_shape: Any, cfg: ModelConfig, mesh: Mesh) -> Any:
+    """Pytree of PartitionSpec matching a (possibly abstract) param tree."""
+    tp = mesh.shape["model"]
+    ep = (cfg.num_experts > 0 and cfg.num_experts % tp == 0
+          and cfg.moe_expert_parallel)
+
+    def rule(path, leaf):
+        pstr = _path_str(path)
+        shape = leaf.shape
+        scanned = ("stages/" in pstr or pstr.startswith("stages")
+                   or "/stage/" in pstr)
+        ndim = len(shape) - (1 if scanned else 0)
+        spec = _param_rule(pstr, ndim, cfg, ep)
+        # rwkv channel-mix wv is (ff, d): flip if first dim == d_ff
+        name = pstr.rsplit("/", 1)[-1]
+        core = shape[1:] if scanned else shape
+        if name == "wv" and len(core) == 2 and core[0] == cfg.d_ff:
+            spec = P("model", "data")
+        if scanned:
+            spec = P(*((None,) + tuple(spec)))
+        return _fit(spec, shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+
+def state_specs(state_shape: Any, cfg: ModelConfig, mesh: Mesh) -> Any:
+    """TrainState specs: params + (mu, nu mirror params) + scalars."""
+    from repro.train import TrainState  # avoid cycle
+
+    pspecs = param_specs(state_shape.params, cfg, mesh)
+    opt = state_shape.opt
+    gc = state_shape.gradcomp
+    return TrainState(
+        params=pspecs,
+        opt=type(opt)(step=P(),
+                      mu=param_specs(opt.mu, cfg, mesh),
+                      nu=param_specs(opt.nu, cfg, mesh)),
+        gradcomp=None if gc is None else type(gc)(
+            residual=param_specs(gc.residual, cfg, mesh)),
+    )
+
+
+# --------------------------------------------------------------- batch rules
+def batch_specs(batch_shape: Any, mesh: Mesh, baxes) -> Any:
+    def rule(path, leaf):
+        spec = P(baxes, *([None] * (len(leaf.shape) - 1)))
+        return _fit(spec, leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(rule, batch_shape)
+
+
+# --------------------------------------------------------------- cache rules
+def cache_specs(cache_shape: Any, cfg: ModelConfig, mesh: Mesh, baxes,
+                shard_sequence: bool) -> Any:
+    """KV/state cache specs.  shard_sequence=True (long-context, batch=1):
+    the KV-cache *sequence* dim takes the batch axes (sequence parallelism;
+    GSPMD lowers the cache attention to a distributed softmax).
+
+    Dispatches on the typed cache containers (KVCache / SSMCache /
+    RwkvCache); every array has a leading stage-repeats dim from the scan."""
+    from repro.models.attention import KVCache
+    from repro.models.ssm import SSMCache
+    from repro.models.rwkv import RwkvCache
+    from repro.models.lm import DecodeCache
+
+    def kv_spec(kv: KVCache):
+        seq = baxes if shard_sequence else None
+        b = None if shard_sequence else baxes
+        return KVCache(
+            k=_fit(P(None, b, seq, "model", None), kv.k.shape, mesh),
+            v=_fit(P(None, b, seq, "model", None), kv.v.shape, mesh),
+            length=P(),
+        )
+
+    def ssm_spec(c: SSMCache):
+        return SSMCache(
+            state=_fit(P(None, baxes, "model", None, None), c.state.shape, mesh),
+            conv=_fit(P(None, baxes, None, "model"), c.conv.shape, mesh),
+            length=P(),
+        )
+
+    def rwkv_spec(c: RwkvCache):
+        return RwkvCache(
+            state=_fit(P(None, baxes, "model", None, None), c.state.shape, mesh),
+            last_tm=_fit(P(None, baxes, None), c.last_tm.shape, mesh),
+            last_cm=_fit(P(None, baxes, None), c.last_cm.shape, mesh),
+            length=P(),
+        )
+
+    def rule(leaf):
+        if isinstance(leaf, KVCache):
+            return kv_spec(leaf)
+        if isinstance(leaf, SSMCache):
+            return ssm_spec(leaf)
+        if isinstance(leaf, RwkvCache):
+            return rwkv_spec(leaf)
+        return _fit(P(baxes, None, None), leaf.shape, mesh)  # memory (B,M,d)
+
+    stages = jax.tree.map(
+        rule, cache_shape.stages,
+        is_leaf=lambda x: isinstance(x, (KVCache, SSMCache, RwkvCache)))
+    mem = None if cache_shape.memory is None else rule(cache_shape.memory)
+    return DecodeCache(stages=stages, memory=mem)
+
+
+# --------------------------------------------------- activations (logical())
+def activation_rules(cfg: ModelConfig, mesh: Mesh, baxes) -> dict:
+    tp = mesh.shape["model"]
+    ep = bool(cfg.num_experts and cfg.num_experts % tp == 0
+              and cfg.moe_expert_parallel)
+    return {
+        "batch": baxes,
+        "ff": "model" if cfg.d_ff % tp == 0 else None,
+        "heads": "model" if cfg.num_heads % tp == 0 else None,
+        "kv_heads": "model" if cfg.num_kv_heads % tp == 0 else None,
+        "vocab": "model" if cfg.vocab_size % tp == 0 else None,
+        "experts": "model" if ep else None,
+        # expert-FFN dim takes the model axis only when experts don't (TP
+        # inside experts vs EP across them -- never both on one tensor)
+        "moe_ff": None if ep else ("model" if cfg.d_ff % tp == 0 else None),
+    }
+
+
+def to_shardings(spec_tree: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(
+        lambda s: None if s is None else NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P) or x is None,
+    )

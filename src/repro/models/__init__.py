@@ -1,0 +1,4 @@
+from .common import ModelConfig, set_sharding_rules
+from . import lm
+
+__all__ = ["ModelConfig", "set_sharding_rules", "lm"]

@@ -1,0 +1,285 @@
+"""Attention: RoPE, GQA, flash-style chunked softmax, SWA/local-global,
+cross-attention, and single-token decode against a KV cache.
+
+The training/prefill path never materializes the (S x T) score matrix in HBM:
+a ``lax.scan`` over KV chunks keeps the online-softmax running max/denominator
+(m, l) and the output accumulator in registers/VMEM-sized tiles -- the
+TPU-idiomatic flash formulation.  Masking (causal / sliding window) is
+computed from position indices per chunk, so sliding-window layers can bound
+their KV cache to the window length (ring buffer) at decode time.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import ModelConfig, dense_init, logical, split_keys
+
+_NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------- RoPE
+def rope(x, positions, theta: float = 1e4):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(-jnp.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -------------------------------------------------------------- param blocks
+def init_attention(key, cfg: ModelConfig, cross: bool = False):
+    d, h, kvh, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    ks = split_keys(key, ["q", "k", "v", "o"])
+    return {
+        "wq": dense_init(ks["q"], (d, h * hd), 0, cfg.param_dtype),
+        "wk": dense_init(ks["k"], (d, kvh * hd), 0, cfg.param_dtype),
+        "wv": dense_init(ks["v"], (d, kvh * hd), 0, cfg.param_dtype),
+        "wo": dense_init(ks["o"], (h * hd, d), 0, cfg.param_dtype),
+    }
+
+
+# ------------------------------------------------------- flash core (q long)
+def _flash(q, k, v, q_pos, kv_pos, *, causal: bool, window: Optional[int],
+           chunk: int, kv_len: Optional[jax.Array] = None):
+    """q: (B,S,H,hd), k/v: (B,T,H,hd) (kv already repeated to H heads).
+
+    Returns (B,S,H,hd).  Masks: causal (q_pos >= kv_pos), sliding window
+    (q_pos - kv_pos < window), kv_len (kv_pos < kv_len) for padded caches.
+
+    Sliding-window self-attention takes the BANDED path (perf iteration 3,
+    EXPERIMENTS.md §Perf): q is chunked too and each q chunk visits only the
+    ceil(window/chunk)+1 kv chunks inside its band, so attention traffic and
+    FLOPs scale with S*window instead of S*T.
+    """
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    chunk = min(chunk, T)
+    if (window is not None and causal and S == T and kv_len is None
+            and S % chunk == 0 and S // chunk > window // chunk + 1):
+        return _flash_banded(q, k, v, q_pos, window=window, chunk=chunk)
+    pad = (-T) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, (0, pad), constant_values=jnp.iinfo(jnp.int32).max // 2)
+    nchunk = k.shape[1] // chunk
+    kc = k.reshape(B, nchunk, chunk, H, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nchunk, chunk, H, hd).transpose(1, 0, 2, 3, 4)
+    pc = kv_pos.reshape(nchunk, chunk)
+
+    # Perf iteration 2 (EXPERIMENTS.md §Perf): keep QK/PV matmul operands in
+    # the compute dtype (bf16) and accumulate in f32 via
+    # preferred_element_type -- f32 operands leak f32 cotangents into the
+    # backward TP all-reduces (2x wire bytes) and HBM traffic.
+    scale = jnp.asarray(1.0 / np.sqrt(hd), q.dtype)
+    qs = q * scale
+
+    def body(carry, inp):
+        o, m, l = carry
+        kb, vb, pb = inp  # (B,chunk,H,hd), (B,chunk,H,hd), (chunk,)
+        s = jnp.einsum("bshd,bthd->bhst", qs, kb,
+                       preferred_element_type=jnp.float32)
+        mask = jnp.ones((S, chunk), dtype=bool)
+        if causal:
+            mask &= q_pos[:, None] >= pb[None, :]
+        if window is not None:
+            mask &= (q_pos[:, None] - pb[None, :]) < window
+        if kv_len is not None:
+            mask &= pb[None, :] < kv_len
+        s = jnp.where(mask[None, None], s, _NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        o_new = o * alpha[..., None] + jnp.einsum(
+            "bhst,bthd->bshd", p.astype(vb.dtype), vb,
+            preferred_element_type=jnp.float32,
+        ).transpose(0, 2, 1, 3)
+        return (o_new, m_new, l_new), None
+
+    o0 = jnp.zeros((B, H, S, hd), jnp.float32)
+    m0 = jnp.full((B, H, S), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, S), jnp.float32)
+    (o, m, l), _ = jax.lax.scan(body, (o0, m0, l0), (kc, vc, pc))
+    o = o / jnp.maximum(l, 1e-30)[..., None]
+    return o.transpose(0, 2, 1, 3).astype(q.dtype)  # (B,S,H,hd)
+
+
+def _flash_banded(q, k, v, q_pos, *, window: int, chunk: int):
+    """Sliding-window causal self-attention with q-chunking: each q chunk
+    attends only to its band of kv chunks (indices qi-band+1 .. qi)."""
+    B, S, H, hd = q.shape
+    nq = S // chunk
+    band = window // chunk + 1
+    scale = jnp.asarray(1.0 / np.sqrt(hd), q.dtype)
+    qc = (q * scale).reshape(B, nq, chunk, H, hd).transpose(1, 0, 2, 3, 4)
+    kc = k.reshape(B, nq, chunk, H, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nq, chunk, H, hd).transpose(1, 0, 2, 3, 4)
+    pos_c = q_pos.reshape(nq, chunk)
+
+    def q_block(carry, inp):
+        qi = inp["idx"]  # scalar chunk index
+        qb, qp = inp["q"], inp["pos"]  # (B,chunk,H,hd), (chunk,)
+        o = jnp.zeros((B, H, chunk, hd), jnp.float32)
+        m = jnp.full((B, H, chunk), _NEG_INF, jnp.float32)
+        l = jnp.zeros((B, H, chunk), jnp.float32)
+        for b in range(band):
+            j = jnp.maximum(qi - b, 0)
+            kb = jax.lax.dynamic_index_in_dim(kc, j, 0, keepdims=False)
+            vb = jax.lax.dynamic_index_in_dim(vc, j, 0, keepdims=False)
+            pb = jax.lax.dynamic_index_in_dim(pos_c, j, 0, keepdims=False)
+            s = jnp.einsum("bshd,bthd->bhst", qb, kb,
+                           preferred_element_type=jnp.float32)
+            mask = (qp[:, None] >= pb[None, :]) \
+                & ((qp[:, None] - pb[None, :]) < window) \
+                & (qi - b >= 0)
+            s = jnp.where(mask[None, None], s, _NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + jnp.sum(p, axis=-1)
+            o = o * alpha[..., None] + jnp.einsum(
+                "bhst,bthd->bshd", p.astype(vb.dtype), vb,
+                preferred_element_type=jnp.float32).transpose(0, 2, 1, 3)
+            m = m_new
+        out = (o / jnp.maximum(l, 1e-30)[..., None]).transpose(0, 2, 1, 3)
+        return carry, out.astype(q.dtype)
+
+    xs = {"idx": jnp.arange(nq, dtype=jnp.int32), "q": qc, "pos": pos_c}
+    _, oc = jax.lax.scan(q_block, (), xs)
+    return oc.transpose(1, 0, 2, 3, 4).reshape(B, S, H, hd)
+
+
+def _repeat_kv(x, h: int):
+    kvh = x.shape[2]
+    if kvh == h:
+        return x
+    return jnp.repeat(x, h // kvh, axis=2)
+
+
+# ---------------------------------------------------------------- public ops
+def attention(p, x, cfg: ModelConfig, *, causal=True, window=None,
+              positions=None, use_rope=True):
+    """Self-attention over x (B,S,d) for training / prefill."""
+    B, S, _ = x.shape
+    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    dt = x.dtype
+    q = (x @ p["wq"].astype(dt)).reshape(B, S, h, hd)
+    k = (x @ p["wk"].astype(dt)).reshape(B, S, kvh, hd)
+    v = (x @ p["wv"].astype(dt)).reshape(B, S, kvh, hd)
+    q = logical(q, "batch", None, "heads", None)
+    k = logical(k, "batch", None, "kv_heads", None)
+    v = logical(v, "batch", None, "kv_heads", None)
+    if positions is None:
+        positions = jnp.arange(S, dtype=jnp.int32)
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    k, v = _repeat_kv(k, h), _repeat_kv(v, h)
+    o = _flash(q, k, v, positions, positions, causal=causal, window=window,
+               chunk=cfg.attn_chunk)
+    o = o.reshape(B, S, h * hd)
+    return o @ p["wo"].astype(dt)
+
+
+def cross_attention(p, x, memory, cfg: ModelConfig):
+    """x (B,S,d) attends to memory (B,M,d); no mask, no rope."""
+    B, S, _ = x.shape
+    M = memory.shape[1]
+    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    dt = x.dtype
+    q = (x @ p["wq"].astype(dt)).reshape(B, S, h, hd)
+    k = (memory @ p["wk"].astype(dt)).reshape(B, M, kvh, hd)
+    v = (memory @ p["wv"].astype(dt)).reshape(B, M, kvh, hd)
+    k, v = _repeat_kv(k, h), _repeat_kv(v, h)
+    qp = jnp.arange(S, dtype=jnp.int32)
+    kp = jnp.arange(M, dtype=jnp.int32)
+    o = _flash(q, k, v, qp, kp, causal=False, window=None, chunk=cfg.attn_chunk)
+    return o.reshape(B, S, h * hd) @ p["wo"].astype(dt)
+
+
+# --------------------------------------------------------------- decode path
+class KVCache(NamedTuple):
+    k: jax.Array  # (B, C, kvh, hd)  C = window or max_seq
+    v: jax.Array
+    length: jax.Array  # () int32: tokens seen so far (ring for windowed)
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_seq: int,
+                  window: Optional[int] = None, dtype=None) -> KVCache:
+    c = min(window, max_seq) if window else max_seq
+    dt = dtype or cfg.dtype
+    shape = (batch, c, cfg.num_kv_heads, cfg.hd)
+    return KVCache(jnp.zeros(shape, dt), jnp.zeros(shape, dt),
+                   jnp.zeros((), jnp.int32))
+
+
+def decode_attention(p, x, cache: KVCache, cfg: ModelConfig, *,
+                     window: Optional[int] = None, use_rope=True):
+    """One-token decode: x (B,1,d) + cache -> (out (B,1,d), new cache).
+
+    Windowed layers use a ring buffer of size `window`; full layers append.
+    """
+    B = x.shape[0]
+    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    dt = x.dtype
+    C = cache.k.shape[1]
+    pos = cache.length  # scalar position of the new token
+    q = (x @ p["wq"].astype(dt)).reshape(B, 1, h, hd)
+    k = (x @ p["wk"].astype(dt)).reshape(B, 1, kvh, hd)
+    v = (x @ p["wv"].astype(dt)).reshape(B, 1, kvh, hd)
+    if use_rope:
+        posv = pos[None].astype(jnp.int32)
+        q = rope(q, posv, cfg.rope_theta)
+        k = rope(k, posv, cfg.rope_theta)
+    slot = jnp.mod(pos, C)
+    new_k = jax.lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype),
+                                         (0, slot, 0, 0))
+    new_v = jax.lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype),
+                                         (0, slot, 0, 0))
+    # positions stored in each ring slot (for rope-consistent masking)
+    idx = jnp.arange(C, dtype=jnp.int32)
+    # slot i currently holds absolute position: latest write wins
+    abs_pos = jnp.where(idx <= slot, pos - (slot - idx), pos - C + (idx - slot))
+    valid = (abs_pos >= 0) & (abs_pos <= pos)
+    if window is not None:
+        valid &= (pos - abs_pos) < window
+
+    kk = _repeat_kv(new_k.astype(dt), h)
+    vv = _repeat_kv(new_v.astype(dt), h)
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    s = jnp.einsum("bohd,bthd->bhot", q.astype(jnp.float32) * scale,
+                   kk.astype(jnp.float32))
+    s = jnp.where(valid[None, None, None, :], s, _NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhot,bthd->bohd", w, vv.astype(jnp.float32))
+    o = o.reshape(B, 1, h * hd).astype(dt)
+    out = o @ p["wo"].astype(dt)
+    return out, KVCache(new_k, new_v, pos + 1)
+
+
+def prefill_kv(p, x, cfg: ModelConfig, max_seq: int,
+               window: Optional[int] = None) -> KVCache:
+    """Build a cache from a full prompt (used by serve prefill)."""
+    B, S, _ = x.shape
+    kvh, hd = cfg.num_kv_heads, cfg.hd
+    dt = x.dtype
+    k = (x @ p["wk"].astype(dt)).reshape(B, S, kvh, hd)
+    v = (x @ p["wv"].astype(dt)).reshape(B, S, kvh, hd)
+    k = rope(k, jnp.arange(S, dtype=jnp.int32), cfg.rope_theta)
+    cache = init_kv_cache(cfg, B, max_seq, window, dtype=dt)
+    C = cache.k.shape[1]
+    take = min(S, C)
+    # ring invariant: absolute position t lives in slot t mod C
+    slots = (jnp.arange(take, dtype=jnp.int32) + (S - take)) % C
+    kk = cache.k.at[:, slots].set(k[:, S - take:].astype(cache.k.dtype))
+    vv = cache.v.at[:, slots].set(v[:, S - take:].astype(cache.v.dtype))
+    return KVCache(kk, vv, jnp.asarray(S, jnp.int32))

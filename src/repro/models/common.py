@@ -1,0 +1,143 @@
+"""Shared model config, parameter initialization, and logical sharding."""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+# --------------------------------------------------------------------- config
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    family: str = "dense"  # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int = 2
+    d_model: int = 128
+    num_heads: int = 4
+    num_kv_heads: int = 4
+    d_ff: int = 512
+    vocab_size: int = 256
+    head_dim: Optional[int] = None
+    # MoE
+    num_experts: int = 0
+    experts_per_token: int = 0
+    capacity_factor: float = 1.25
+    # Expert-parallel sharding of the expert dim. Perf iteration 1 (see
+    # EXPERIMENTS.md §Perf): scatter-dispatch across a sharded expert dim
+    # makes XLA replicate the (B, S*K, d) token buffers => TB-scale
+    # all-reduces. FFN-TP inside experts keeps dispatch device-local.
+    moe_expert_parallel: bool = False
+    # attention pattern
+    sliding_window: Optional[int] = None   # SWA on all attention layers
+    local_global_ratio: int = 0            # gemma3: N local layers per global
+    local_window: int = 1024
+    # ssm / hybrid
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_conv: int = 4
+    attn_every: int = 0                    # zamba2: shared attn every k layers
+    # vlm
+    cross_attn_every: int = 0
+    num_image_tokens: int = 0
+    # enc-dec (whisper)
+    encoder_layers: int = 0
+    encoder_seq: int = 0
+    # misc
+    rope_theta: float = 1e4
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = True
+    act: str = "swiglu"  # swiglu | gelu
+    dtype: Any = jnp.bfloat16
+    param_dtype: Any = jnp.float32
+    remat: bool = True
+    remat_policy: str = "full"  # full | dots (save matmul outputs)
+    scan_layers: bool = True
+    train_microbatches: int = 8  # grad-accumulation steps at train_4k scale
+    rwkv_chunk: int = 64
+    ssm_chunk: int = 128
+    attn_chunk: int = 1024
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def param_count(self) -> int:
+        """Total parameter count N (for MODEL_FLOPS = 6*N*D)."""
+        import math
+        from .lm import init_params  # lazy; avoids cycle
+        shapes = jax.eval_shape(lambda k: init_params(k, self), jax.random.key(0))
+        return sum(math.prod(x.shape) for x in jax.tree.leaves(shapes))
+
+    def active_param_count(self) -> int:
+        """Active-per-token params (MoE: only experts_per_token of them)."""
+        import math
+        total = self.param_count()
+        if self.num_experts == 0:
+            return total
+        from .lm import init_params
+        shapes = jax.eval_shape(lambda k: init_params(k, self), jax.random.key(0))
+        flat = jax.tree_util.tree_flatten_with_path(shapes)[0]
+        expert = sum(
+            math.prod(x.shape)
+            for path, x in flat
+            if any("experts" in str(p) for p in path)
+        )
+        frac = self.experts_per_token / self.num_experts
+        return int(total - expert + expert * frac)
+
+
+# ------------------------------------------------------------------ init util
+
+
+def dense_init(key, shape, in_axis: int = 0, dtype=jnp.float32):
+    """Truncated-normal fan-in init."""
+    fan_in = shape[in_axis] if len(shape) else 1
+    scale = 1.0 / max(fan_in, 1) ** 0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape) * scale).astype(dtype)
+
+
+def split_keys(key, names):
+    keys = jax.random.split(key, len(names))
+    return dict(zip(names, keys))
+
+
+# ---------------------------------------------------------- logical sharding
+# The launcher registers logical-axis -> mesh-axis rules; on CPU tests no
+# rules are registered and `logical()` is a no-op, so model code is mesh-free.
+
+_RULES: Optional[dict] = None
+
+
+def set_sharding_rules(rules: Optional[dict]) -> None:
+    """rules: logical axis name -> mesh axis (str | tuple | None)."""
+    global _RULES
+    _RULES = rules
+
+
+def get_sharding_rules() -> Optional[dict]:
+    return _RULES
+
+
+def logical(x, *axes: Optional[str]):
+    """Attach a sharding constraint by logical axis names (no-op w/o rules)."""
+    if _RULES is None:
+        return x
+    spec = P(*[_RULES.get(a) if a is not None else None for a in axes])
+    return jax.lax.with_sharding_constraint(x, spec)

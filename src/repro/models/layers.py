@@ -1,0 +1,69 @@
+"""Primitive layers: norms, MLPs, embeddings (pure pytrees + apply fns)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, dense_init, logical, split_keys
+
+
+# ------------------------------------------------------------------- RMSNorm
+def init_rmsnorm(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype=dtype)}
+
+
+def rmsnorm(p, x, eps: float = 1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+# ----------------------------------------------------------------------- MLP
+def init_mlp(key, cfg: ModelConfig, d_ff: int | None = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = split_keys(key, ["gate", "up", "down"])
+    p = {
+        "up": dense_init(ks["up"], (d, f), 0, cfg.param_dtype),
+        "down": dense_init(ks["down"], (f, d), 0, cfg.param_dtype),
+    }
+    if cfg.act == "swiglu":
+        p["gate"] = dense_init(ks["gate"], (d, f), 0, cfg.param_dtype)
+    return p
+
+
+def mlp(p, x, cfg: ModelConfig):
+    dt = x.dtype
+    up = x @ p["up"].astype(dt)
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(x @ p["gate"].astype(dt)) * up
+    else:
+        h = jax.nn.gelu(up)
+    h = logical(h, "batch", None, "ff")
+    return h @ p["down"].astype(dt)
+
+
+# ----------------------------------------------------------------- embedding
+def init_embed(key, cfg: ModelConfig):
+    ks = split_keys(key, ["table", "unembed"])
+    p = {"table": dense_init(ks["table"], (cfg.vocab_size, cfg.d_model), 1,
+                             cfg.param_dtype)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = dense_init(ks["unembed"], (cfg.d_model, cfg.vocab_size),
+                                  0, cfg.param_dtype)
+    return p
+
+
+def embed(p, tokens, cfg: ModelConfig):
+    x = jnp.take(p["table"], tokens, axis=0).astype(cfg.dtype)
+    return logical(x, "batch", None, None)
+
+
+def unembed(p, x, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        w = p["table"].T
+    else:
+        w = p["unembed"]
+    logits = x.astype(jnp.float32) @ w.astype(jnp.float32)
+    return logical(logits, "batch", None, "vocab")

@@ -1,0 +1,379 @@
+"""Model assembly: heterogeneous layer stacks as scanned stages.
+
+A config maps to a *stage plan*: a list of (pattern, repeats) where pattern
+is a tuple of layer kinds (e.g. gemma3's 5 local + 1 global super-block).
+Each stage's parameters are stacked over `repeats` and applied with
+``lax.scan`` (+ optional remat), so HLO size is O(#stages), not O(depth).
+
+Layer kinds:
+  attn          self-attention + MLP (window = cfg.sliding_window if set)
+  attn_local    sliding-window self-attention + MLP (cfg.local_window)
+  attn_global   full self-attention + MLP
+  enc_attn      bidirectional self-attention + MLP (encoder)
+  dec_attn      causal self-attn + cross-attn(memory) + MLP (enc-dec decoder)
+  moe_attn      self-attention + MoE FFN
+  cross         cross-attention(memory) + MLP (VLM image layers)
+  ssm           Mamba2 block
+  shared_attn   zamba2's weight-shared attention block (params stored once)
+  rwkv          RWKV6 time-mix + channel-mix
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (KVCache, attention, cross_attention, decode_attention,
+                        init_attention, init_kv_cache, rope)
+from .common import ModelConfig, logical, split_keys
+from .layers import embed, init_embed, init_mlp, init_rmsnorm, mlp, rmsnorm, unembed
+from .moe import init_moe, moe_ffn
+from .rwkv import (RwkvCache, channel_mix_decode, channel_mix_forward,
+                   init_channel_mix, init_rwkv_cache, init_time_mix,
+                   time_mix_decode, time_mix_forward)
+from .ssm import SSMCache, init_ssm, init_ssm_cache, ssm_decode, ssm_forward
+
+LOSS_CHUNK = 1024
+
+# ------------------------------------------------------------------ planning
+
+
+def stage_plan(cfg: ModelConfig) -> List[Tuple[Tuple[str, ...], int]]:
+    L = cfg.num_layers
+    if cfg.family == "moe":
+        return [(("moe_attn",), L)]
+    if cfg.family == "ssm":
+        return [(("rwkv",), L)]
+    if cfg.family == "hybrid":
+        k = cfg.attn_every or 6
+        reps, rem = divmod(L, k)
+        plan = []
+        if reps:
+            plan.append((("shared_attn",) + ("ssm",) * k, reps))
+        if rem:
+            plan.append((("ssm",), rem))
+        return plan
+    if cfg.family == "vlm":
+        k = cfg.cross_attn_every or 5
+        reps, rem = divmod(L, k)
+        plan = []
+        if reps:
+            plan.append((("attn",) * (k - 1) + ("cross",), reps))
+        if rem:
+            plan.append((("attn",), rem))
+        return plan
+    if cfg.family == "audio":  # decoder side; encoder handled separately
+        return [(("dec_attn",), L)]
+    # dense
+    if cfg.local_global_ratio:
+        k = cfg.local_global_ratio
+        reps, rem = divmod(L, k + 1)
+        plan = []
+        if reps:
+            plan.append((("attn_local",) * k + ("attn_global",), reps))
+        if rem:
+            plan.append((("attn_local",), rem))
+        return plan
+    return [(("attn",), L)]
+
+
+def _kind_window(kind: str, cfg: ModelConfig) -> Optional[int]:
+    if kind == "attn_local":
+        return cfg.local_window
+    if kind in ("attn", "moe_attn", "shared_attn"):
+        return cfg.sliding_window
+    return None
+
+
+# ---------------------------------------------------------------------- init
+
+
+def _init_layer(key, kind: str, cfg: ModelConfig):
+    ks = split_keys(key, ["a", "b", "c", "d", "e", "f"])
+    n = lambda: init_rmsnorm(cfg.d_model, cfg.param_dtype)
+    if kind in ("attn", "attn_local", "attn_global", "enc_attn", "shared_attn"):
+        return {"norm1": n(), "attn": init_attention(ks["a"], cfg),
+                "norm2": n(), "mlp": init_mlp(ks["b"], cfg)}
+    if kind == "moe_attn":
+        return {"norm1": n(), "attn": init_attention(ks["a"], cfg),
+                "norm2": n(), "moe": init_moe(ks["b"], cfg)}
+    if kind == "cross":
+        return {"norm1": n(), "cross": init_attention(ks["a"], cfg, cross=True),
+                "norm2": n(), "mlp": init_mlp(ks["b"], cfg)}
+    if kind == "dec_attn":
+        return {"norm1": n(), "attn": init_attention(ks["a"], cfg),
+                "norm_x": n(), "cross": init_attention(ks["c"], cfg, cross=True),
+                "norm2": n(), "mlp": init_mlp(ks["b"], cfg)}
+    if kind == "ssm":
+        return {"norm1": n(), "ssm": init_ssm(ks["a"], cfg)}
+    if kind == "rwkv":
+        return {"norm1": n(), "tm": init_time_mix(ks["a"], cfg),
+                "norm2": n(), "cm": init_channel_mix(ks["b"], cfg)}
+    raise ValueError(kind)
+
+
+def _init_pattern(key, pattern, cfg):
+    keys = jax.random.split(key, len(pattern))
+    return {
+        f"p{i}": _init_layer(keys[i], kind, cfg)
+        for i, kind in enumerate(pattern) if kind != "shared_attn"
+    }
+
+
+def init_params(key, cfg: ModelConfig) -> Dict[str, Any]:
+    plan = stage_plan(cfg)
+    ks = split_keys(key, ["embed", "stages", "shared", "final", "enc"])
+    params: Dict[str, Any] = {"embed": init_embed(ks["embed"], cfg),
+                              "final_norm": init_rmsnorm(cfg.d_model, cfg.param_dtype)}
+    skeys = jax.random.split(ks["stages"], len(plan))
+    stages = []
+    for (pattern, reps), sk in zip(plan, skeys):
+        if reps == 1 or not cfg.scan_layers:
+            rkeys = jax.random.split(sk, reps)
+            stages.append(jax.tree.map(
+                lambda *xs: jnp.stack(xs),
+                *[_init_pattern(rk, pattern, cfg) for rk in rkeys]))
+        else:
+            stages.append(jax.vmap(
+                lambda k: _init_pattern(k, pattern, cfg))(jax.random.split(sk, reps)))
+    params["stages"] = stages
+    if any("shared_attn" in pat for pat, _ in plan):
+        params["shared"] = _init_layer(ks["shared"], "shared_attn", cfg)
+    if cfg.encoder_layers:
+        ekeys = jax.random.split(ks["enc"], cfg.encoder_layers)
+        params["encoder"] = {
+            "stage": jax.vmap(
+                lambda k: _init_pattern(k, ("enc_attn",), cfg))(ekeys),
+            "norm": init_rmsnorm(cfg.d_model, cfg.param_dtype),
+        }
+    return params
+
+
+# ------------------------------------------------------------- forward train
+
+
+def _apply_layer(kind, p, x, cfg, memory):
+    """One layer, training/prefill. Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind in ("attn", "attn_local", "attn_global", "enc_attn", "shared_attn"):
+        causal = kind != "enc_attn"
+        x = x + attention(p["attn"], rmsnorm(p["norm1"], x, cfg.norm_eps), cfg,
+                          causal=causal, window=_kind_window(kind, cfg))
+        x = x + mlp(p["mlp"], rmsnorm(p["norm2"], x, cfg.norm_eps), cfg)
+    elif kind == "moe_attn":
+        x = x + attention(p["attn"], rmsnorm(p["norm1"], x, cfg.norm_eps), cfg,
+                          causal=True, window=_kind_window(kind, cfg))
+        y, aux = moe_ffn(p["moe"], rmsnorm(p["norm2"], x, cfg.norm_eps), cfg)
+        x = x + y
+    elif kind == "cross":
+        x = x + cross_attention(p["cross"], rmsnorm(p["norm1"], x, cfg.norm_eps),
+                                memory, cfg)
+        x = x + mlp(p["mlp"], rmsnorm(p["norm2"], x, cfg.norm_eps), cfg)
+    elif kind == "dec_attn":
+        x = x + attention(p["attn"], rmsnorm(p["norm1"], x, cfg.norm_eps), cfg,
+                          causal=True)
+        x = x + cross_attention(p["cross"], rmsnorm(p["norm_x"], x, cfg.norm_eps),
+                                memory, cfg)
+        x = x + mlp(p["mlp"], rmsnorm(p["norm2"], x, cfg.norm_eps), cfg)
+    elif kind == "ssm":
+        x = x + ssm_forward(p["ssm"], rmsnorm(p["norm1"], x, cfg.norm_eps), cfg)
+    elif kind == "rwkv":
+        x = x + time_mix_forward(p["tm"], rmsnorm(p["norm1"], x, cfg.norm_eps), cfg)
+        x = x + channel_mix_forward(p["cm"], rmsnorm(p["norm2"], x, cfg.norm_eps), cfg)
+    else:
+        raise ValueError(kind)
+    return x, aux
+
+
+def _apply_stage(stage_params, pattern, x, cfg, memory, shared):
+    def body(carry, pslice):
+        h, aux = carry
+        for i, kind in enumerate(pattern):
+            p = shared if kind == "shared_attn" else pslice[f"p{i}"]
+            h, a = _apply_layer(kind, p, h, cfg, memory)
+            aux = aux + a
+        h = logical(h, "batch", None, None)
+        return (h, aux), None
+
+    if cfg.remat:
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if cfg.remat_policy == "dots" else None)
+        body = jax.checkpoint(body, prevent_cse=False, policy=policy)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), stage_params)
+    return x, aux
+
+
+def forward_hidden(params, tokens, cfg: ModelConfig, memory=None):
+    """tokens (B,S) -> hidden (B,S,d), aux loss."""
+    x = embed(params["embed"], tokens, cfg)
+    if cfg.family == "audio" and memory is None:
+        raise ValueError("audio model needs encoder memory")
+    aux_total = jnp.zeros((), jnp.float32)
+    for stage_params, (pattern, _) in zip(params["stages"], stage_plan(cfg)):
+        x, aux = _apply_stage(stage_params, pattern, x, cfg, memory,
+                              params.get("shared"))
+        aux_total = aux_total + aux
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return x, aux_total
+
+
+def encode_frames(params, frames, cfg: ModelConfig):
+    """Whisper encoder over stubbed frame embeddings (B,F,d)."""
+    x = frames.astype(cfg.dtype)
+    x, _ = _apply_stage(params["encoder"]["stage"], ("enc_attn",), x, cfg,
+                        None, None)
+    return rmsnorm(params["encoder"]["norm"], x, cfg.norm_eps)
+
+
+def lm_loss(params, batch, cfg: ModelConfig):
+    """Next-token CE, chunked over the sequence so (S,V) logits are never
+    materialized at once (vocab up to 262k).  batch: dict with tokens,
+    labels, and optional memory/frames."""
+    memory = batch.get("memory")
+    if cfg.family == "audio":
+        memory = encode_frames(params, batch["frames"], cfg)
+    x, aux = forward_hidden(params, batch["tokens"], cfg, memory)
+    labels = batch["labels"]
+    B, S, _ = x.shape
+    C = min(LOSS_CHUNK, S)
+    pad = (-S) % C
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    nc = x.shape[1] // C
+    xc = x.reshape(B, nc, C, -1).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, nc, C).transpose(1, 0, 2)
+
+    def chunk_loss(carry, inp):
+        xch, lch = inp
+        logits = unembed(params["embed"], xch, cfg)  # f32 (B,C,V)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(lch, 0)[..., None], axis=-1)[..., 0]
+        valid = (lch >= 0).astype(jnp.float32)
+        nll = (lse - gold) * valid
+        return (carry[0] + jnp.sum(nll), carry[1] + jnp.sum(valid)), None
+
+    body = jax.checkpoint(chunk_loss, prevent_cse=False) if cfg.remat else chunk_loss
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())), (xc, lc))
+    loss = tot / jnp.maximum(cnt, 1.0)
+    if cfg.num_experts:
+        loss = loss + 0.01 * aux
+    return loss
+
+
+# ------------------------------------------------------------------- serving
+
+
+class DecodeCache(NamedTuple):
+    stages: Tuple[Any, ...]   # per stage: dict p{i} -> stacked layer caches
+    memory: Optional[jax.Array]  # VLM image / whisper encoder output
+
+
+def _init_layer_cache(kind, cfg, batch, max_seq, memory_len):
+    if kind in ("attn", "attn_local", "attn_global", "moe_attn", "shared_attn"):
+        return init_kv_cache(cfg, batch, max_seq, _kind_window(kind, cfg))
+    if kind == "cross":
+        return init_kv_cache(cfg, batch, memory_len)
+    if kind == "dec_attn":
+        return {"self": init_kv_cache(cfg, batch, max_seq),
+                "cross": init_kv_cache(cfg, batch, memory_len)}
+    if kind == "ssm":
+        return init_ssm_cache(cfg, batch)
+    if kind == "rwkv":
+        return init_rwkv_cache(cfg, batch)
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               memory_len: int = 0) -> DecodeCache:
+    stages = []
+    for pattern, reps in stage_plan(cfg):
+        one = {
+            f"p{i}": _init_layer_cache(kind, cfg, batch, max_seq, memory_len)
+            for i, kind in enumerate(pattern)
+        }
+        stages.append(jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (reps,) + x.shape), one))
+    mem = None
+    if memory_len:
+        mem = jnp.zeros((batch, memory_len, cfg.d_model), cfg.dtype)
+    return DecodeCache(tuple(stages), mem)
+
+
+def _cross_decode(p, x, kv: KVCache, cfg):
+    """Decode-time cross attention against precomputed memory K/V."""
+    B = x.shape[0]
+    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    dt = x.dtype
+    q = (x @ p["wq"].astype(dt)).reshape(B, 1, h, hd)
+    from .attention import _repeat_kv  # local import to reuse
+    kk = _repeat_kv(kv.k.astype(dt), h)
+    vv = _repeat_kv(kv.v.astype(dt), h)
+    s = jnp.einsum("bohd,bthd->bhot", q.astype(jnp.float32), kk.astype(jnp.float32))
+    s = s / jnp.sqrt(hd)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhot,bthd->bohd", w, vv.astype(jnp.float32))
+    return (o.reshape(B, 1, h * hd).astype(dt)) @ p["wo"].astype(dt)
+
+
+def _decode_layer(kind, p, x, cache, cfg):
+    if kind in ("attn", "attn_local", "attn_global", "moe_attn", "shared_attn"):
+        y, new = decode_attention(p["attn"], rmsnorm(p["norm1"], x, cfg.norm_eps),
+                                  cache, cfg, window=_kind_window(kind, cfg))
+        x = x + y
+        if kind == "moe_attn":
+            y, _ = moe_ffn(p["moe"], rmsnorm(p["norm2"], x, cfg.norm_eps), cfg)
+            x = x + y
+        else:
+            x = x + mlp(p["mlp"], rmsnorm(p["norm2"], x, cfg.norm_eps), cfg)
+        return x, new
+    if kind == "cross":
+        x = x + _cross_decode(p["cross"], rmsnorm(p["norm1"], x, cfg.norm_eps),
+                              cache, cfg)
+        x = x + mlp(p["mlp"], rmsnorm(p["norm2"], x, cfg.norm_eps), cfg)
+        return x, cache
+    if kind == "dec_attn":
+        y, new_self = decode_attention(
+            p["attn"], rmsnorm(p["norm1"], x, cfg.norm_eps), cache["self"], cfg)
+        x = x + y
+        x = x + _cross_decode(p["cross"], rmsnorm(p["norm_x"], x, cfg.norm_eps),
+                              cache["cross"], cfg)
+        x = x + mlp(p["mlp"], rmsnorm(p["norm2"], x, cfg.norm_eps), cfg)
+        return x, {"self": new_self, "cross": cache["cross"]}
+    if kind == "ssm":
+        y, new = ssm_decode(p["ssm"], rmsnorm(p["norm1"], x, cfg.norm_eps),
+                            cache, cfg)
+        return x + y, new
+    if kind == "rwkv":
+        y, new = time_mix_decode(p["tm"], rmsnorm(p["norm1"], x, cfg.norm_eps),
+                                 cache, cfg)
+        x = x + y
+        y, new = channel_mix_decode(p["cm"], rmsnorm(p["norm2"], x, cfg.norm_eps),
+                                    new, cfg)
+        return x + y, new
+    raise ValueError(kind)
+
+
+def decode_step(params, cache: DecodeCache, tokens, cfg: ModelConfig):
+    """tokens (B,1) -> (logits (B,1,V), new cache)."""
+    x = embed(params["embed"], tokens, cfg)
+    new_stages = []
+    for stage_params, stage_cache, (pattern, _) in zip(
+            params["stages"], cache.stages, stage_plan(cfg)):
+
+        def body(h, inp):
+            pslice, cslice = inp
+            new_c = {}
+            for i, kind in enumerate(pattern):
+                p = params.get("shared") if kind == "shared_attn" else pslice.get(f"p{i}")
+                h, new_c[f"p{i}"] = _decode_layer(kind, p, h, cslice[f"p{i}"], cfg)
+            return h, new_c
+
+        x, new_cache = jax.lax.scan(body, x, (stage_params, stage_cache))
+        new_stages.append(new_cache)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params["embed"], x, cfg)
+    return logits, DecodeCache(tuple(new_stages), cache.memory)

@@ -1,0 +1,83 @@
+"""Mixture-of-Experts FFN with top-k routing and capacity-bounded scatter
+dispatch (GShard-style, per-batch-row groups so the position-in-expert cumsum
+never crosses the sharded batch axis).
+
+Expert weights are stacked (E, d, f): shardable either on the expert axis
+(EP, when E % tp == 0) or on the FFN axis (Megatron-style TP inside each
+expert) -- the launcher picks via sharding rules ("experts" / "ff").
+Aux load-balancing loss follows Switch (mean gate fraction * token fraction).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, dense_init, logical, split_keys
+
+
+def init_moe(key, cfg: ModelConfig):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = split_keys(key, ["router", "gate", "up", "down"])
+    p = {
+        "router": dense_init(ks["router"], (d, e), 0, cfg.param_dtype),
+        "experts_up": dense_init(ks["up"], (e, d, f), 1, cfg.param_dtype),
+        "experts_down": dense_init(ks["down"], (e, f, d), 1, cfg.param_dtype),
+    }
+    if cfg.act == "swiglu":
+        p["experts_gate"] = dense_init(ks["gate"], (e, d, f), 1, cfg.param_dtype)
+    return p
+
+
+def moe_ffn(p, x, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    """x (B,S,d) -> (y (B,S,d), aux_loss scalar)."""
+    B, S, d = x.shape
+    E, K = cfg.num_experts, cfg.experts_per_token
+    dt = x.dtype
+    C = max(int(S * K / E * cfg.capacity_factor), 1)
+
+    logits = (x.astype(jnp.float32) @ p["router"].astype(jnp.float32))  # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, topk = jax.lax.top_k(probs, K)  # (B,S,K)
+    gates = gates / jnp.maximum(jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
+
+    # Switch aux loss: E * mean_e(fraction of tokens) * mean_e(gate mass)
+    token_frac = jnp.mean(
+        jax.nn.one_hot(topk[..., 0], E, dtype=jnp.float32), axis=(0, 1))
+    gate_frac = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(token_frac * gate_frac)
+
+    # position of each (token, k) inside its expert, per batch row
+    flat = topk.reshape(B, S * K)  # expert ids
+    oh = jax.nn.one_hot(flat, E, dtype=jnp.int32)  # (B, S*K, E)
+    pos = jnp.cumsum(oh, axis=1) - 1  # position within expert
+    pos_in_e = jnp.sum(pos * oh, axis=-1)  # (B, S*K)
+    keep = pos_in_e < C
+
+    # scatter tokens into (B, E, C, d) buffers
+    xrep = jnp.repeat(x, K, axis=1)  # (B, S*K, d) token copies
+    buf = jnp.zeros((B, E, C, d), dt)
+    bidx = jnp.arange(B)[:, None]
+    safe_pos = jnp.where(keep, pos_in_e, 0)
+    buf = buf.at[bidx, flat, jnp.where(keep, safe_pos, C - 1)].add(
+        jnp.where(keep[..., None], xrep, 0), mode="drop"
+    )
+    buf = logical(buf, "batch", "experts", None, None)
+
+    up = jnp.einsum("becd,edf->becf", buf, p["experts_up"].astype(dt))
+    if cfg.act == "swiglu":
+        g = jnp.einsum("becd,edf->becf", buf, p["experts_gate"].astype(dt))
+        h = jax.nn.silu(g) * up
+    else:
+        h = jax.nn.gelu(up)
+    # "moe_ff" maps to the model axis only when experts don't (EP vs TP)
+    h = logical(h, "batch", "experts", None, "moe_ff")
+    out_buf = jnp.einsum("becf,efd->becd", h, p["experts_down"].astype(dt))
+
+    # gather back and combine with gates
+    y_tok = out_buf[bidx, flat, safe_pos]  # (B, S*K, d)
+    y_tok = jnp.where(keep[..., None], y_tok, 0)
+    y_tok = y_tok * gates.reshape(B, S * K)[..., None].astype(dt)
+    y = jnp.sum(y_tok.reshape(B, S, K, d), axis=2)
+    return logical(y, "batch", None, None), aux

@@ -1,0 +1,194 @@
+"""RWKV6 ("Finch") time-mix + channel-mix, attention-free (data-dependent
+per-channel decay).
+
+Training/prefill uses chunked linear attention: within a small chunk the
+pairwise decay products are computed EXACTLY in log space (a (Q,Q,hd)
+broadcast, numerically safe because log-decays are <= 0 and only s<t terms
+are used); across chunks a ``lax.scan`` carries the per-head (hd x hd) wkv
+state with bounded factors exp(LW_end - LW_s) <= 1.  Decode is the O(1)
+recurrence.  This avoids the exp(-LW) overflow of the naive factorized GLA
+form without giving up the matmul formulation.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, dense_init, logical, split_keys
+from .layers import init_rmsnorm, rmsnorm
+
+_LORA_RANK = 64
+
+
+def _dims(cfg: ModelConfig):
+    d = cfg.d_model
+    hd = cfg.ssm_head_dim or 64
+    H = d // hd
+    return d, H, hd
+
+
+def init_time_mix(key, cfg: ModelConfig):
+    d, H, hd = _dims(cfg)
+    ks = split_keys(key, ["r", "k", "v", "g", "o", "wa", "wb", "mu", "w0", "u"])
+    return {
+        "wr": dense_init(ks["r"], (d, d), 0, cfg.param_dtype),
+        "wk": dense_init(ks["k"], (d, d), 0, cfg.param_dtype),
+        "wv": dense_init(ks["v"], (d, d), 0, cfg.param_dtype),
+        "wg": dense_init(ks["g"], (d, d), 0, cfg.param_dtype),
+        "wo": dense_init(ks["o"], (d, d), 0, cfg.param_dtype),
+        "w_lora_a": dense_init(ks["wa"], (d, _LORA_RANK), 0, cfg.param_dtype),
+        "w_lora_b": dense_init(ks["wb"], (_LORA_RANK, d), 0, cfg.param_dtype),
+        "mu": 0.5 * jnp.ones((5, d), cfg.param_dtype),  # r,k,v,w,g shift mix
+        "w0": jnp.full((d,), -0.6, cfg.param_dtype),    # base log-log decay
+        "u": jnp.zeros((H, hd), cfg.param_dtype),       # bonus
+        "ln_out": init_rmsnorm(d, cfg.param_dtype),
+    }
+
+
+def init_channel_mix(key, cfg: ModelConfig):
+    d = cfg.d_model
+    ks = split_keys(key, ["k", "v", "r", "mu"])
+    return {
+        "wk": dense_init(ks["k"], (d, cfg.d_ff), 0, cfg.param_dtype),
+        "wv": dense_init(ks["v"], (cfg.d_ff, d), 0, cfg.param_dtype),
+        "wr": dense_init(ks["r"], (d, d), 0, cfg.param_dtype),
+        "mu": 0.5 * jnp.ones((2, d), cfg.param_dtype),  # k,r shift mix
+    }
+
+
+def _shift(x, last=None):
+    """Token shift: x_{t-1} (zeros / `last` for t=0). x (B,S,d)."""
+    prev = jnp.zeros_like(x[:, :1]) if last is None else last[:, None, :]
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _mix(x, xprev, mu):
+    return x + (xprev - x) * mu.astype(x.dtype)
+
+
+def _projections(p, x, xprev, cfg: ModelConfig):
+    d, H, hd = _dims(cfg)
+    B, S, _ = x.shape
+    dt = x.dtype
+    mu = p["mu"]
+    r = _mix(x, xprev, mu[0]) @ p["wr"].astype(dt)
+    k = _mix(x, xprev, mu[1]) @ p["wk"].astype(dt)
+    v = _mix(x, xprev, mu[2]) @ p["wv"].astype(dt)
+    xw = _mix(x, xprev, mu[3])
+    g = _mix(x, xprev, mu[4]) @ p["wg"].astype(dt)
+    wl = jnp.tanh(xw @ p["w_lora_a"].astype(dt)) @ p["w_lora_b"].astype(dt)
+    logw = -jnp.exp(
+        jnp.clip(p["w0"].astype(jnp.float32) + wl.astype(jnp.float32), -8.0, 4.0)
+    )  # (B,S,d) <= 0: per-channel log decay
+    rs = r.reshape(B, S, H, hd)
+    ks_ = k.reshape(B, S, H, hd)
+    vs = v.reshape(B, S, H, hd)
+    lw = logw.reshape(B, S, H, hd)
+    return rs, ks_, vs, lw, g
+
+
+class RwkvCache(NamedTuple):
+    state: jax.Array    # (B, H, hd, hd) wkv state (k-dim x v-dim), f32
+    last_tm: jax.Array  # (B, d) last input of time-mix
+    last_cm: jax.Array  # (B, d) last input of channel-mix
+    length: jax.Array
+
+
+def init_rwkv_cache(cfg: ModelConfig, batch: int, dtype=None) -> RwkvCache:
+    d, H, hd = _dims(cfg)
+    dt = dtype or cfg.dtype
+    return RwkvCache(
+        jnp.zeros((batch, H, hd, hd), jnp.float32),
+        jnp.zeros((batch, d), dt),
+        jnp.zeros((batch, d), dt),
+        jnp.zeros((), jnp.int32),
+    )
+
+
+def time_mix_forward(p, x, cfg: ModelConfig):
+    """x (B,S,d) -> (B,S,d); chunked scan over the wkv state."""
+    d, H, hd = _dims(cfg)
+    B, S, _ = x.shape
+    dt_c = x.dtype
+    r, k, v, lw, g = _projections(p, x, _shift(x), cfg)
+    u = p["u"].astype(jnp.float32)
+
+    Q = min(cfg.rwkv_chunk, S)
+    pad = (-S) % Q
+    if pad:
+        z4 = ((0, 0), (0, pad), (0, 0), (0, 0))
+        r, k, v = (jnp.pad(t, z4) for t in (r, k, v))
+        lw = jnp.pad(lw, z4)
+    nc = r.shape[1] // Q
+
+    def to_chunks(t):
+        return t.reshape(B, nc, Q, H, hd).transpose(1, 0, 3, 2, 4)  # (nc,B,H,Q,hd)
+
+    rc, kc, vc, lwc = map(to_chunks, (r, k, v, lw))
+
+    def body(state, inp):
+        rq, kq, vq, lwq = (t.astype(jnp.float32) for t in inp)  # (B,H,Q,hd)
+        cum = jnp.cumsum(lwq, axis=2)                 # LW_t inclusive
+        cum_in = cum - lwq                            # LW_{t-1} (decay from start to t-1)
+        # inter: y_t = (r_t . exp(cum_in_t)) @ state
+        y = jnp.einsum("bhqc,bhcv->bhqv", rq * jnp.exp(cum_in), state)
+        # intra (exact, s<t): A[t,s] = sum_c r_tc k_sc exp(cum_in_t - cum_s)
+        dec = jnp.exp(cum_in[:, :, :, None, :] - cum[:, :, None, :, :])  # (B,H,t,s,hd)
+        mask = jnp.tril(jnp.ones((Q, Q), bool), k=-1)
+        a = jnp.einsum("bhtc,bhsc,bhtsc->bhts",
+                       rq, kq, jnp.where(mask[None, None, :, :, None], dec, 0.0))
+        y += jnp.einsum("bhts,bhsv->bhtv", a, vq)
+        # bonus diagonal: r_t . diag(u) k_t v_t
+        diag = jnp.sum(rq * u[None, :, None, :] * kq, axis=-1)  # (B,H,Q)
+        y += diag[..., None] * vq
+        # state update: S' = diag(exp(LW_end)) S + sum_s exp(LW_end - LW_s) k_s v_s
+        tot = cum[:, :, -1:, :]                        # (B,H,1,hd)
+        kd = kq * jnp.exp(tot - cum)                   # bounded <= 1 factors
+        state = state * jnp.exp(tot[:, :, 0, :])[..., None] + jnp.einsum(
+            "bhsc,bhsv->bhcv", kd, vq)
+        return state, y
+
+    state0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    _, yc = jax.lax.scan(body, state0, (rc, kc, vc, lwc))
+    # yc: (nc, B, H, Q, hd) -> (B, nc, Q, H, hd) -> (B, S, d)
+    y = yc.transpose(1, 0, 3, 2, 4).reshape(B, nc * Q, H * hd)[:, :S]
+    y = rmsnorm(p["ln_out"], y.astype(dt_c), cfg.norm_eps)
+    y = y * jax.nn.silu(g)
+    return y @ p["wo"].astype(dt_c)
+
+
+def time_mix_decode(p, x, cache: RwkvCache, cfg: ModelConfig):
+    """x (B,1,d) one-token decode."""
+    d, H, hd = _dims(cfg)
+    B = x.shape[0]
+    dt_c = x.dtype
+    r, k, v, lw, g = _projections(p, x, cache.last_tm[:, None, :].astype(dt_c), cfg)
+    rq, kq, vq = (t[:, 0].astype(jnp.float32) for t in (r, k, v))  # (B,H,hd)
+    lwq = lw[:, 0].astype(jnp.float32)
+    u = p["u"].astype(jnp.float32)
+    # y = r . (state + diag(u) k^T v)
+    y = jnp.einsum("bhc,bhcv->bhv", rq, cache.state)
+    y += jnp.sum(rq * u[None] * kq, axis=-1)[..., None] * vq
+    state = cache.state * jnp.exp(lwq)[..., None] + kq[..., None] * vq[:, :, None, :]
+    y = y.reshape(B, 1, d).astype(dt_c)
+    y = rmsnorm(p["ln_out"], y, cfg.norm_eps) * jax.nn.silu(g)
+    out = y @ p["wo"].astype(dt_c)
+    return out, RwkvCache(state, x[:, 0], cache.last_cm, cache.length + 1)
+
+
+def channel_mix_forward(p, x, cfg: ModelConfig, last=None):
+    dt = x.dtype
+    xprev = _shift(x, last)
+    mu = p["mu"]
+    k = _mix(x, xprev, mu[0]) @ p["wk"].astype(dt)
+    r = _mix(x, xprev, mu[1]) @ p["wr"].astype(dt)
+    h = jnp.square(jax.nn.relu(k))
+    h = logical(h, "batch", None, "ff")
+    return jax.nn.sigmoid(r) * (h @ p["wv"].astype(dt))
+
+
+def channel_mix_decode(p, x, cache: RwkvCache, cfg: ModelConfig):
+    out = channel_mix_forward(p, x, cfg, last=cache.last_cm.astype(x.dtype))
+    return out, cache._replace(last_cm=x[:, 0])

@@ -1,0 +1,164 @@
+"""Mamba2 (SSD) layer: chunked matmul-form state-space scan (TPU-native).
+
+Training/prefill uses the state-space-duality chunked algorithm: within a
+chunk of Q tokens everything is dense matmuls with an exact (Q,Q) decay
+matrix per head (the per-head decay is scalar, so no log-space tricks are
+needed); across chunks a ``lax.scan`` carries the (H,N,P) state.  Decode is
+the O(1) recurrence on the same state plus a depthwise-conv ring cache.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, dense_init, logical, split_keys
+from .layers import init_rmsnorm, rmsnorm
+
+
+def _dims(cfg: ModelConfig):
+    di = cfg.d_inner
+    H = cfg.ssm_heads
+    P = cfg.ssm_head_dim
+    N = cfg.ssm_state
+    conv_ch = di + 2 * N
+    return di, H, P, N, conv_ch
+
+
+def init_ssm(key, cfg: ModelConfig):
+    di, H, P, N, conv_ch = _dims(cfg)
+    d = cfg.d_model
+    ks = split_keys(key, ["in", "out", "conv", "A", "dt"])
+    return {
+        "in_proj": dense_init(ks["in"], (d, 2 * di + 2 * N + H), 0, cfg.param_dtype),
+        "out_proj": dense_init(ks["out"], (di, d), 0, cfg.param_dtype),
+        "conv_w": dense_init(ks["conv"], (cfg.ssm_conv, conv_ch), 0, cfg.param_dtype),
+        "A_log": jnp.zeros((H,), cfg.param_dtype),
+        "D": jnp.ones((H,), cfg.param_dtype),
+        "dt_bias": jnp.zeros((H,), cfg.param_dtype),
+        "norm": init_rmsnorm(di, cfg.param_dtype),
+    }
+
+
+def _split_proj(p, u, cfg: ModelConfig):
+    di, H, P, N, conv_ch = _dims(cfg)
+    zxbcdt = u @ p["in_proj"].astype(u.dtype)
+    z, xbc, dt = jnp.split(zxbcdt, [di, di + conv_ch], axis=-1)
+    return z, xbc, dt
+
+
+def _conv_train(p, xbc, cfg: ModelConfig):
+    """Causal depthwise conv over (B,S,ch)."""
+    kw = cfg.ssm_conv
+    w = p["conv_w"].astype(xbc.dtype)  # (kw, ch)
+    pad = jnp.pad(xbc, ((0, 0), (kw - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i] for i in range(kw))
+    return jax.nn.silu(out)
+
+
+class SSMCache(NamedTuple):
+    state: jax.Array       # (B, H, N, P)
+    conv: jax.Array        # (B, kw-1, conv_ch)
+    length: jax.Array      # () int32
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype=None) -> SSMCache:
+    di, H, P, N, conv_ch = _dims(cfg)
+    dt = dtype or cfg.dtype
+    return SSMCache(
+        jnp.zeros((batch, H, N, P), jnp.float32),
+        jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), dt),
+        jnp.zeros((), jnp.int32),
+    )
+
+
+def ssm_forward(p, u, cfg: ModelConfig):
+    """u (B,S,d_model) -> (B,S,d_model), chunked SSD scan."""
+    di, H, P, N, _ = _dims(cfg)
+    B, S, _ = u.shape
+    dt_c = u.dtype
+    z, xbc, dt_raw = _split_proj(p, u, cfg)
+    xbc = _conv_train(p, xbc, cfg)
+    x, Bm, Cm = jnp.split(xbc, [di, di + N], axis=-1)
+    x = x.reshape(B, S, H, P)
+    x = logical(x, "batch", None, "heads", None)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))  # (B,S,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))  # (H,) negative
+    a = dt * A  # (B,S,H) per-step log decay
+
+    Q = min(cfg.ssm_chunk, S)
+    pad = (-S) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+    nc = x.shape[1] // Q
+
+    def to_chunks(t):
+        return t.reshape((B, nc, Q) + t.shape[2:]).transpose(
+            (1, 0, 2) + tuple(range(3, t.ndim + 1)))
+
+    xc, bc, cc, dtc, ac = map(to_chunks, (x, Bm, Cm, dt, a))
+
+    def body(state, inp):
+        xq, bq, cq, dtq, aq = inp  # (B,Q,...)
+        cum = jnp.cumsum(aq, axis=1)  # (B,Q,H)
+        # intra-chunk: y[t] = sum_{s<=t} exp(cum_t-cum_s) (C_t.B_s) dt_s x_s
+        scores = jnp.einsum("btn,bsn->bts", cq.astype(jnp.float32),
+                            bq.astype(jnp.float32))  # (B,Q,Q)
+        decay = cum[:, :, None, :] - cum[:, None, :, :]  # (B,t,s,H)
+        mask = jnp.tril(jnp.ones((Q, Q), bool))
+        L = jnp.where(mask[None, :, :, None], jnp.exp(decay), 0.0)
+        w_ts = scores[..., None] * L  # (B,t,s,H)
+        dx = dtq[..., None] * xq.astype(jnp.float32)  # (B,Q,H,P)
+        y = jnp.einsum("btsh,bshp->bthp", w_ts, dx)
+        # inter-chunk: y[t] += exp(cum_t) C_t . state
+        y += jnp.einsum("btn,bhnp,bth->bthp", cq.astype(jnp.float32), state,
+                        jnp.exp(cum))
+        # state update
+        tot = cum[:, -1:, :]  # (B,1,H)
+        sdecay = jnp.exp(tot - cum)  # (B,Q,H) decay from s to chunk end
+        state = state * jnp.exp(tot[:, 0, :])[:, :, None, None] + jnp.einsum(
+            "bsh,bsn,bshp->bhnp", sdecay, bq.astype(jnp.float32), dx)
+        return state, y.astype(dt_c)
+
+    state0 = jnp.zeros((B, H, N, P), jnp.float32)
+    _, yc = jax.lax.scan(body, state0, (xc, bc, cc, dtc, ac))
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(B, nc * Q, H, P)[:, :S]
+    y = y + x[:, :S] * p["D"].astype(dt_c)[None, None, :, None]
+    y = y.reshape(B, S, di)
+    y = rmsnorm(p["norm"], y, cfg.norm_eps) * jax.nn.silu(z)
+    return y @ p["out_proj"].astype(dt_c)
+
+
+def ssm_decode(p, u, cache: SSMCache, cfg: ModelConfig) -> Tuple[jax.Array, SSMCache]:
+    """One-token decode: u (B,1,d_model) -> (B,1,d_model) + new cache."""
+    di, H, P, N, conv_ch = _dims(cfg)
+    B = u.shape[0]
+    dt_c = u.dtype
+    z, xbc, dt_raw = _split_proj(p, u, cfg)
+    # conv ring: window = [cache (kw-1), new]
+    win = jnp.concatenate([cache.conv, xbc.astype(cache.conv.dtype)], axis=1)
+    w = p["conv_w"].astype(jnp.float32)  # (kw, ch)
+    conv_out = jnp.sum(win.astype(jnp.float32) * w[None], axis=1)  # (B,ch)
+    xbc1 = jax.nn.silu(conv_out).astype(dt_c)
+    x, Bm, Cm = jnp.split(xbc1, [di, di + N], axis=-1)
+    x = x.reshape(B, H, P)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))  # (B,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * A)  # (B,H)
+    inc = jnp.einsum("bh,bn,bhp->bhnp", dt, Bm.astype(jnp.float32),
+                     x.astype(jnp.float32))
+    state = cache.state * decay[..., None, None] + inc
+    y = jnp.einsum("bn,bhnp->bhp", Cm.astype(jnp.float32), state)
+    y = y + x.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(B, 1, di).astype(dt_c)
+    y = rmsnorm(p["norm"], y, cfg.norm_eps) * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(dt_c)
+    new_cache = SSMCache(state, win[:, 1:], cache.length + 1)
+    return out, new_cache

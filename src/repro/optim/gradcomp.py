@@ -1,0 +1,93 @@
+"""IDEALEM gradient compression with error feedback (beyond-paper feature).
+
+At 1000+ nodes the cross-pod gradient reduction is the scarcest link
+(DCN/ICI ~50 GB/s vs 197 TFLOP/s).  We apply the paper's exchangeability
+coding to flattened gradient blocks: blocks that are statistically
+exchangeable with a dictionary entry (two-sample KS + min/max gate) are
+replaced by a 1-byte index on the wire; the receiver substitutes the
+dictionary block values.  Unlike telemetry, gradients are order-sensitive,
+so substitution is *duplication* (paper Sec. V-B2 semantics, no random
+permutation) and the resulting per-coordinate error is fed back into the
+next step's gradient (error-feedback accumulator), which restores
+convergence in expectation.
+
+``compress()`` is a pure jittable function: decisions on device, the wire
+byte accounting is returned as metrics (1 byte/hit-block vs 4*B bytes).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.encoder import encode_decisions
+from repro.core.ks import critical_distance
+
+
+class GradCompState(NamedTuple):
+    residual: dict  # error-feedback accumulator, mirrors params
+
+
+def init(params) -> GradCompState:
+    return GradCompState(
+        jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+@functools.partial(jax.jit, static_argnames=("block", "num_dict", "d_crit", "rel_tol"))
+def _compress_flat(flat: jax.Array, *, block: int, num_dict: int,
+                   d_crit: float, rel_tol: float):
+    n = flat.shape[0]
+    nb = n // block
+    blocks = flat[: nb * block].reshape(nb, block)
+    is_hit, slot, _ = encode_decisions(
+        blocks, num_dict=num_dict, d_crit=d_crit, rel_tol=rel_tol)
+    # receiver-side reconstruction: hit blocks replaced by their dictionary
+    # entry (the most recent miss stored in that slot)
+    miss_idx = jnp.where(~is_hit, jnp.arange(nb), -1)
+    # for each slot, the index of the last miss written to it, per block time
+    def scan_fn(carry, inp):
+        slots_last = carry  # (num_dict,) last miss block idx per slot
+        hit, s, i = inp
+        slots_last = jnp.where(
+            (~hit) & (jnp.arange(num_dict) == s), i, slots_last)
+        src = jnp.where(hit, slots_last[s], i)
+        return slots_last, src
+
+    _, src = jax.lax.scan(
+        scan_fn, jnp.zeros((num_dict,), jnp.int32),
+        (is_hit, slot, jnp.arange(nb, dtype=jnp.int32)))
+    recon_blocks = blocks[src]
+    recon = jnp.concatenate([recon_blocks.reshape(-1), flat[nb * block:]])
+    hits = jnp.sum(is_hit)
+    bytes_orig = jnp.asarray(nb * block * 4, jnp.float32)
+    bytes_wire = hits * 1.0 + (nb - hits) * (block * 4.0 + 1.0)
+    return recon, {"hit_rate": hits / jnp.maximum(nb, 1),
+                   "wire_ratio": bytes_orig / jnp.maximum(bytes_wire, 1.0)}
+
+
+def compress(grads, state: GradCompState, *, block: int = 256,
+             num_dict: int = 32, alpha: float = 0.05,
+             rel_tol: float = 0.5) -> Tuple[dict, GradCompState, dict]:
+    """grads + error feedback -> (transmitted grads, new state, metrics)."""
+    d_crit = critical_distance(alpha, block, block)
+    leaves, treedef = jax.tree.flatten(grads)
+    res_leaves = jax.tree.leaves(state.residual)
+    sizes = [x.size for x in leaves]
+    flat = jnp.concatenate(
+        [(g.astype(jnp.float32) + r.astype(jnp.float32)).reshape(-1)
+         for g, r in zip(leaves, res_leaves)])
+    recon, metrics = _compress_flat(
+        flat, block=block, num_dict=num_dict, d_crit=float(d_crit),
+        rel_tol=rel_tol)
+    err = flat - recon
+    out, res = [], []
+    off = 0
+    for g, sz in zip(leaves, sizes):
+        out.append(recon[off:off + sz].reshape(g.shape).astype(g.dtype))
+        res.append(err[off:off + sz].reshape(g.shape))
+        off += sz
+    return (jax.tree.unflatten(treedef, out),
+            GradCompState(jax.tree.unflatten(treedef, res)),
+            metrics)

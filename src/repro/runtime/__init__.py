@@ -1,0 +1,3 @@
+from .driver import FaultTolerantTrainer, FaultInjector, SimulatedFailure
+
+__all__ = ["FaultTolerantTrainer", "FaultInjector", "SimulatedFailure"]

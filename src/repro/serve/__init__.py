@@ -1,0 +1,3 @@
+from .engine import ServeEngine, prefill_step, serve_step
+
+__all__ = ["ServeEngine", "prefill_step", "serve_step"]

@@ -1,0 +1,78 @@
+"""Serving: prefill + batched decode with per-kind caches.
+
+``serve_step`` is the unit the multi-pod dry-run lowers for decode shapes:
+one new token against a KV/state cache of the configured context length.
+``ServeEngine`` is the host loop: batch requests, prefill, decode until done
+(static batch; slots refill between generations).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import ModelConfig
+from repro.models import lm
+from repro.models.lm import DecodeCache, decode_step, init_cache
+
+
+def serve_step(params, cache: DecodeCache, tokens, cfg: ModelConfig):
+    """One decode step: tokens (B,1) -> (logits (B,1,V), new cache)."""
+    return decode_step(params, cache, tokens, cfg)
+
+
+def prefill_step(params, tokens, cfg: ModelConfig, memory=None):
+    """Full-prompt forward -> logits for the last position.
+
+    This is what the `prefill_*` dry-run shapes lower: the quadratic/chunked
+    attention pass at the full context length (no backward).
+    """
+    x, _ = lm.forward_hidden(params, tokens, cfg, memory)
+    from repro.models.layers import unembed
+    return unembed(params["embed"], x[:, -1:, :], cfg)
+
+
+@dataclass
+class ServeEngine:
+    cfg: ModelConfig
+    params: Any
+    max_seq: int = 2048
+    memory_len: int = 0
+    temperature: float = 0.0
+    _decode: Optional[Callable] = None
+
+    def __post_init__(self):
+        self._decode = jax.jit(
+            functools.partial(decode_step, cfg=self.cfg))
+
+    def generate(self, prompts: np.ndarray, num_tokens: int,
+                 seed: int = 0) -> np.ndarray:
+        """prompts (B, P) int32 -> (B, num_tokens) greedy/sampled tokens.
+
+        Prefill is run through the decode path token-by-token for cache
+        consistency on heterogeneous stacks (attn/ssm/rwkv mixes); production
+        prefill for pure-attention stacks can use `prefill_step` + cache
+        scatter instead.
+        """
+        B, P = prompts.shape
+        cache = init_cache(self.cfg, B, self.max_seq, self.memory_len)
+        logits = None
+        for t in range(P):
+            logits, cache = self._decode(self.params, cache, prompts[:, t:t + 1])
+        out = []
+        key = jax.random.key(seed)
+        tok = None
+        for t in range(num_tokens):
+            if self.temperature > 0:
+                key, sk = jax.random.split(key)
+                tok = jax.random.categorical(
+                    sk, logits[:, -1] / self.temperature)[:, None]
+            else:
+                tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+            out.append(np.asarray(tok))
+            logits, cache = self._decode(self.params, cache, tok.astype(jnp.int32))
+        return np.concatenate(out, axis=1)

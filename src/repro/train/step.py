@@ -1,0 +1,80 @@
+"""Training step: microbatched grad accumulation + AdamW (+ optional IDEALEM
+gradient compression with error feedback).
+
+Microbatching bounds the activation working set (remat checkpoints scale with
+the microbatch, not the global batch) -- the knob that makes 32k-token
+sequences fit HBM.  The accumulation loop is a ``lax.scan`` so HLO stays
+O(1) in the number of microbatches.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+from repro.models.lm import init_params, lm_loss
+from repro.optim import adamw, gradcomp
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: adamw.AdamWState
+    gradcomp: Optional[gradcomp.GradCompState]
+
+
+def init_train_state(key, cfg: ModelConfig, use_gradcomp: bool = False) -> TrainState:
+    params = init_params(key, cfg)
+    gc = gradcomp.init(params) if use_gradcomp else None
+    return TrainState(params, adamw.init(params), gc)
+
+
+def make_train_step(cfg: ModelConfig, *, lr=3e-4, microbatches: int = 1,
+                    weight_decay: float = 0.1, clip_norm: float = 1.0,
+                    use_gradcomp: bool = False,
+                    gradcomp_kw: Optional[dict] = None) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    batch dict leaves have leading dim B_global, divisible by `microbatches`.
+    """
+
+    def loss_fn(params, mb):
+        return lm_loss(params, mb, cfg)
+
+    def train_step(state: TrainState, batch):
+        def split_mb(x):
+            b = x.shape[0]
+            return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+
+        mbs = jax.tree.map(split_mb, batch)
+        zero_grads = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+
+        def acc(carry, mb):
+            loss_sum, grads = carry
+            loss, g = jax.value_and_grad(loss_fn)(state.params, mb)
+            grads = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), grads, g)
+            return (loss_sum + loss, grads), None
+
+        (loss_sum, grads), _ = jax.lax.scan(
+            acc, (jnp.zeros(()), zero_grads), mbs)
+        inv = 1.0 / microbatches
+        grads = jax.tree.map(lambda g: g * inv, grads)
+        loss = loss_sum * inv
+
+        metrics = {"loss": loss}
+        gc_state = state.gradcomp
+        if use_gradcomp:
+            grads, gc_state, gc_metrics = gradcomp.compress(
+                grads, gc_state, **(gradcomp_kw or {}))
+            metrics.update(gc_metrics)
+
+        params, opt, opt_metrics = adamw.update(
+            grads, state.opt, state.params, lr=lr,
+            weight_decay=weight_decay, clip_norm=clip_norm)
+        metrics.update(opt_metrics)
+        return TrainState(params, opt, gc_state), metrics
+
+    return train_step

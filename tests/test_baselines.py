@@ -1,0 +1,47 @@
+"""Error-bound and roundtrip checks for the comparison codecs."""
+import numpy as np
+import pytest
+
+from repro.baselines import IsabelaLikeCodec, SzLikeCodec, ZfpLikeCodec
+
+
+def _signal(n=20_000, seed=0):
+    rng = np.random.default_rng(seed)
+    t = np.arange(n)
+    return np.sin(t * 0.01) * 10 + rng.normal(0, 0.05, n)
+
+
+@pytest.mark.parametrize("n", [0, 1, 5, 4096, 20_000])
+def test_zfp_like_roundtrip_and_bound(n):
+    x = _signal(max(n, 1))[:n]
+    c = ZfpLikeCodec(tolerance=1e-2)
+    y = c.decode(c.encode(x))
+    assert len(y) == n
+    if n:
+        assert np.max(np.abs(x - y)) < 4 * c.tolerance  # transform constant
+
+
+def test_sz_like_roundtrip_and_bound():
+    x = _signal()
+    c = SzLikeCodec(rel_bound_ratio=1e-3)
+    y = c.decode(c.encode(x))
+    rng = x.max() - x.min()
+    assert len(y) == len(x)
+    assert np.max(np.abs(x - y)) <= 1e-3 * rng * (1 + 1e-9)
+
+
+def test_isabela_like_roundtrip_and_relative_bound():
+    x = _signal()
+    c = IsabelaLikeCodec(window=512, num_coeff=15, error_rate=5.0)
+    y = c.decode(c.encode(x))
+    assert len(y) == len(x)
+    scale = np.maximum(np.abs(x), 1e-30)
+    # per-point relative bound honored (corrections patch violations)
+    assert np.max(np.abs(x - y) / scale) <= 0.05 + 1e-9
+
+
+def test_ratios_compress_at_all():
+    x = _signal()
+    for c in [ZfpLikeCodec(1e-2), SzLikeCodec(1e-3), IsabelaLikeCodec()]:
+        blob = c.encode(x)
+        assert x.nbytes / len(blob) > 1.5

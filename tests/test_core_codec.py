@@ -1,0 +1,182 @@
+"""End-to-end codec properties: roundtrip, format, theory limits, decisions."""
+import numpy as np
+import pytest
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import IdealemCodec
+from repro.core.npref import encode_decisions_np
+from repro.core.encoder import encode_decisions
+from repro.core.stream import parse_stream
+
+
+def _stationary(n, seed=0):
+    return np.random.default_rng(seed).normal(0.0, 1.0, size=n)
+
+
+def _ramp_angles(n, slope=0.7, noise=0.05, seed=0):
+    rng = np.random.default_rng(seed)
+    t = np.arange(n, dtype=np.float64)
+    return np.mod(t * slope + rng.normal(0, noise, size=n), 360.0)
+
+
+# --------------------------------------------------------------- decisions
+@pytest.mark.parametrize("num_dict", [1, 2, 7, 255])
+@pytest.mark.parametrize("use_minmax", [True, False])
+def test_jax_decisions_match_numpy_reference(num_dict, use_minmax):
+    rng = np.random.default_rng(42)
+    # mixture of three sources => hits, misses and overwrites all occur
+    blocks = np.concatenate([
+        rng.normal(m, s, size=(30, 24)) for m, s in [(0, 1), (5, 0.5), (0, 1)]
+    ]).astype(np.float32)
+    kw = dict(num_dict=num_dict, d_crit=0.4, rel_tol=0.5, use_minmax=use_minmax)
+    ref = encode_decisions_np(blocks, **kw)
+    import jax.numpy as jnp
+    out = encode_decisions(jnp.asarray(blocks), **kw)
+    for r, o in zip(ref, out):
+        np.testing.assert_array_equal(r, np.asarray(o))
+
+
+# --------------------------------------------------------------- roundtrip
+@pytest.mark.parametrize("mode", ["std", "residual", "delta"])
+@pytest.mark.parametrize("num_dict", [1, 3, 255])
+def test_roundtrip_length_and_misses(mode, num_dict):
+    vr = (0.0, 360.0) if mode != "std" else None
+    x = _ramp_angles(16 * 40 + 5) if mode != "std" else _stationary(16 * 40 + 5)
+    c = IdealemCodec(mode=mode, block_size=16, num_dict=num_dict, alpha=0.05,
+                     rel_tol=0.5, value_range=vr, backend="numpy")
+    blob = c.encode(x)
+    y = c.decode(blob)
+    assert len(y) == len(x)
+    # tail is verbatim
+    np.testing.assert_allclose(y[-5:], x[-5:])
+    # miss blocks reconstruct (near-)exactly
+    _, events = parse_stream(blob)
+    B = c.block_size
+    for i, ev in enumerate(events):
+        if ev["kind"] == "miss":
+            tol = 0 if mode != "delta" else 1e-9  # delta re-accumulates
+            np.testing.assert_allclose(y[i * B:(i + 1) * B], x[i * B:(i + 1) * B],
+                                       atol=tol)
+
+
+def test_std_hits_are_permutations_of_dictionary_entry():
+    x = _stationary(32 * 100)
+    c = IdealemCodec(mode="std", block_size=32, num_dict=255, alpha=0.01,
+                     rel_tol=0.5, backend="numpy")
+    blob = c.encode(x)
+    y = c.decode(blob)
+    _, events = parse_stream(blob)
+    dictionary = {}
+    B = c.block_size
+    n_hits = 0
+    for i, ev in enumerate(events):
+        if ev["kind"] == "miss":
+            dictionary[ev["slot"]] = ev["payload"]
+        else:
+            n_hits += 1
+            got = np.sort(y[i * B:(i + 1) * B])
+            want = np.sort(dictionary[ev["slot"]])
+            np.testing.assert_array_equal(got, want)  # multiset equality
+    assert n_hits > 50  # stationary noise must compress
+
+
+def test_statistical_similarity_preserved():
+    """The paper's exact guarantee: every decoded block is within the KS
+    acceptance distance d_crit of its original block (hits are permutations
+    of a dictionary entry that passed the test; misses are verbatim)."""
+    import scipy.stats
+    x = _stationary(32 * 300)
+    c = IdealemCodec(mode="std", block_size=32, num_dict=255, alpha=0.01,
+                     rel_tol=0.5, backend="numpy")
+    y = c.decode(c.encode(x))
+    B = c.block_size
+    for i in range(len(x) // B):
+        d = scipy.stats.ks_2samp(x[i * B:(i + 1) * B], y[i * B:(i + 1) * B]).statistic
+        assert d <= c.d_crit + 1e-9
+    # and the global distribution stays sane (block-level alpha, not global)
+    assert scipy.stats.ks_2samp(x, y).statistic < 0.25
+
+
+def test_residual_mode_wraps_into_range():
+    x = _ramp_angles(112 * 60)
+    c = IdealemCodec(mode="residual", block_size=112, num_dict=255, alpha=0.01,
+                     rel_tol=0.5, value_range=(0.0, 360.0), backend="numpy")
+    y = c.decode(c.encode(x))
+    assert np.all(y >= 0.0) and np.all(y < 360.0)
+    # circular error should be small (wrap-aware)
+    err = np.abs(y - x)
+    err = np.minimum(err, 360.0 - err)
+    assert np.percentile(err, 95) < 20.0
+
+
+# ------------------------------------------------------------ theory limits
+def test_prop_6_1_std_ratio_limit():
+    """Ratio -> 8B on a single-source stream; never exceeds it."""
+    B = 16
+    x = _stationary(B * 4000)
+    c = IdealemCodec(mode="std", block_size=B, num_dict=4, alpha=0.01,
+                     rel_tol=0.5, backend="numpy")
+    blob = c.encode(x)
+    ratio = c.compression_ratio(x, blob)
+    assert ratio <= 8 * B + 1e-9
+    assert ratio > 0.8 * 8 * B  # single gaussian source compresses near limit
+
+
+def test_cor_6_1_single_dict_byte_accounting():
+    """Cor. 6.1: ideal single-source stream costs 8B + ceil(i/c) body bytes,
+    so the D=1 mode exceeds the multi-dict 8B limit (and -> 8cB as i -> inf)."""
+    B, cmax, nb = 16, 255, 4000
+    x = np.tile(_stationary(B), nb)  # identical blocks: ideal stream
+    c = IdealemCodec(mode="std", block_size=B, num_dict=1, alpha=0.01,
+                     rel_tol=0.5, max_count=cmax, backend="numpy")
+    blob = c.encode(x)
+    i = nb - 1  # hits after the initiating block
+    header = len(c.encode(np.zeros(0)))  # fixed header cost
+    assert len(blob) == header + 8 * B + int(np.ceil(i / cmax))
+    ratio = c.compression_ratio(x, blob)
+    assert ratio <= 8 * cmax * B
+    assert ratio > 8 * B  # beats the multi-dict limit (Prop 6.1)
+
+
+def test_prop_6_2_residual_ratio_limit():
+    B = 112
+    x = _ramp_angles(B * 2000, noise=0.01)
+    c = IdealemCodec(mode="residual", block_size=B, num_dict=4, alpha=0.01,
+                     rel_tol=0.5, value_range=(0.0, 360.0), backend="numpy")
+    ratio = c.compression_ratio(x, c.encode(x))
+    limit = (8.0 / 9.0) * B
+    assert ratio <= limit + 1e-9
+    assert ratio > 0.8 * limit
+
+
+# ------------------------------------------------------------ property tests
+@given(st.integers(min_value=2, max_value=6),
+       st.integers(min_value=1, max_value=5),
+       st.integers(min_value=0, max_value=2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_roundtrip_any_shape(bexp, ndexp, seed):
+    B = 2 ** bexp
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(0, B * 50))
+    x = rng.normal(size=n)
+    c = IdealemCodec(mode="std", block_size=B, num_dict=2 ** ndexp - 1 or 1,
+                     alpha=0.05, rel_tol=0.4, backend="numpy")
+    y = c.decode(c.encode(x))
+    assert len(y) == len(x)
+    # global multiset is drawn from stored blocks + tail: value range preserved
+    if n:
+        assert y.min() >= x.min() - 1e-12 and y.max() <= x.max() + 1e-12
+
+
+@given(st.sampled_from(["residual", "delta"]),
+       st.integers(min_value=0, max_value=2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_transform_modes_roundtrip(mode, seed):
+    rng = np.random.default_rng(seed)
+    x = np.cumsum(rng.normal(0.5, 0.1, size=64 * 20))
+    c = IdealemCodec(mode=mode, block_size=64, num_dict=16, alpha=0.05,
+                     rel_tol=0.5, backend="numpy")
+    y = c.decode(c.encode(x))
+    assert len(y) == len(x)
+    assert np.all(np.isfinite(y))

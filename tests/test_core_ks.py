@@ -1,0 +1,63 @@
+"""KS statistic / p-value / critical distance vs scipy oracles."""
+import numpy as np
+import pytest
+import scipy.special
+import scipy.stats
+
+from repro.core.ks import critical_distance, ks_pvalue, ks_statistic
+from repro.core.npref import ks_pvalue_np, ks_statistic_np
+
+from hypothesis import given, settings, strategies as st
+
+
+@pytest.mark.parametrize("n1,n2", [(16, 16), (32, 32), (64, 31), (111, 111)])
+def test_statistic_matches_scipy(n1, n2):
+    rng = np.random.default_rng(0)
+    for _ in range(5):
+        x = rng.normal(size=n1)
+        y = rng.normal(0.2, 1.3, size=n2)
+        ref = scipy.stats.ks_2samp(x, y).statistic
+        assert np.isclose(float(ks_statistic(x, y)), ref, atol=1e-7)
+        assert np.isclose(ks_statistic_np(x, y), ref, atol=1e-12)
+
+
+def test_pvalue_matches_kolmogorov_sf():
+    for n in [8, 16, 64, 256]:
+        for d in [0.05, 0.1, 0.3, 0.7]:
+            en = n * n / (2 * n)
+            ref = scipy.special.kolmogorov(np.sqrt(en) * d)
+            assert np.isclose(float(ks_pvalue(d, n, n)), ref, atol=1e-6)
+            assert np.isclose(ks_pvalue_np(d, n, n), ref, atol=1e-9)
+
+
+def test_critical_distance_inverts_pvalue():
+    for alpha in [0.01, 0.05, 0.1, 0.2]:
+        for n in [16, 32, 112, 255]:
+            dc = critical_distance(alpha, n, n)
+            # decision boundary: p(dc) == alpha
+            assert np.isclose(ks_pvalue_np(dc, n, n), alpha, atol=1e-6)
+            # monotone: slightly inside/outside flips the decision
+            assert ks_pvalue_np(dc * 0.98, n, n) > alpha
+            assert ks_pvalue_np(dc * 1.02, n, n) < alpha
+
+
+def test_sensitivity_with_n():
+    """Paper Fig. 3: same distance, larger n => smaller p-value."""
+    ps = [ks_pvalue_np(0.2, n, n) for n in [8, 16, 32, 64, 128, 256]]
+    assert all(a > b for a, b in zip(ps, ps[1:]))
+
+
+@given(
+    st.integers(min_value=4, max_value=128),
+    st.integers(min_value=0, max_value=2**31 - 1),
+)
+@settings(max_examples=25, deadline=None)
+def test_statistic_properties(n, seed):
+    rng = np.random.default_rng(seed)
+    x, y = rng.normal(size=n), rng.normal(size=n)
+    d = ks_statistic_np(x, y)
+    assert 0.0 <= d <= 1.0
+    assert ks_statistic_np(x, x) == 0.0
+    # symmetry & permutation invariance
+    assert np.isclose(d, ks_statistic_np(y, x), atol=1e-12)
+    assert np.isclose(d, ks_statistic_np(rng.permutation(x), y), atol=1e-12)

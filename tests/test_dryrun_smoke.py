@@ -1,0 +1,38 @@
+"""Multi-pod dry-run path validation (CI-scale).
+
+Runs the real dryrun module in a subprocess (it must own the XLA device-count
+flag) with reduced configs on the 512-device multi-pod mesh: lowering,
+SPMD compile, cost/collective analysis and artifact writing all execute.
+The FULL-config sweep is scripts/run_dryrun_sweep.sh (EXPERIMENTS.md).
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ARCH_CASES = [
+    ("granite-3-8b", "train_4k", "multi"),
+    ("granite-moe-1b-a400m", "train_4k", "single"),
+    ("rwkv6-3b", "long_500k", "multi"),
+    ("zamba2-1.2b", "decode_32k", "single"),
+]
+
+
+@pytest.mark.parametrize("arch,shape,mesh", ARCH_CASES)
+def test_dryrun_smoke_cell(arch, shape, mesh, tmp_path):
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--smoke",
+         "--arch", arch, "--shape", shape, "--mesh", mesh,
+         "--out", str(tmp_path)],
+        capture_output=True, text=True, timeout=1200, env=env,
+        cwd=os.getcwd())
+    assert out.returncode == 0, out.stdout[-2000:] + out.stderr[-2000:]
+    tag = f"{arch.replace('-', '_').replace('.', '_')}_{shape}_{mesh}"
+    rec = json.load(open(tmp_path / f"{tag}.json"))
+    assert rec["status"] == "ok"
+    assert rec["flops_per_chip"] > 0
+    assert rec["bytes_per_chip"] > 0
+    assert rec["chips"] == (512 if mesh == "multi" else 256)

@@ -1,0 +1,58 @@
+"""Trip-count-aware HLO cost analysis: exactness on known programs."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp
+import sys
+sys.path.insert(0, "src")
+from repro.launch.hlo_cost import analyze
+
+def f(xs, w):
+    def body(c, x):
+        return c @ w + x @ w, ()
+    c, _ = jax.lax.scan(body, xs[0], xs)
+    return c
+
+xs = jax.ShapeDtypeStruct((5, 64, 64), jnp.float32)
+w = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+res = analyze(jax.jit(f).lower(xs, w).compile().as_text())
+expected = 2 * 2 * 5 * 64 * 64 * 64
+assert abs(res["flops"] - expected) < 1e-6, (res["flops"], expected)
+
+def g(xs, w):
+    def outer(c, x):
+        def inner(c2, _):
+            return c2 @ w, ()
+        c2, _ = jax.lax.scan(inner, c + x, jnp.arange(3))
+        return c2, ()
+    c, _ = jax.lax.scan(outer, xs[0], xs)
+    return c
+
+res2 = analyze(jax.jit(g).lower(xs, w).compile().as_text())
+expected2 = 5 * 3 * 2 * 64 ** 3
+assert abs(res2["flops"] - expected2) < 1e-6, (res2["flops"], expected2)
+assert res["bytes"] > 0
+print("HLO_COST_OK")
+"""
+
+
+def test_analyzer_exact_on_nested_scans():
+    out = subprocess.run([sys.executable, "-c", SCRIPT], cwd=os.getcwd(),
+                         capture_output=True, text=True, timeout=300)
+    assert "HLO_COST_OK" in out.stdout, out.stdout + out.stderr
+
+
+def test_shape_parsing_units():
+    from repro.launch.hlo_cost import _shape_info
+    b, shapes = _shape_info("f32[2,3,4]{2,1,0}")
+    assert b == 2 * 3 * 4 * 4 and shapes == [[2, 3, 4]]
+    b, shapes = _shape_info("(bf16[8], s32[2,2])")
+    assert b == 8 * 2 + 4 * 4
+    b, _ = _shape_info("pred[10]")
+    assert b == 10

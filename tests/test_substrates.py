@@ -1,0 +1,156 @@
+"""Optimizer, checkpoint, fault-tolerance, gradient-compression tests."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint as ckpt
+from repro.configs import get_config
+from repro.data import synthetic
+from repro.optim import adamw, gradcomp
+from repro.runtime import FaultInjector, FaultTolerantTrainer
+from repro.train import init_train_state, make_train_step
+
+
+# ------------------------------------------------------------------ optimizer
+def test_adamw_matches_reference_math():
+    params = {"w": jnp.array([1.0, -2.0, 3.0])}
+    grads = {"w": jnp.array([0.1, 0.2, -0.3])}
+    st = adamw.init(params)
+    new, st2, m = adamw.update(grads, st, params, lr=0.1, b1=0.9, b2=0.999,
+                               eps=1e-8, weight_decay=0.0, clip_norm=None)
+    g = np.array([0.1, 0.2, -0.3])
+    mu = 0.1 * g
+    nu = 0.001 * g * g
+    mhat = mu / (1 - 0.9)
+    vhat = nu / (1 - 0.999)
+    want = np.array([1.0, -2.0, 3.0]) - 0.1 * mhat / (np.sqrt(vhat) + 1e-8)
+    np.testing.assert_allclose(np.asarray(new["w"]), want, rtol=1e-5)
+    assert int(st2.step) == 1
+
+
+def test_adamw_converges_on_quadratic():
+    params = {"w": jnp.ones((8,)) * 5.0}
+    st = adamw.init(params)
+    lossf = lambda p: jnp.sum(jnp.square(p["w"]))
+    for _ in range(200):
+        g = jax.grad(lossf)(params)
+        params, st, _ = adamw.update(g, st, params, lr=0.1, weight_decay=0.0)
+    assert float(lossf(params)) < 1e-2
+
+
+def test_grad_clipping():
+    params = {"w": jnp.zeros((4,))}
+    st = adamw.init(params)
+    grads = {"w": jnp.full((4,), 100.0)}
+    _, _, m = adamw.update(grads, st, params, lr=0.0, clip_norm=1.0)
+    assert float(m["grad_norm"]) == pytest.approx(200.0, rel=1e-5)
+
+
+# ----------------------------------------------------------------- checkpoint
+def test_checkpoint_roundtrip_exact(tmp_path):
+    tree = {"a": np.arange(12, dtype=np.float32).reshape(3, 4),
+            "b": {"c": np.float64(3.5) * np.ones((7,))}}
+    ckpt.save(str(tmp_path), 5, tree)
+    assert ckpt.latest_step(str(tmp_path)) == 5
+    out = ckpt.restore(str(tmp_path), 5, tree)
+    np.testing.assert_array_equal(out["a"], tree["a"])
+    np.testing.assert_array_equal(out["b"]["c"], tree["b"]["c"])
+
+
+def test_checkpoint_zstd_exact_and_idealem_lossy(tmp_path):
+    rng = np.random.default_rng(0)
+    tree = {"w": rng.normal(size=(64, 128)).astype(np.float32)}
+    ckpt.save(str(tmp_path / "z"), 1, tree, codec="zstd")
+    out = ckpt.restore(str(tmp_path / "z"), 1, tree)
+    np.testing.assert_array_equal(out["w"], tree["w"])
+    # idealem codec: lossy but statistically close + smaller on noise-like data
+    ckpt.save(str(tmp_path / "i"), 1, tree, codec="idealem")
+    out = ckpt.restore(str(tmp_path / "i"), 1, tree)
+    assert out["w"].shape == tree["w"].shape
+    assert abs(np.std(out["w"]) - np.std(tree["w"])) < 0.1
+
+
+def test_checkpoint_atomicity_tmp_not_visible(tmp_path):
+    tree = {"a": np.ones(3)}
+    ckpt.save(str(tmp_path), 1, tree)
+    os.makedirs(str(tmp_path / "step_00000099.tmp"))  # simulated crash
+    assert ckpt.latest_step(str(tmp_path)) == 1
+
+
+def test_async_save(tmp_path):
+    tree = {"a": np.ones((128,))}
+    t = ckpt.async_save(str(tmp_path), 3, tree)
+    t.join()
+    out = ckpt.restore(str(tmp_path), 3, tree)
+    np.testing.assert_array_equal(out["a"], tree["a"])
+
+
+# ------------------------------------------------------------- fault tolerance
+def _tiny_setup(tmp_path, use_gradcomp=False, **inj):
+    cfg = get_config("granite_3_8b", smoke=True)
+    state = init_train_state(jax.random.key(0), cfg, use_gradcomp=use_gradcomp)
+    step = jax.jit(make_train_step(cfg, lr=1e-3, microbatches=1,
+                                   use_gradcomp=use_gradcomp))
+    batches = list(synthetic.token_stream(12, 4, 32, cfg.vocab_size))
+    trainer = FaultTolerantTrainer(
+        train_step=step, state=state, ckpt_dir=str(tmp_path), ckpt_every=4,
+        injector=FaultInjector(inj.get("schedule", {})),
+        step_deadline_s=inj.get("deadline"))
+    return trainer, batches
+
+
+def test_crash_recovery_resumes_and_completes(tmp_path):
+    trainer, batches = _tiny_setup(tmp_path, schedule={6: "crash"})
+    trainer.run(batches, 10)
+    events = [e for e in trainer.log if e.get("event") == "restore"]
+    assert len(events) == 1
+    assert events[0]["resumed_from"] == 4  # last checkpoint before step 6
+    steps_done = [e["step"] for e in trainer.log if "loss" in e]
+    assert max(steps_done) == 9  # completed all 10 steps (0..9)
+
+
+def test_nan_detection_triggers_restore(tmp_path):
+    trainer, batches = _tiny_setup(tmp_path, schedule={2: "nan"})
+    trainer.run(batches, 6)
+    assert any(e.get("event") == "restore" for e in trainer.log)
+
+
+def test_straggler_skip_rescales(tmp_path):
+    trainer, batches = _tiny_setup(tmp_path, schedule={3: "straggler"},
+                                   deadline=1e-9)
+    trainer.run(batches, 6)
+    ev = [e for e in trainer.log if e.get("event") == "straggler_skip"]
+    assert len(ev) == 1 and ev[0]["dropped_frac"] == 0.25
+
+
+# --------------------------------------------------------- gradient compression
+def test_gradcomp_error_feedback_preserves_convergence():
+    key = jax.random.key(0)
+    w_true = jax.random.normal(key, (64,))
+
+    def loss(w, x):
+        return jnp.mean(jnp.square(x @ w - x @ w_true))
+
+    x = jax.random.normal(jax.random.key(1), (256, 64))
+    w = jnp.zeros((64,))
+    gc = gradcomp.init({"w": w})
+    for i in range(60):
+        g = jax.grad(loss)(w, x)
+        comp, gc, metrics = gradcomp.compress(
+            {"w": g}, gc, block=16, num_dict=8, alpha=0.05)
+        w = w - 0.1 * comp["w"]
+    assert float(loss(w, x)) < 0.1 * float(loss(jnp.zeros((64,)), x))
+
+
+def test_gradcomp_reports_wire_savings():
+    rng = np.random.default_rng(0)
+    # gradient blocks drawn from one distribution: highly exchangeable
+    g = {"w": jnp.asarray(rng.normal(0, 1e-3, size=(64 * 256,)), jnp.float32)}
+    gc = gradcomp.init(g)
+    _, _, m = gradcomp.compress(g, gc, block=256, num_dict=32, alpha=0.01,
+                                rel_tol=0.5)
+    assert float(m["hit_rate"]) > 0.5
+    assert float(m["wire_ratio"]) > 2.0
