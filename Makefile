@@ -1,0 +1,24 @@
+# Convenience targets; all run from the repo root.
+PY ?= python
+export PYTHONPATH := src
+
+.PHONY: test test-core bench bench-stream example-stream
+
+# Tier-1 verification (ROADMAP.md): the full suite, fail-fast.
+test:
+	$(PY) -m pytest -x -q
+
+# Fast loop while working on the codec core.
+test-core:
+	$(PY) -m pytest -q tests/test_core_codec.py tests/test_core_ks.py \
+	    tests/test_kernels.py tests/test_stream_format.py \
+	    tests/test_streaming_session.py
+
+bench:
+	$(PY) -m benchmarks.run
+
+bench-stream:
+	$(PY) -m benchmarks.bench_stream_io
+
+example-stream:
+	$(PY) examples/stream_compress.py --channels 8 --samples 16384

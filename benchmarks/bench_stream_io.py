@@ -1,0 +1,94 @@
+"""Host stream-I/O throughput: vectorized assemble/parse vs the seed
+per-block Python loops, on >= 1e5 blocks.
+
+The device encoder emits fixed-shape decisions; at production ingest rates
+the host-side serialization is the next bottleneck (DESIGN.md Sec. 4).  This
+measures both directions on a synthetic decision trace with a realistic
+hit/miss/overwrite mix and reports the speedup of the numpy offset/scatter
+implementation over the seed loop.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.stream import (
+    StreamHeader,
+    _assemble_stream_py,
+    _parse_arrays,
+    _parse_stream_py,
+    assemble_stream,
+    parse_stream,
+)
+
+from .common import csv_row
+
+
+def _synth_decisions(nb: int, num_dict: int, p_hit: float, seed: int = 0):
+    """FIFO-consistent random decision trace (no KS math needed)."""
+    rng = np.random.default_rng(seed)
+    hit_draw = rng.random(nb) < p_hit
+    is_hit = np.zeros(nb, dtype=bool)
+    slot = np.zeros(nb, dtype=np.int32)
+    ovw = np.zeros(nb, dtype=bool)
+    count = 0
+    for i in range(nb):
+        fill = min(count, num_dict)
+        if hit_draw[i] and fill > 0:
+            is_hit[i] = True
+            slot[i] = rng.integers(0, fill)
+        else:
+            slot[i] = count % num_dict
+            ovw[i] = count >= num_dict
+            count += 1
+    return is_hit, slot, ovw
+
+
+def _time(fn, repeat=3):
+    fn()  # warmup
+    t0 = time.time()
+    for _ in range(repeat):
+        fn()
+    return (time.time() - t0) / repeat
+
+
+def run(nb: int = 120_000, B: int = 16):
+    rows = []
+    rng = np.random.default_rng(1)
+    blocks = rng.normal(size=(nb, B))
+    for num_dict, label in [(255, "D255"), (1, "D1")]:
+        is_hit, slot, ovw = _synth_decisions(nb, num_dict, p_hit=0.9)
+        header = StreamHeader(0, B, num_dict, 255, np.dtype(np.float64),
+                              None, nb, np.zeros(0))
+        args = (header, blocks, blocks, None, is_hit, slot, ovw)
+
+        t_py = _time(lambda: _assemble_stream_py(*args), repeat=1)
+        t_vec = _time(lambda: assemble_stream(*args))
+        assert assemble_stream(*args) == _assemble_stream_py(*args)
+        rows.append(csv_row(f"stream_io/assemble/{label}/py", t_py * 1e6,
+                            f"blocks={nb}"))
+        rows.append(csv_row(
+            f"stream_io/assemble/{label}/vec", t_vec * 1e6,
+            f"blocks={nb};speedup={t_py / t_vec:.1f}x"))
+
+        blob = assemble_stream(*args)
+        t_py = _time(lambda: _parse_stream_py(blob), repeat=1)
+        t_arr = _time(lambda: _parse_arrays(blob))
+        t_ev = _time(lambda: parse_stream(blob))
+        rows.append(csv_row(f"stream_io/parse/{label}/py", t_py * 1e6,
+                            f"bytes={len(blob)}"))
+        # the decode path consumes the struct-of-arrays parser directly;
+        # parse_stream adds the per-block event-dict compatibility layer
+        rows.append(csv_row(
+            f"stream_io/parse/{label}/vec_arrays", t_arr * 1e6,
+            f"bytes={len(blob)};speedup={t_py / t_arr:.1f}x"))
+        rows.append(csv_row(
+            f"stream_io/parse/{label}/vec_events", t_ev * 1e6,
+            f"bytes={len(blob)};speedup={t_py / t_ev:.1f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

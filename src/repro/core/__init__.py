@@ -7,12 +7,17 @@ Public API:
   residual/delta transforms, quality measures
 """
 from .idealem import IdealemCodec
+from .session import IdealemSession, SessionStats
 from .ks import critical_distance, ks_pvalue, ks_statistic, ks_statistic_many
-from .encoder import encode_decisions, encode_decisions_batched
+from .encoder import DictState, encode_decisions, encode_decisions_batched, init_state
 from .metrics import quality_measures, amplitude_spectrum, spectral_band_error
 
 __all__ = [
     "IdealemCodec",
+    "IdealemSession",
+    "SessionStats",
+    "DictState",
+    "init_state",
     "critical_distance",
     "ks_pvalue",
     "ks_statistic",

@@ -6,9 +6,22 @@ against *all* D entries as dense masked work and select the lowest-index
 passing entry -- decision-identical to the early-exit scan, but fully
 vectorized (VPU) and batchable over channels with ``vmap``.
 
+Streaming (DESIGN.md Sec. 3): ``DictState`` is a first-class resumable
+carry.  ``encode_decisions(..., state=s)`` continues a scan where the last
+chunk stopped and returns the updated state, so a live stream encoded in
+chunks makes exactly the same hit/miss decisions as one monolithic scan.
+On accelerators the incoming state buffers are donated to the jitted scan,
+so resuming does not hold two copies of the dictionary in device memory.
+
 Per-block outputs are fixed-shape decisions (is_hit, slot, overwrite); the
 variable-length byte stream is assembled host-side by ``repro.core.stream``
 from these decisions plus the raw blocks.
+
+Matchers fuse the two similarity checks: ``matcher(xs_sorted, dict_sorted,
+dmin, dmax, rel_tol) -> (ks (D,), mm (D,))``.  The default is the pure-jnp
+oracle below; ``repro.kernels.ops.dict_match`` is the Pallas kernel with
+the same signature, whose fused min/max gate is consumed directly instead
+of being recomputed outside the kernel.
 """
 from __future__ import annotations
 
@@ -20,11 +33,24 @@ import jax.numpy as jnp
 
 from .ks import ks_statistic_many
 
-__all__ = ["DictState", "EncoderParams", "init_state", "encode_decisions"]
+__all__ = [
+    "DictState",
+    "EncoderParams",
+    "init_state",
+    "matcher_reference",
+    "encode_decisions",
+    "encode_decisions_batched",
+]
+
 
 
 class DictState(NamedTuple):
-    """Carry state of the encoder scan: the FIFO dictionary buffer."""
+    """Resumable carry of the encoder scan: the FIFO dictionary buffer.
+
+    Thread it through chunked calls of ``encode_decisions`` to continue a
+    stream.  Batched (multi-channel) states carry one leading ``(C,)`` axis
+    on every field (see ``init_state(channels=...)``).
+    """
 
     sorted_blocks: jax.Array  # (D, n) sorted source-distribution samples
     dmin: jax.Array  # (D,)
@@ -40,13 +66,17 @@ class EncoderParams(NamedTuple):
     use_ks: bool = True  # False = min/max check alone (ablation)
 
 
-def init_state(num_dict: int, n: int, dtype=jnp.float32) -> DictState:
+def init_state(num_dict: int, n: int, dtype=jnp.float32,
+               channels: Optional[int] = None) -> DictState:
+    """Fresh (empty-dictionary) carry; ``channels=C`` stacks C independent
+    per-channel states on a leading axis for the batched encoder."""
+    lead = () if channels is None else (channels,)
     return DictState(
-        sorted_blocks=jnp.zeros((num_dict, n), dtype=dtype),
-        dmin=jnp.zeros((num_dict,), dtype=dtype),
-        dmax=jnp.zeros((num_dict,), dtype=dtype),
-        valid=jnp.zeros((num_dict,), dtype=bool),
-        count=jnp.zeros((), dtype=jnp.int32),
+        sorted_blocks=jnp.zeros(lead + (num_dict, n), dtype=dtype),
+        dmin=jnp.zeros(lead + (num_dict,), dtype=dtype),
+        dmax=jnp.zeros(lead + (num_dict,), dtype=dtype),
+        valid=jnp.zeros(lead + (num_dict,), dtype=bool),
+        count=jnp.zeros(lead, dtype=jnp.int32),
     )
 
 
@@ -62,23 +92,25 @@ def _minmax_gate(xmin, xmax, dmin, dmax, r):
     )
 
 
+def matcher_reference(xs_sorted, dict_sorted, dmin, dmax, rel_tol):
+    """Default pure-jnp matcher: (ks (D,), mm (D,)) against all entries."""
+    ks = ks_statistic_many(xs_sorted, dict_sorted)
+    mm = _minmax_gate(xs_sorted[0], xs_sorted[-1], dmin, dmax, rel_tol)
+    return ks, mm
+
+
 def _step(matcher, params: EncoderParams, state: DictState, block: jax.Array):
     num_dict = state.sorted_blocks.shape[0]
     xs = jnp.sort(block)
     xmin, xmax = xs[0], xs[-1]
 
-    if params.use_minmax:
-        mm = _minmax_gate(xmin, xmax, state.dmin, state.dmax, params.rel_tol)
-    else:
-        mm = jnp.ones((num_dict,), dtype=bool)
+    ks, mm = matcher(xs, state.sorted_blocks, state.dmin, state.dmax,
+                     params.rel_tol)
+    ones = jnp.ones((num_dict,), dtype=bool)
+    mm_ok = mm if params.use_minmax else ones
+    ks_ok = (ks <= params.d_crit) if params.use_ks else ones
 
-    if params.use_ks:
-        ks = matcher(xs, state.sorted_blocks)  # (D,)
-        ks_ok = ks <= params.d_crit
-    else:
-        ks_ok = jnp.ones((num_dict,), dtype=bool)
-
-    ok = state.valid & mm & ks_ok
+    ok = state.valid & mm_ok & ks_ok
     is_hit = jnp.any(ok)
     first_hit = jnp.argmax(ok)  # lowest passing slot == early-exit result
 
@@ -102,9 +134,36 @@ def _step(matcher, params: EncoderParams, state: DictState, block: jax.Array):
     return new_state, (is_hit, slot, overwrite)
 
 
-@functools.partial(
-    jax.jit, static_argnames=("num_dict", "d_crit", "rel_tol", "use_minmax", "use_ks", "matcher")
-)
+@functools.lru_cache(maxsize=None)
+def _encode_scan():
+    """Build the jitted scan lazily so importing this module never touches
+    the accelerator runtime (decode-only / numpy-backend processes).
+
+    Buffer donation of the resumable carry is a device-memory optimization;
+    the CPU backend does not implement it and warns, so gate on backend.
+    """
+    donate = (0,) if jax.default_backend() in ("tpu", "gpu") else ()
+
+    @functools.partial(
+        jax.jit,
+        static_argnames=("d_crit", "rel_tol", "use_minmax", "use_ks",
+                         "matcher"),
+        donate_argnums=donate,
+    )
+    def scan(state: DictState, blocks, *, d_crit, rel_tol, use_minmax,
+             use_ks, matcher):
+        params = EncoderParams(
+            d_crit=d_crit, rel_tol=rel_tol, use_minmax=use_minmax,
+            use_ks=use_ks,
+        )
+        step = functools.partial(_step, matcher, params)
+        new_state, (is_hit, slot, overwrite) = jax.lax.scan(step, state,
+                                                            blocks)
+        return (is_hit, slot, overwrite), new_state
+
+    return scan
+
+
 def encode_decisions(
     blocks: jax.Array,
     *,
@@ -114,26 +173,59 @@ def encode_decisions(
     use_minmax: bool = True,
     use_ks: bool = True,
     matcher: Optional[Callable] = None,
-) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    state: Optional[DictState] = None,
+):
     """Encode a (nb, n) stack of (already transformed) blocks.
 
-    Returns (is_hit (nb,), slot (nb,), overwrite (nb,)).
-    ``matcher(xs_sorted, dict_sorted) -> (D,)`` defaults to the pure-jnp KS
-    oracle; pass ``repro.kernels.ops.dict_match_ks`` for the Pallas kernel.
-    Batch over channels with ``jax.vmap`` on the leading axis.
+    One-shot (``state=None``): returns ``(is_hit (nb,), slot (nb,),
+    overwrite (nb,))`` from a fresh dictionary, as before.
+
+    Resumable (``state=...``): continues the scan from the given carry and
+    returns ``((is_hit, slot, overwrite), new_state)``.  Chunked calls that
+    thread the state are decision-identical to one scan over the
+    concatenated blocks.  The passed-in state is donated on accelerators --
+    treat it as consumed.
+
+    ``matcher(xs_sorted, dict_sorted, dmin, dmax, rel_tol) -> (ks, mm)``
+    defaults to the pure-jnp oracle; pass ``repro.kernels.ops.dict_match``
+    for the Pallas kernel (its fused min/max gate is used directly).
     """
     if matcher is None:
-        matcher = ks_statistic_many
-    params = EncoderParams(
-        d_crit=d_crit, rel_tol=rel_tol, use_minmax=use_minmax, use_ks=use_ks
+        matcher = matcher_reference
+    return_state = state is not None
+    if state is None:
+        state = init_state(num_dict, blocks.shape[-1], dtype=blocks.dtype)
+    out, new_state = _encode_scan()(
+        state, blocks, d_crit=float(d_crit), rel_tol=float(rel_tol),
+        use_minmax=use_minmax, use_ks=use_ks, matcher=matcher,
     )
-    state0 = init_state(num_dict, blocks.shape[-1], dtype=blocks.dtype)
-    step = functools.partial(_step, matcher, params)
-    _, (is_hit, slot, overwrite) = jax.lax.scan(step, state0, blocks)
-    return is_hit, slot, overwrite
+    return (out, new_state) if return_state else out
 
 
-def encode_decisions_batched(blocks_cn, **kw):
-    """vmap over a leading channel axis: blocks (C, nb, n)."""
-    fn = functools.partial(encode_decisions, **kw)
-    return jax.vmap(fn)(blocks_cn)
+def encode_decisions_batched(
+    blocks_cn: jax.Array,
+    *,
+    num_dict: int,
+    state: Optional[DictState] = None,
+    **kw,
+):
+    """Multi-channel encoder: blocks (C, nb, n) with per-channel DictState.
+
+    One vmapped scan encodes all channels in lockstep.  One-shot
+    (``state=None``) returns the (C, nb) decision triple; resumable
+    (``state=init_state(..., channels=C)`` or a previous return) returns
+    ``((is_hit, slot, overwrite), new_state)`` with the carry stacked on
+    the leading channel axis.
+    """
+    return_state = state is not None
+    if state is None:
+        state = init_state(
+            num_dict, blocks_cn.shape[-1], dtype=blocks_cn.dtype,
+            channels=blocks_cn.shape[0],
+        )
+
+    def one(s, b):
+        return encode_decisions(b, num_dict=num_dict, state=s, **kw)
+
+    out, new_state = jax.vmap(one)(state, blocks_cn)
+    return (out, new_state) if return_state else out

@@ -1,9 +1,23 @@
 """User-facing IDEALEM codec: orchestrates transform -> decisions -> stream.
 
+One-shot:
+
 >>> codec = IdealemCodec(mode="std", block_size=32, num_dict=255, alpha=0.01)
 >>> blob = codec.encode(x)            # x: 1-D numpy float array
 >>> y = codec.decode(blob)            # same length, statistically similar
 >>> codec.compression_ratio(x, blob)
+
+Streaming (chunked / multi-channel): ``encode`` is a thin wrapper over
+``IdealemSession`` (repro.core.session), which keeps the FIFO dictionary
+alive between chunks:
+
+>>> s = codec.session()               # or codec.session(channels=C)
+>>> parts = [s.feed(chunk) for chunk in chunks] + [s.finish()]
+>>> y = codec.decode(b"".join(parts))
+
+Backends: "jax" (vmap/scan device encoder), "pallas" (same scan consuming
+the fused ``dict_match`` kernel gate+KS), "numpy" (sequential early-exit
+reference).  All three are decision-identical.
 """
 from __future__ import annotations
 
@@ -14,7 +28,8 @@ import numpy as np
 
 from . import stream as stream_mod
 from .ks import critical_distance
-from .stream import MODE_DELTA, MODE_RESIDUAL, MODE_STD, StreamHeader
+from .session import IdealemSession
+from .stream import MODE_DELTA, MODE_RESIDUAL, MODE_STD
 from .transforms import np_wrap_centered
 
 _MODES = {"std": MODE_STD, "residual": MODE_RESIDUAL, "delta": MODE_DELTA}
@@ -48,17 +63,15 @@ class IdealemCodec:
         self.d_crit = critical_distance(self.alpha, n, n)
 
     # ------------------------------------------------------------- internals
+    @property
+    def mode_id(self) -> int:
+        return _MODES[self.mode]
+
     def _lem_n(self) -> int:
         return self.block_size if self.mode == "std" else self.block_size - 1
 
-    def _split(self, x: np.ndarray):
-        nb = len(x) // self.block_size
-        blocks = x[: nb * self.block_size].reshape(nb, self.block_size)
-        tail = x[nb * self.block_size:]
-        return blocks, tail
-
     def _transform(self, blocks: np.ndarray):
-        """Returns (payload for LEM+stream, bases or None). Host-side f64."""
+        """Returns (payload for LEM+stream, bases or None). Host-side."""
         if self.mode == "std":
             return blocks, None
         bases = blocks[:, 0].copy()
@@ -70,51 +83,24 @@ class IdealemCodec:
             t = np_wrap_centered(t, *self.value_range)
         return t, bases
 
-    def _decide(self, payload: np.ndarray):
-        kw = dict(
-            num_dict=self.num_dict,
-            d_crit=float(self.d_crit),
-            rel_tol=float(self.rel_tol),
-            use_minmax=self.use_minmax,
-            use_ks=self.use_ks,
-        )
-        if self.backend == "numpy":
-            from .npref import encode_decisions_np
-            return encode_decisions_np(payload, **kw)
-        from .encoder import encode_decisions
-        import jax.numpy as jnp
-        matcher = None
-        if self.backend == "pallas":
-            from repro.kernels.ops import dict_match_ks
-            matcher = dict_match_ks
-        out = encode_decisions(jnp.asarray(payload, dtype=jnp.float32),
-                               matcher=matcher, **kw)
-        return tuple(np.asarray(o) for o in out)
-
     # ------------------------------------------------------------ public API
+    def session(self, channels: Optional[int] = None,
+                emit_segments: bool = True,
+                dtype=np.float64) -> IdealemSession:
+        """Open a resumable streaming session with this configuration."""
+        return IdealemSession(self, channels=channels,
+                              emit_segments=emit_segments, dtype=dtype)
+
     def encode(self, x: np.ndarray) -> bytes:
+        """One-shot encode: a single-feed session assembled as one segment."""
         x = np.ascontiguousarray(x)
         if x.ndim != 1:
-            raise ValueError("IDEALEM compresses 1-D arrays (vmap for batches)")
-        blocks, tail = self._split(x)
-        payload, bases = self._transform(blocks)
-        if len(blocks):
-            is_hit, slot, overwrite = self._decide(payload)
-        else:
-            is_hit = slot = overwrite = np.zeros((0,), dtype=np.int32)
-        header = StreamHeader(
-            mode=_MODES[self.mode],
-            block_size=self.block_size,
-            num_dict=self.num_dict,
-            max_count=self.max_count,
-            dtype=x.dtype,
-            value_range=self.value_range,
-            n_blocks=len(blocks),
-            tail=tail,
-        )
-        return stream_mod.assemble_stream(
-            header, blocks, payload, bases, is_hit, slot, overwrite
-        )
+            raise ValueError(
+                "IdealemCodec.encode compresses 1-D arrays; use "
+                "codec.session(channels=C) for batched multi-channel streams")
+        s = IdealemSession(self, emit_segments=False, dtype=x.dtype)
+        s.feed(x)
+        return s.finish()
 
     def decode(self, blob: bytes) -> np.ndarray:
         return stream_mod.decode_stream(blob, seed=self.decode_seed)

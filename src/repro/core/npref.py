@@ -3,14 +3,25 @@
 Mirrors the early-exit C encoder semantics exactly: for each block, walk the
 dictionary in slot order, apply the min/max gate (eq. 3) then the KS test,
 take the first passing entry; FIFO insert on miss.
+
+Like the device encoder, the dictionary carry is resumable: pass
+``state=np_init_state(num_dict)`` and thread the returned state through
+chunked calls to get decisions identical to one pass over the whole array.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
 
 import numpy as np
 
-__all__ = ["ks_statistic_np", "ks_pvalue_np", "encode_decisions_np"]
+__all__ = [
+    "ks_statistic_np",
+    "ks_pvalue_np",
+    "NpDictState",
+    "np_init_state",
+    "encode_decisions_np",
+]
 
 
 def ks_statistic_np(x: np.ndarray, y: np.ndarray) -> float:
@@ -30,6 +41,24 @@ def ks_pvalue_np(d: float, n1: int, n2: int, terms: int = 40) -> float:
     return float(np.clip(q, 0.0, 1.0))
 
 
+@dataclass
+class NpDictState:
+    """Host twin of ``encoder.DictState`` (mutated in place by the scan)."""
+
+    blocks: List[Optional[np.ndarray]]
+    dmin: np.ndarray
+    dmax: np.ndarray
+    count: int = 0
+
+
+def np_init_state(num_dict: int) -> NpDictState:
+    return NpDictState(
+        blocks=[None] * num_dict,
+        dmin=np.zeros(num_dict),
+        dmax=np.zeros(num_dict),
+    )
+
+
 def encode_decisions_np(
     blocks: np.ndarray,
     *,
@@ -38,13 +67,19 @@ def encode_decisions_np(
     rel_tol: float = 0.1,
     use_minmax: bool = True,
     use_ks: bool = True,
-) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-    """Sequential early-exit reference; same outputs as encoder.encode_decisions."""
+    state: Optional[NpDictState] = None,
+) -> Tuple[np.ndarray, ...]:
+    """Sequential early-exit reference; same outputs as encoder.encode_decisions.
+
+    With ``state``, continues from (and mutates) the given carry and returns
+    ``((is_hit, slot, overwrite), state)``; without, runs one-shot and
+    returns the plain decision triple.
+    """
+    return_state = state is not None
+    if state is None:
+        state = np_init_state(num_dict)
     nb, _ = blocks.shape
-    dict_blocks: list[Optional[np.ndarray]] = [None] * num_dict
-    dmin = np.zeros(num_dict)
-    dmax = np.zeros(num_dict)
-    count = 0
+    dict_blocks, dmin, dmax = state.blocks, state.dmin, state.dmax
     is_hit = np.zeros(nb, dtype=bool)
     slot = np.zeros(nb, dtype=np.int32)
     overwrite = np.zeros(nb, dtype=bool)
@@ -70,10 +105,11 @@ def encode_decisions_np(
         if hit >= 0:
             is_hit[i], slot[i] = True, hit
         else:
-            s = count % num_dict
-            overwrite[i] = count >= num_dict
+            s = state.count % num_dict
+            overwrite[i] = state.count >= num_dict
             slot[i] = s
             dict_blocks[s] = x.copy()
             dmin[s], dmax[s] = xmin, xmax
-            count += 1
-    return is_hit, slot, overwrite
+            state.count += 1
+    out = (is_hit, slot, overwrite)
+    return (out, state) if return_state else out

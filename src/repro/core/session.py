@@ -1,0 +1,267 @@
+"""Streaming codec sessions (DESIGN.md Sec. 3).
+
+``IdealemCodec.encode`` is one-shot: dictionary built from scratch per call.
+For the paper's deployment scenario -- online compression of continuous
+sensor/PMU streams (Sec. I, Fig. 15) -- that destroys the hit rate the FIFO
+dictionary exists to provide whenever data arrives in chunks.
+
+``IdealemSession`` owns the persistent encoder state between chunks:
+
+  * per-channel device ``DictState`` (or numpy ``NpDictState``), threaded
+    through the resumable ``encode_decisions`` scan so chunked encoding makes
+    exactly the same hit/miss decisions as one monolithic pass;
+  * per-channel host tail buffers holding samples that do not yet fill a
+    block;
+  * segment emission: ``feed(chunk) -> bytes`` returns an append-mode stream
+    segment (FLAG_MORE/FLAG_CONT framing, see repro.core.stream) and
+    ``finish() -> bytes`` the final segment carrying the tail.  The
+    concatenation of all returned segments decodes identically to what
+    one-shot ``IdealemCodec.encode`` over the concatenated samples decodes
+    to.
+
+With ``emit_segments=False`` the session buffers host-side and ``finish``
+assembles one classic single-segment stream -- byte-identical to the seed
+one-shot format; ``IdealemCodec.encode`` is a thin wrapper over this mode.
+
+Multi-channel: ``channels=C`` batches C independent streams through one
+vmapped device scan (blocks stacked ``(C, nb, n)``, per-channel carry);
+``feed`` then takes ``(C, m)`` chunks and returns one segment per channel.
+
+Performance note (jax/pallas backends): the device scan compiles per
+distinct per-feed block count, so live producers should feed fixed chunk
+quanta (ideally a multiple of ``block_size``) to hit steady-state
+throughput after the first chunk.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import TYPE_CHECKING, List, Optional, Union
+
+import numpy as np
+
+from . import stream as stream_mod
+from .stream import StreamHeader
+
+if TYPE_CHECKING:  # pragma: no cover
+    from .idealem import IdealemCodec
+
+__all__ = ["IdealemSession", "SessionStats"]
+
+
+@dataclass
+class SessionStats:
+    """Per-channel accounting of a streaming session."""
+
+    blocks: int = 0
+    hits: int = 0
+    segments: int = 0
+    bytes_in: int = 0
+    bytes_out: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / max(self.blocks, 1)
+
+    def as_dict(self) -> dict:
+        return {
+            "blocks": self.blocks, "hits": self.hits,
+            "hit_rate": self.hit_rate, "segments": self.segments,
+            "bytes_in": self.bytes_in, "bytes_out": self.bytes_out,
+            "ratio": self.bytes_in / max(self.bytes_out, 1),
+        }
+
+
+class IdealemSession:
+    """Resumable encode session over one codec configuration.
+
+    >>> codec = IdealemCodec(mode="std", block_size=32, num_dict=255)
+    >>> s = codec.session()
+    >>> parts = [s.feed(chunk) for chunk in chunks] + [s.finish()]
+    >>> y = codec.decode(b"".join(parts))   # == decode of one-shot encode
+    """
+
+    def __init__(self, codec: "IdealemCodec", channels: Optional[int] = None,
+                 emit_segments: bool = True, dtype=np.float64):
+        self.codec = codec
+        self.channels = channels
+        self.emit_segments = emit_segments
+        self.dtype = np.dtype(dtype)
+        C = self._C = channels if channels is not None else 1
+        if channels is not None and channels < 1:
+            raise ValueError("channels must be >= 1")
+        self._tails = [np.zeros(0, dtype=self.dtype) for _ in range(C)]
+        self._started = [False] * C  # any segment emitted yet (per channel)
+        self._finished = False
+        self._stats = [SessionStats() for _ in range(C)]
+        self._dev_state = None   # batched DictState (jax / pallas backends)
+        self._np_states = None   # list[NpDictState] (numpy backend)
+        # host-side accumulation for emit_segments=False (one-shot assembly)
+        self._buf = [
+            {"raw": [], "payload": [], "bases": [], "hit": [], "slot": [],
+             "ovw": []}
+            for _ in range(C)
+        ]
+
+    # ------------------------------------------------------------- internals
+    def _decide(self, payload_cn: np.ndarray):
+        """(C, nb, n_lem) transformed blocks -> per-channel decision triples,
+        threading the persistent dictionary carry."""
+        cdc = self.codec
+        kw = dict(
+            num_dict=cdc.num_dict,
+            d_crit=float(cdc.d_crit),
+            rel_tol=float(cdc.rel_tol),
+            use_minmax=cdc.use_minmax,
+            use_ks=cdc.use_ks,
+        )
+        if cdc.backend == "numpy":
+            from .npref import encode_decisions_np, np_init_state
+            if self._np_states is None:
+                self._np_states = [np_init_state(cdc.num_dict)
+                                   for _ in range(self._C)]
+            return [
+                encode_decisions_np(payload_cn[ci],
+                                    state=self._np_states[ci], **kw)[0]
+                for ci in range(self._C)
+            ]
+        import jax.numpy as jnp
+        from .encoder import encode_decisions_batched, init_state
+        if cdc.backend == "pallas":
+            from repro.kernels.ops import dict_match
+            kw["matcher"] = dict_match
+        pj = jnp.asarray(payload_cn, dtype=jnp.float32)
+        if self._dev_state is None:
+            self._dev_state = init_state(cdc.num_dict, pj.shape[-1],
+                                         dtype=jnp.float32, channels=self._C)
+        # the carry is donated to the scan: the old state is consumed here
+        (h, s, o), self._dev_state = encode_decisions_batched(
+            pj, state=self._dev_state, **kw)
+        h, s, o = (np.asarray(v) for v in (h, s, o))
+        return [(h[ci], s[ci], o[ci]) for ci in range(self._C)]
+
+    def _make_header(self, ci: int, nb: int, tail: np.ndarray,
+                     more: bool) -> StreamHeader:
+        cdc = self.codec
+        return StreamHeader(
+            mode=cdc.mode_id,
+            block_size=cdc.block_size,
+            num_dict=cdc.num_dict,
+            max_count=cdc.max_count,
+            dtype=self.dtype,
+            value_range=cdc.value_range,
+            n_blocks=nb,
+            tail=tail,
+            more=more,
+            cont=self._started[ci],
+        )
+
+    def _emit(self, ci, raw, payload, bases, hit, slot, ovw, tail, more):
+        header = self._make_header(ci, len(raw), tail, more)
+        seg = stream_mod.assemble_stream(header, raw, payload, bases,
+                                         hit, slot, ovw)
+        self._started[ci] = True
+        st = self._stats[ci]
+        st.bytes_out += len(seg)
+        st.segments += 1
+        return seg
+
+    def _empty(self, ci: int):
+        B = self.codec.block_size
+        n_lem = self.codec._lem_n()
+        raw = np.zeros((0, B), dtype=self.dtype)
+        payload = np.zeros((0, n_lem), dtype=self.dtype)
+        bases = None if self.codec.mode == "std" else np.zeros(0, self.dtype)
+        z = np.zeros(0, dtype=np.int32)
+        return raw, payload, bases, z.astype(bool), z, z.astype(bool)
+
+    # ------------------------------------------------------------ public API
+    def feed(self, chunk) -> Union[bytes, List[bytes]]:
+        """Compress the next chunk; returns the emitted segment bytes (one
+        ``bytes`` for single-channel sessions, a list for ``channels=C``).
+        Samples not filling a block are buffered for the next feed/finish;
+        an empty ``bytes`` means no full block completed yet."""
+        if self._finished:
+            raise RuntimeError("session already finished")
+        arr = np.asarray(chunk)
+        if self.channels is None:
+            if arr.ndim != 1:
+                raise ValueError("single-channel session feeds 1-D chunks")
+            arr = arr[None, :]
+        elif arr.ndim != 2 or arr.shape[0] != self._C:
+            raise ValueError(f"expected (C={self._C}, m) chunk, got {arr.shape}")
+        if arr.dtype != self.dtype:
+            arr = arr.astype(self.dtype)
+
+        B = self.codec.block_size
+        joined = [np.concatenate([self._tails[ci], arr[ci]])
+                  for ci in range(self._C)]
+        nb = len(joined[0]) // B
+        self._tails = [j[nb * B:] for j in joined]
+        for ci in range(self._C):
+            self._stats[ci].bytes_in += arr[ci].nbytes
+        if nb == 0:
+            empty = [b""] * self._C
+            return empty[0] if self.channels is None else empty
+
+        blocks = np.stack([j[: nb * B].reshape(nb, B) for j in joined])
+        payloads, bases = [], []
+        for ci in range(self._C):
+            p, b = self.codec._transform(blocks[ci])
+            payloads.append(p)
+            bases.append(b)
+        decisions = self._decide(np.stack(payloads))
+
+        outs = []
+        for ci in range(self._C):
+            hit, slot, ovw = decisions[ci]
+            st = self._stats[ci]
+            st.blocks += nb
+            st.hits += int(np.sum(hit))
+            if self.emit_segments:
+                outs.append(self._emit(
+                    ci, blocks[ci], payloads[ci], bases[ci], hit, slot, ovw,
+                    tail=np.zeros(0, dtype=self.dtype), more=True))
+            else:
+                buf = self._buf[ci]
+                buf["raw"].append(blocks[ci])
+                buf["payload"].append(payloads[ci])
+                if bases[ci] is not None:
+                    buf["bases"].append(bases[ci])
+                buf["hit"].append(hit)
+                buf["slot"].append(slot)
+                buf["ovw"].append(ovw)
+                outs.append(b"")
+        return outs[0] if self.channels is None else outs
+
+    def finish(self) -> Union[bytes, List[bytes]]:
+        """Close the stream(s): emit the final segment carrying the sample
+        tail (segment mode) or assemble the whole classic one-segment stream
+        (``emit_segments=False``)."""
+        if self._finished:
+            raise RuntimeError("session already finished")
+        self._finished = True
+        outs = []
+        for ci in range(self._C):
+            if self.emit_segments:
+                raw, payload, bases, hit, slot, ovw = self._empty(ci)
+                outs.append(self._emit(ci, raw, payload, bases, hit, slot,
+                                       ovw, tail=self._tails[ci], more=False))
+            else:
+                buf = self._buf[ci]
+                if buf["raw"]:
+                    raw = np.concatenate(buf["raw"])
+                    payload = np.concatenate(buf["payload"])
+                    bases = (np.concatenate(buf["bases"])
+                             if buf["bases"] else None)
+                    hit = np.concatenate(buf["hit"])
+                    slot = np.concatenate(buf["slot"])
+                    ovw = np.concatenate(buf["ovw"])
+                else:
+                    raw, payload, bases, hit, slot, ovw = self._empty(ci)
+                outs.append(self._emit(ci, raw, payload, bases, hit, slot,
+                                       ovw, tail=self._tails[ci], more=False))
+        return outs[0] if self.channels is None else outs
+
+    @property
+    def stats(self) -> Union[SessionStats, List[SessionStats]]:
+        return self._stats[0] if self.channels is None else list(self._stats)

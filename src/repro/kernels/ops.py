@@ -1,9 +1,12 @@
 """Jit'd public wrappers around the Pallas ``dict_match`` kernel.
 
-``dict_match``     -- (ks, mm) for arbitrary D (pads to TILE_D multiple)
-``dict_match_ks``  -- encoder-compatible matcher: returns the KS distance with
-                      failed min/max gates masked to +inf, so the encoder's
-                      single `ks <= d_crit` comparison applies both checks.
+``dict_match``     -- (ks, mm) for arbitrary D (pads to TILE_D multiple).
+                      This is the encoder matcher signature: pass it as
+                      ``matcher=`` to ``repro.core.encoder.encode_decisions``
+                      so the kernel's fused min/max gate is consumed directly
+                      instead of being recomputed outside the kernel.
+``dict_match_ks``  -- legacy KS-only view (gate discarded); kept for the
+                      kernel test suite and external callers.
 """
 from __future__ import annotations
 
@@ -36,10 +39,10 @@ def dict_match(xs_sorted, dict_blocks, dmin, dmax, rel_tol: float = 0.1):
 
 
 def dict_match_ks(xs_sorted, dict_sorted, rel_tol: float = 0.5):
-    """Matcher signature used by ``repro.core.encoder.encode_decisions``.
+    """Raw KS distances from the kernel, min/max gate discarded.
 
-    The encoder applies its own min/max gate; this variant returns the raw KS
-    distances (gate handled by the encoder mask), computed by the kernel.
+    The streaming encoder no longer uses this: it passes ``dict_match`` as
+    its fused matcher and consumes (ks, mm) together.
     """
     dmin = dict_sorted[:, 0]
     dmax = dict_sorted[:, -1]

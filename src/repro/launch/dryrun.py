@@ -139,6 +139,14 @@ def parse_collectives(hlo_text: str) -> Dict[str, Dict[str, float]]:
 # ------------------------------------------------------------------- lowering
 
 
+def _mesh_context(mesh):
+    """``jax.sharding.set_mesh`` landed after the 0.4.x line; older releases
+    spell it ``use_mesh`` or rely on ``Mesh`` being a context manager."""
+    setter = getattr(jax.sharding, "set_mesh", None) or getattr(
+        jax.sharding, "use_mesh", None)
+    return setter(mesh) if setter is not None else mesh
+
+
 def build_cell(arch: str, shape_name: str, multi_pod: bool,
                microbatches: int = 0, cfg_override=None, smoke: bool = False):
     """Returns (lowered, meta) for one cell.  smoke=True swaps in the
@@ -166,7 +174,7 @@ def build_cell(arch: str, shape_name: str, multi_pod: bool,
         step = make_train_step(cfg, lr=1e-4, microbatches=mb)
         fn = jax.jit(step, in_shardings=(state_sh, batch_sh),
                      out_shardings=(state_sh, None), donate_argnums=(0,))
-        with jax.sharding.set_mesh(mesh):
+        with _mesh_context(mesh):
             lowered = fn.lower(state_shape, specs)
     elif shape.kind == "prefill":
         params_shape = jax.eval_shape(
@@ -188,7 +196,7 @@ def build_cell(arch: str, shape_name: str, multi_pod: bool,
         else:
             fn = jax.jit(pf, in_shardings=(p_sh, batch_sh["tokens"]))
             args = (params_shape, specs["tokens"])
-        with jax.sharding.set_mesh(mesh):
+        with _mesh_context(mesh):
             lowered = fn.lower(*args)
     else:  # decode
         params_shape = jax.eval_shape(
@@ -207,7 +215,7 @@ def build_cell(arch: str, shape_name: str, multi_pod: bool,
 
         fn = jax.jit(ds, in_shardings=(p_sh, cache_sh, batch_sh["tokens"]),
                      out_shardings=(None, cache_sh), donate_argnums=(1,))
-        with jax.sharding.set_mesh(mesh):
+        with _mesh_context(mesh):
             lowered = fn.lower(params_shape, cache_shape,
                                specs["tokens"])
     set_sharding_rules(None)
@@ -232,6 +240,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
         compiled = lowered.compile()
         t2 = time.time()
         cost = compiled.cost_analysis() or {}
+        if isinstance(cost, (list, tuple)):  # jax<=0.4 wraps it in a list
+            cost = cost[0] if cost else {}
         # XLA's analysis visits while bodies once -> undercounts scans;
         # kept for reference only. The roofline uses the trip-count-aware
         # numbers from hlo_cost.analyze.
@@ -249,12 +259,16 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
             rec["memory_analysis"] = {"error": str(e)}
         text = compiled.as_text()
         # persist the partitioned HLO (zstd) so analysis can be re-run
-        # without recompiling
-        import zstandard as zstd
-        os.makedirs(out_dir, exist_ok=True)
-        tag0 = f"{arch}_{shape_name}_{'multi' if multi_pod else 'single'}"
-        with open(os.path.join(out_dir, tag0 + ".hlo.zst"), "wb") as f:
-            f.write(zstd.ZstdCompressor(level=3).compress(text.encode()))
+        # without recompiling; optional -- cost analysis proceeds without it
+        try:
+            import zstandard as zstd
+        except ImportError:
+            zstd = None
+        if zstd is not None:
+            os.makedirs(out_dir, exist_ok=True)
+            tag0 = f"{arch}_{shape_name}_{'multi' if multi_pod else 'single'}"
+            with open(os.path.join(out_dir, tag0 + ".hlo.zst"), "wb") as f:
+                f.write(zstd.ZstdCompressor(level=3).compress(text.encode()))
         from repro.launch.hlo_cost import analyze as hlo_analyze
         cost2 = hlo_analyze(text)
         rec["flops_per_chip"] = cost2["flops"]

@@ -1,3 +1,4 @@
 from .engine import ServeEngine, prefill_step, serve_step
+from .compress import CompressionService
 
-__all__ = ["ServeEngine", "prefill_step", "serve_step"]
+__all__ = ["ServeEngine", "prefill_step", "serve_step", "CompressionService"]

@@ -1,0 +1,96 @@
+"""Compression-as-a-service: the IDEALEM path of the serving layer.
+
+``ServeEngine`` serves LM decode traffic; ``CompressionService`` is the
+sibling endpoint for telemetry ingest (DESIGN.md Sec. 5): many concurrent
+client streams, each an ``IdealemSession`` whose FIFO dictionary survives
+between requests, so hit rates match offline one-shot compression no matter
+how the stream is chunked over the wire.
+
+Request lifecycle:
+
+  svc = CompressionService(mode="std", block_size=32, num_dict=255)
+  svc.open_stream("pmu-7")            # or channels=C for batched sensors
+  seg = svc.feed("pmu-7", chunk)      # append-mode segment bytes (may be b"")
+  seg = svc.close_stream("pmu-7")     # final segment (tail samples)
+
+Concatenating every returned segment yields a stream that
+``repro.core.stream.decode_stream`` decodes identically to one-shot
+``IdealemCodec.encode`` over the full signal.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Union
+
+import numpy as np
+
+from repro.core import IdealemCodec
+from repro.core.session import IdealemSession, SessionStats
+
+__all__ = ["CompressionService"]
+
+
+class CompressionService:
+    """Multi-stream host endpoint over persistent ``IdealemSession`` state."""
+
+    def __init__(self, **codec_defaults):
+        self._defaults = codec_defaults
+        self._streams: Dict[str, IdealemSession] = {}
+        self._closed: Dict[str, Union[SessionStats, List[SessionStats]]] = {}
+
+    @property
+    def active_streams(self) -> List[str]:
+        return sorted(self._streams)
+
+    def open_stream(self, stream_id: str, channels: Optional[int] = None,
+                    dtype=np.float64, **codec_overrides) -> None:
+        """Register a stream; codec kwargs override the service defaults."""
+        if stream_id in self._streams:
+            raise KeyError(f"stream {stream_id!r} already open")
+        codec = IdealemCodec(**{**self._defaults, **codec_overrides})
+        self._streams[stream_id] = codec.session(channels=channels,
+                                                 dtype=dtype)
+        self._closed.pop(stream_id, None)
+
+    def feed(self, stream_id: str, chunk) -> Union[bytes, List[bytes]]:
+        """Compress the next chunk of an open stream; returns segment bytes
+        (one per channel for batched streams)."""
+        return self._session(stream_id).feed(chunk)
+
+    def close_stream(self, stream_id: str) -> Union[bytes, List[bytes]]:
+        """Finalize a stream: emits the tail-carrying final segment and
+        retires the session (stats remain queryable)."""
+        sess = self._session(stream_id)
+        seg = sess.finish()
+        self._closed[stream_id] = sess.stats
+        del self._streams[stream_id]
+        return seg
+
+    def stats(self, stream_id: Optional[str] = None) -> dict:
+        """Per-stream stats dict, or the aggregate over all streams."""
+        if stream_id is not None:
+            st = (self._streams[stream_id].stats
+                  if stream_id in self._streams else self._closed[stream_id])
+            return self._stats_dict(st)
+        agg = SessionStats()
+        for st in list(self._closed.values()) + [
+                s.stats for s in self._streams.values()]:
+            for one in (st if isinstance(st, list) else [st]):
+                agg.blocks += one.blocks
+                agg.hits += one.hits
+                agg.segments += one.segments
+                agg.bytes_in += one.bytes_in
+                agg.bytes_out += one.bytes_out
+        return agg.as_dict()
+
+    # ------------------------------------------------------------- internals
+    def _session(self, stream_id: str) -> IdealemSession:
+        try:
+            return self._streams[stream_id]
+        except KeyError:
+            raise KeyError(f"stream {stream_id!r} is not open") from None
+
+    @staticmethod
+    def _stats_dict(st):
+        if isinstance(st, list):
+            return {"channels": [one.as_dict() for one in st]}
+        return st.as_dict()

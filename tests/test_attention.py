@@ -4,6 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.models.attention import _flash, _flash_banded

@@ -2,6 +2,7 @@
 import numpy as np
 import pytest
 
+pytest.importorskip("zstandard")
 from repro.baselines import IsabelaLikeCodec, SzLikeCodec, ZfpLikeCodec
 
 

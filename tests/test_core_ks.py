@@ -7,6 +7,7 @@ import scipy.stats
 from repro.core.ks import critical_distance, ks_pvalue, ks_statistic
 from repro.core.npref import ks_pvalue_np, ks_statistic_np
 
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 

@@ -1,0 +1,159 @@
+"""Stream-format edge cases: all modes x D==1/D>=2 x f32/f64, the 0xFF
+overwrite prefix, max_count continuation-byte runs, and byte-identity of the
+vectorized serializer against the seed per-block loop."""
+import numpy as np
+import pytest
+
+from repro.core import IdealemCodec
+from repro.core.npref import encode_decisions_np
+from repro.core.stream import (
+    StreamHeader,
+    _assemble_stream_py,
+    _parse_stream_py,
+    assemble_stream,
+    decode_stream,
+    parse_stream,
+)
+
+
+def _signal(mode, n, dtype, seed=0):
+    rng = np.random.default_rng(seed)
+    if mode == "std":
+        x = rng.normal(0.0, 1.0, size=n)
+    else:
+        t = np.arange(n, dtype=np.float64)
+        x = np.mod(t * 0.7 + rng.normal(0, 0.05, size=n), 360.0)
+    return x.astype(dtype)
+
+
+def _codec(mode, num_dict, dtype, **kw):
+    vr = (0.0, 360.0) if mode != "std" else None
+    kw.setdefault("alpha", 0.05)
+    kw.setdefault("rel_tol", 0.5)
+    return IdealemCodec(mode=mode, block_size=16, num_dict=num_dict,
+                        value_range=vr, backend="numpy", **kw)
+
+
+# ------------------------------------------------- mode x D x dtype roundtrip
+@pytest.mark.parametrize("mode", ["std", "residual", "delta"])
+@pytest.mark.parametrize("num_dict", [1, 2, 255])
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_roundtrip_mode_dict_dtype(mode, num_dict, dtype):
+    c = _codec(mode, num_dict, dtype)
+    x = _signal(mode, 16 * 60 + 7, dtype)
+    blob = c.encode(x)
+    y = c.decode(blob)
+    assert len(y) == len(x)
+    assert np.all(np.isfinite(y))
+    header, events = parse_stream(blob)
+    assert header.dtype == np.dtype(dtype)
+    assert len(events) == 60
+    np.testing.assert_allclose(np.asarray(y[-7:], dtype=dtype), x[-7:])
+    # miss blocks reconstruct; res/delta re-anchor within dtype rounding
+    B = c.block_size
+    tol = 0 if mode == "std" else (1e-9 if dtype is np.float64 else 1e-3)
+    for i, ev in enumerate(events):
+        if ev["kind"] == "miss":
+            np.testing.assert_allclose(y[i * B:(i + 1) * B],
+                                       x[i * B:(i + 1) * B], atol=tol)
+
+
+# ------------------------------------------------------- 0xFF overwrite path
+@pytest.mark.parametrize("mode", ["std", "residual"])
+def test_overwrite_prefix_roundtrip(mode):
+    """A tiny dictionary on a many-source signal forces FIFO overwrites;
+    every overwrite miss must carry the 0xFF prefix and survive parsing."""
+    rng = np.random.default_rng(3)
+    # blocks alternating between widely separated levels => constant misses
+    blocks = np.concatenate([
+        rng.normal(100.0 * (i % 7), 0.1, size=(1, 16)) for i in range(60)
+    ])
+    x = np.mod(np.abs(blocks.ravel()), 360.0)
+    c = _codec(mode, 2, np.float64, alpha=0.01)
+    blob = c.encode(x)
+    _, events = parse_stream(blob)
+    n_ovw = sum(1 for e in events if e["kind"] == "miss" and e["overwrite"])
+    assert n_ovw > 10  # the pattern above must actually exercise the prefix
+    # 0xFF count in the body matches (value bytes can also be 0xFF, so count
+    # via the reference parser's event walk instead of raw byte scans)
+    _, events_py = _parse_stream_py(blob)
+    assert n_ovw == sum(1 for e in events_py
+                        if e["kind"] == "miss" and e["overwrite"])
+    y = c.decode(blob)
+    assert len(y) == len(x)
+
+
+# -------------------------------------------- max_count continuation streams
+@pytest.mark.parametrize("mode", ["std", "delta"])
+@pytest.mark.parametrize("n_hits", [0, 2, 3, 6, 7])
+def test_single_dict_max_count_runs(mode, n_hits):
+    """D==1 hit runs: a count byte equal to max_count means another count
+    byte follows; k hits cost floor(k/c)+1 count bytes (paper footnotes 7-8).
+    n_hits is chosen around c=3 to hit the ==c and multiple-of-c edges."""
+    c = _codec(mode, 1, np.float64, max_count=3, alpha=0.01)
+    B = c.block_size
+    base_block = np.linspace(0.0, 50.0, B)
+    x = np.tile(base_block, n_hits + 1)  # identical blocks: 1 miss + n hits
+    blob = c.encode(x)
+    _, events = parse_stream(blob)
+    assert sum(1 for e in events if e["kind"] == "hit") == n_hits
+    hdr_len = len(c.encode(np.zeros(0)))
+    n_count_bytes = n_hits // 3 + 1
+    if mode == "std":
+        expected = hdr_len + B * 8 + n_count_bytes
+    else:  # miss: base + B-1 deltas; each hit adds its base value
+        expected = hdr_len + B * 8 + n_count_bytes + n_hits * 8
+    assert len(blob) == expected
+    y = c.decode(blob)
+    assert len(y) == len(x)
+
+
+def test_single_dict_long_run_byte_accounting():
+    """Many continuation bytes: 1000 hits at c=255 -> 4 count bytes."""
+    c = _codec("std", 1, np.float64, max_count=255, alpha=0.01)
+    B = c.block_size
+    x = np.tile(np.linspace(0.0, 50.0, B), 1001)
+    blob = c.encode(x)
+    hdr_len = len(c.encode(np.zeros(0)))
+    assert len(blob) == hdr_len + B * 8 + (1000 // 255 + 1)
+
+
+# ------------------------------------- vectorized vs seed-loop byte identity
+@pytest.mark.parametrize("mode", ["std", "residual", "delta"])
+@pytest.mark.parametrize("num_dict", [1, 2, 5, 255])
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_assemble_matches_seed_loop(mode, num_dict, dtype):
+    """The numpy offset/scatter serializer must be byte-identical to the seed
+    per-block Python loop on real encoder decisions."""
+    c = _codec(mode, num_dict, dtype, max_count=4)
+    x = _signal(mode, 16 * 70 + 5, dtype, seed=11)
+    nb = len(x) // 16
+    blocks = x[: nb * 16].reshape(nb, 16)
+    payload, bases = c._transform(blocks)
+    is_hit, slot, ovw = encode_decisions_np(
+        payload, num_dict=num_dict, d_crit=float(c.d_crit), rel_tol=0.5)
+    header = StreamHeader(c.mode_id, 16, num_dict, c.max_count,
+                          np.dtype(dtype), c.value_range, nb, x[nb * 16:])
+    vec = assemble_stream(header, blocks, payload, bases, is_hit, slot, ovw)
+    ref = _assemble_stream_py(header, blocks, payload, bases, is_hit, slot, ovw)
+    assert vec == ref
+    # and the vectorized parser agrees with the seed parser event-for-event
+    h1, e1 = parse_stream(vec)
+    h2, e2 = _parse_stream_py(vec)
+    assert (h1.mode, h1.n_blocks, h1.num_dict) == (h2.mode, h2.n_blocks,
+                                                   h2.num_dict)
+    assert len(e1) == len(e2)
+    for a, b in zip(e1, e2):
+        assert a["kind"] == b["kind"] and a["slot"] == b["slot"]
+        if a["kind"] == "miss":
+            assert a["overwrite"] == b["overwrite"]
+            np.testing.assert_array_equal(a["payload"], b["payload"])
+        if mode != "std":
+            assert a["base"] == b["base"]
+
+
+def test_empty_stream_and_tail_only():
+    c = _codec("std", 255, np.float64)
+    assert len(c.decode(c.encode(np.zeros(0)))) == 0
+    x = np.arange(5, dtype=np.float64)  # shorter than one block: tail only
+    np.testing.assert_array_equal(c.decode(c.encode(x)), x)

@@ -6,6 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytest.importorskip("zstandard")
 from repro import checkpoint as ckpt
 from repro.configs import get_config
 from repro.data import synthetic
