@@ -2,7 +2,8 @@
 PY ?= python
 export PYTHONPATH := src
 
-.PHONY: test test-core bench bench-stream example-stream
+.PHONY: test test-core bench bench-stream bench-shard shard-check \
+	example-stream
 
 # Tier-1 verification (ROADMAP.md): the full suite, fail-fast.
 test:
@@ -19,6 +20,13 @@ bench:
 
 bench-stream:
 	$(PY) -m benchmarks.bench_stream_io
+
+bench-shard:
+	$(PY) -m benchmarks.bench_shard_encode
+
+# Sharded-encode byte-identity self-check on forced host devices.
+shard-check:
+	REPRO_SHARD_DEVICES=4 $(PY) -m repro.launch.shard_check
 
 example-stream:
 	$(PY) examples/stream_compress.py --channels 8 --samples 16384

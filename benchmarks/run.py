@@ -12,8 +12,8 @@ import traceback
 def main() -> None:
     from . import (bench_fig3_pvalue, bench_fig12_spectral,
                    bench_fig14_tradeoff, bench_fig15_speed, bench_gradcomp,
-                   bench_limits, bench_stream_io, bench_table1_ratio,
-                   bench_table2_quality, roofline)
+                   bench_limits, bench_shard_encode, bench_stream_io,
+                   bench_table1_ratio, bench_table2_quality, roofline)
     modules = [
         ("table1", bench_table1_ratio),
         ("table2", bench_table2_quality),
@@ -24,6 +24,7 @@ def main() -> None:
         ("limits", bench_limits),
         ("gradcomp", bench_gradcomp),
         ("stream_io", bench_stream_io),
+        ("shard_encode", bench_shard_encode),
         ("roofline", roofline),
     ]
     failed = []

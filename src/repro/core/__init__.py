@@ -7,14 +7,16 @@ Public API:
   residual/delta transforms, quality measures
 """
 from .idealem import IdealemCodec
-from .session import IdealemSession, SessionStats
+from .session import IdealemSession, PreparedChunk, SessionStats
 from .ks import critical_distance, ks_pvalue, ks_statistic, ks_statistic_many
-from .encoder import DictState, encode_decisions, encode_decisions_batched, init_state
+from .encoder import (DictState, encode_decisions, encode_decisions_batched,
+                      encode_decisions_sharded, init_state)
 from .metrics import quality_measures, amplitude_spectrum, spectral_band_error
 
 __all__ = [
     "IdealemCodec",
     "IdealemSession",
+    "PreparedChunk",
     "SessionStats",
     "DictState",
     "init_state",
@@ -24,6 +26,7 @@ __all__ = [
     "ks_statistic_many",
     "encode_decisions",
     "encode_decisions_batched",
+    "encode_decisions_sharded",
     "quality_measures",
     "amplitude_spectrum",
     "spectral_band_error",

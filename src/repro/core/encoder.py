@@ -40,6 +40,7 @@ __all__ = [
     "matcher_reference",
     "encode_decisions",
     "encode_decisions_batched",
+    "encode_decisions_sharded",
 ]
 
 
@@ -99,7 +100,16 @@ def matcher_reference(xs_sorted, dict_sorted, dmin, dmax, rel_tol):
     return ks, mm
 
 
-def _step(matcher, params: EncoderParams, state: DictState, block: jax.Array):
+def _step(matcher, params: EncoderParams, state: DictState, block_valid):
+    """One scan step over ``(block, block_valid)``.
+
+    ``block_valid`` is the ragged-batch padding mask: a False step is a
+    no-op -- the carry passes through untouched and the decision triple is
+    all-zero -- so channels with fewer real blocks than the padded batch
+    (coalesced serving batches, sharded channel padding) stay
+    decision-identical to an unpadded scan.
+    """
+    block, valid = block_valid
     num_dict = state.sorted_blocks.shape[0]
     xs = jnp.sort(block)
     xmin, xmax = xs[0], xs[-1]
@@ -111,15 +121,16 @@ def _step(matcher, params: EncoderParams, state: DictState, block: jax.Array):
     ks_ok = (ks <= params.d_crit) if params.use_ks else ones
 
     ok = state.valid & mm_ok & ks_ok
-    is_hit = jnp.any(ok)
+    is_hit = jnp.any(ok) & valid
     first_hit = jnp.argmax(ok)  # lowest passing slot == early-exit result
 
     # FIFO insert slot on miss: fill 0..D-1, then overwrite oldest.
     ins_slot = jnp.mod(state.count, num_dict)
-    overwrite = (~is_hit) & (state.count >= num_dict)
+    do_ins = (~is_hit) & valid
+    overwrite = do_ins & (state.count >= num_dict)
     slot = jnp.where(is_hit, first_hit, ins_slot).astype(jnp.int32)
+    slot = jnp.where(valid, slot, 0)
 
-    do_ins = ~is_hit
     new_sorted = jax.lax.dynamic_update_slice(
         state.sorted_blocks, xs[None, :], (ins_slot, 0)
     )
@@ -150,7 +161,7 @@ def _encode_scan():
                          "matcher"),
         donate_argnums=donate,
     )
-    def scan(state: DictState, blocks, *, d_crit, rel_tol, use_minmax,
+    def scan(state: DictState, blocks, valid, *, d_crit, rel_tol, use_minmax,
              use_ks, matcher):
         params = EncoderParams(
             d_crit=d_crit, rel_tol=rel_tol, use_minmax=use_minmax,
@@ -158,7 +169,7 @@ def _encode_scan():
         )
         step = functools.partial(_step, matcher, params)
         new_state, (is_hit, slot, overwrite) = jax.lax.scan(step, state,
-                                                            blocks)
+                                                            (blocks, valid))
         return (is_hit, slot, overwrite), new_state
 
     return scan
@@ -174,6 +185,7 @@ def encode_decisions(
     use_ks: bool = True,
     matcher: Optional[Callable] = None,
     state: Optional[DictState] = None,
+    valid: Optional[jax.Array] = None,
 ):
     """Encode a (nb, n) stack of (already transformed) blocks.
 
@@ -186,6 +198,10 @@ def encode_decisions(
     concatenated blocks.  The passed-in state is donated on accelerators --
     treat it as consumed.
 
+    ``valid`` is an optional (nb,) padding mask: False steps leave the
+    carry untouched and emit an all-zero decision, so ragged batches padded
+    to a common block count stay decision-identical to unpadded scans.
+
     ``matcher(xs_sorted, dict_sorted, dmin, dmax, rel_tol) -> (ks, mm)``
     defaults to the pure-jnp oracle; pass ``repro.kernels.ops.dict_match``
     for the Pallas kernel (its fused min/max gate is used directly).
@@ -195,8 +211,10 @@ def encode_decisions(
     return_state = state is not None
     if state is None:
         state = init_state(num_dict, blocks.shape[-1], dtype=blocks.dtype)
+    if valid is None:
+        valid = jnp.ones(blocks.shape[0], dtype=bool)
     out, new_state = _encode_scan()(
-        state, blocks, d_crit=float(d_crit), rel_tol=float(rel_tol),
+        state, blocks, valid, d_crit=float(d_crit), rel_tol=float(rel_tol),
         use_minmax=use_minmax, use_ks=use_ks, matcher=matcher,
     )
     return (out, new_state) if return_state else out
@@ -207,6 +225,7 @@ def encode_decisions_batched(
     *,
     num_dict: int,
     state: Optional[DictState] = None,
+    valid: Optional[jax.Array] = None,
     **kw,
 ):
     """Multi-channel encoder: blocks (C, nb, n) with per-channel DictState.
@@ -215,7 +234,8 @@ def encode_decisions_batched(
     (``state=None``) returns the (C, nb) decision triple; resumable
     (``state=init_state(..., channels=C)`` or a previous return) returns
     ``((is_hit, slot, overwrite), new_state)`` with the carry stacked on
-    the leading channel axis.
+    the leading channel axis.  ``valid`` (C, nb) masks padded blocks of
+    ragged channels (coalesced serving batches).
     """
     return_state = state is not None
     if state is None:
@@ -223,9 +243,122 @@ def encode_decisions_batched(
             num_dict, blocks_cn.shape[-1], dtype=blocks_cn.dtype,
             channels=blocks_cn.shape[0],
         )
+    if valid is None:
+        valid = jnp.ones(blocks_cn.shape[:2], dtype=bool)
 
-    def one(s, b):
-        return encode_decisions(b, num_dict=num_dict, state=s, **kw)
+    def one(s, b, v):
+        return encode_decisions(b, num_dict=num_dict, state=s, valid=v, **kw)
 
-    out, new_state = jax.vmap(one)(state, blocks_cn)
+    out, new_state = jax.vmap(one)(state, blocks_cn, valid)
+    return (out, new_state) if return_state else out
+
+
+# ------------------------------------------------------- sharded scale-out
+def state_partition_spec(axis_name: str):
+    """``DictState``-shaped PartitionSpec pytree: every carry field split
+    on its leading channel axis.  The single place that knows the field
+    layout -- ``shard_map`` in_specs and the launch-layer device placement
+    (``EncodePlan.state_sharding``) both derive from it."""
+    from jax.sharding import PartitionSpec as P
+
+    return DictState(
+        sorted_blocks=P(axis_name, None, None),
+        dmin=P(axis_name, None),
+        dmax=P(axis_name, None),
+        valid=P(axis_name, None),
+        count=P(axis_name),
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_scan(mesh, axis_name: str):
+    """shard_map'd version of the batched scan: the channel axis is split
+    across ``mesh``'s devices; each shard runs the same vmapped scan (and
+    therefore the same matcher -- the pallas kernel dispatches per shard),
+    so outputs are bit-identical to the single-device batched encode.
+
+    The per-channel carry lives sharded on its device between calls and is
+    donated like the single-device path."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    donate = (0,) if jax.default_backend() in ("tpu", "gpu") else ()
+    st_spec = state_partition_spec(axis_name)
+    blk_spec = P(axis_name, None, None)
+    msk_spec = P(axis_name, None)
+    out_spec = (P(axis_name, None),) * 3
+
+    @functools.partial(
+        jax.jit,
+        static_argnames=("d_crit", "rel_tol", "use_minmax", "use_ks",
+                         "matcher"),
+        donate_argnums=donate,
+    )
+    def scan(state, blocks, valid, *, d_crit, rel_tol, use_minmax, use_ks,
+             matcher):
+        params = EncoderParams(d_crit=d_crit, rel_tol=rel_tol,
+                               use_minmax=use_minmax, use_ks=use_ks)
+        step = functools.partial(_step, matcher, params)
+
+        def shard(s, b, v):
+            def one(s1, b1, v1):
+                new_s, out = jax.lax.scan(step, s1, (b1, v1))
+                return out, new_s
+
+            return jax.vmap(one)(s, b, v)
+
+        # check_rep=False: the pallas matcher has no replication rule; all
+        # operands map over the channel axis anyway (no replicated outputs).
+        return shard_map(
+            shard, mesh=mesh,
+            in_specs=(st_spec, blk_spec, msk_spec),
+            out_specs=(out_spec, st_spec),
+            check_rep=False,
+        )(state, blocks, valid)
+
+    return scan
+
+
+def encode_decisions_sharded(
+    blocks_cn: jax.Array,
+    *,
+    mesh,
+    axis_name: str,
+    num_dict: int,
+    d_crit: float,
+    rel_tol: float = 0.1,
+    use_minmax: bool = True,
+    use_ks: bool = True,
+    matcher: Optional[Callable] = None,
+    state: Optional[DictState] = None,
+    valid: Optional[jax.Array] = None,
+):
+    """Scale-out variant of ``encode_decisions_batched``: the leading
+    channel axis of ``blocks_cn`` (C, nb, n) is sharded over the 1-D
+    ``mesh`` (see ``repro.launch.encode_plan``) and each device scans its
+    channel shard with a device-resident, donated carry.
+
+    C must be a multiple of the mesh axis size -- pad channels up and mask
+    them out via ``valid`` (an ``EncodePlan`` computes the padding).
+    Decisions (and therefore stream bytes) are bit-identical to the
+    single-device batched encode of the same channels.
+    """
+    if matcher is None:
+        matcher = matcher_reference
+    C = blocks_cn.shape[0]
+    if C % mesh.shape[axis_name] != 0:
+        raise ValueError(
+            f"channels={C} not divisible by mesh axis "
+            f"{axis_name}={mesh.shape[axis_name]}; pad via EncodePlan")
+    return_state = state is not None
+    if state is None:
+        state = init_state(num_dict, blocks_cn.shape[-1],
+                           dtype=blocks_cn.dtype, channels=C)
+    if valid is None:
+        valid = jnp.ones(blocks_cn.shape[:2], dtype=bool)
+    out, new_state = _sharded_scan(mesh, axis_name)(
+        state, blocks_cn, valid, d_crit=float(d_crit),
+        rel_tol=float(rel_tol), use_minmax=use_minmax, use_ks=use_ks,
+        matcher=matcher,
+    )
     return (out, new_state) if return_state else out

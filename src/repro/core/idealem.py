@@ -86,10 +86,16 @@ class IdealemCodec:
     # ------------------------------------------------------------ public API
     def session(self, channels: Optional[int] = None,
                 emit_segments: bool = True,
-                dtype=np.float64) -> IdealemSession:
-        """Open a resumable streaming session with this configuration."""
+                dtype=np.float64, plan=None) -> IdealemSession:
+        """Open a resumable streaming session with this configuration.
+
+        ``plan`` (a ``repro.launch.encode_plan.EncodePlan``) shards the
+        channel axis of the device scan across the plan's mesh; output
+        bytes are identical to the unplanned session.
+        """
         return IdealemSession(self, channels=channels,
-                              emit_segments=emit_segments, dtype=dtype)
+                              emit_segments=emit_segments, dtype=dtype,
+                              plan=plan)
 
     def encode(self, x: np.ndarray) -> bytes:
         """One-shot encode: a single-feed session assembled as one segment."""

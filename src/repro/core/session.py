@@ -35,7 +35,7 @@ throughput after the first chunk.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import TYPE_CHECKING, List, Optional, Union
+from typing import TYPE_CHECKING, List, NamedTuple, Optional, Union
 
 import numpy as np
 
@@ -45,7 +45,22 @@ from .stream import StreamHeader
 if TYPE_CHECKING:  # pragma: no cover
     from .idealem import IdealemCodec
 
-__all__ = ["IdealemSession", "SessionStats"]
+__all__ = ["IdealemSession", "PreparedChunk", "SessionStats"]
+
+
+class PreparedChunk(NamedTuple):
+    """Host-side staging of one feed: complete blocks cut from the chunk
+    (tails already re-buffered) with their transforms applied.
+
+    ``feed`` prepares and decides in one call; the serve-layer coalescer
+    prepares many sessions, batches their payloads into one padded device
+    call, then ``commit``s each session's decisions back.
+    """
+
+    blocks: np.ndarray            # (C, nb, B) raw values
+    payloads: np.ndarray          # (C, nb, n_lem) transformed
+    bases: List[Optional[np.ndarray]]  # per channel, (nb,) or None (std)
+    nb: int
 
 
 @dataclass
@@ -81,7 +96,7 @@ class IdealemSession:
     """
 
     def __init__(self, codec: "IdealemCodec", channels: Optional[int] = None,
-                 emit_segments: bool = True, dtype=np.float64):
+                 emit_segments: bool = True, dtype=np.float64, plan=None):
         self.codec = codec
         self.channels = channels
         self.emit_segments = emit_segments
@@ -89,6 +104,13 @@ class IdealemSession:
         C = self._C = channels if channels is not None else 1
         if channels is not None and channels < 1:
             raise ValueError("channels must be >= 1")
+        if plan is not None:
+            if codec.backend == "numpy":
+                raise ValueError("encode plans need a device backend")
+            if plan.channels != C:
+                raise ValueError(
+                    f"plan is for {plan.channels} channels, session has {C}")
+        self.plan = plan  # launch.encode_plan.EncodePlan (duck-typed)
         self._tails = [np.zeros(0, dtype=self.dtype) for _ in range(C)]
         self._started = [False] * C  # any segment emitted yet (per channel)
         self._finished = False
@@ -124,18 +146,41 @@ class IdealemSession:
                                     state=self._np_states[ci], **kw)[0]
                 for ci in range(self._C)
             ]
+        import jax
         import jax.numpy as jnp
-        from .encoder import encode_decisions_batched, init_state
+        from .encoder import (encode_decisions_batched,
+                              encode_decisions_sharded, init_state)
         if cdc.backend == "pallas":
             from repro.kernels.ops import dict_match
             kw["matcher"] = dict_match
-        pj = jnp.asarray(payload_cn, dtype=jnp.float32)
-        if self._dev_state is None:
-            self._dev_state = init_state(cdc.num_dict, pj.shape[-1],
-                                         dtype=jnp.float32, channels=self._C)
-        # the carry is donated to the scan: the old state is consumed here
-        (h, s, o), self._dev_state = encode_decisions_batched(
-            pj, state=self._dev_state, **kw)
+        if self.plan is not None:
+            # scale-out path: channel axis sharded over the plan's mesh;
+            # pad rows are masked out of the scan and sliced off below.
+            plan = self.plan
+            Cp = plan.padded_channels
+            pad = Cp - self._C
+            if pad:
+                payload_cn = np.pad(
+                    payload_cn, [(0, pad), (0, 0), (0, 0)])
+            pj = jnp.asarray(payload_cn, dtype=jnp.float32)
+            valid = np.ones(pj.shape[:2], dtype=bool)
+            valid[self._C:] = False
+            if self._dev_state is None:
+                st = init_state(cdc.num_dict, pj.shape[-1],
+                                dtype=jnp.float32, channels=Cp)
+                self._dev_state = jax.device_put(st, plan.state_sharding())
+            (h, s, o), self._dev_state = encode_decisions_sharded(
+                pj, mesh=plan.mesh, axis_name=plan.axis_name,
+                state=self._dev_state, valid=jnp.asarray(valid), **kw)
+        else:
+            pj = jnp.asarray(payload_cn, dtype=jnp.float32)
+            if self._dev_state is None:
+                self._dev_state = init_state(
+                    cdc.num_dict, pj.shape[-1], dtype=jnp.float32,
+                    channels=self._C)
+            # the carry is donated to the scan: the old state is consumed
+            (h, s, o), self._dev_state = encode_decisions_batched(
+                pj, state=self._dev_state, **kw)
         h, s, o = (np.asarray(v) for v in (h, s, o))
         return [(h[ci], s[ci], o[ci]) for ci in range(self._C)]
 
@@ -175,11 +220,12 @@ class IdealemSession:
         return raw, payload, bases, z.astype(bool), z, z.astype(bool)
 
     # ------------------------------------------------------------ public API
-    def feed(self, chunk) -> Union[bytes, List[bytes]]:
-        """Compress the next chunk; returns the emitted segment bytes (one
-        ``bytes`` for single-channel sessions, a list for ``channels=C``).
-        Samples not filling a block are buffered for the next feed/finish;
-        an empty ``bytes`` means no full block completed yet."""
+    def prepare(self, chunk) -> Optional[PreparedChunk]:
+        """Stage a chunk host-side: buffer the sample tails, cut complete
+        blocks and apply the codec transform.  Returns ``None`` when no
+        full block completed.  ``feed`` is ``prepare`` + ``_decide`` +
+        ``commit``; the serve-layer coalescer calls prepare/commit around
+        one shared batched decide."""
         if self._finished:
             raise RuntimeError("session already finished")
         arr = np.asarray(chunk)
@@ -200,8 +246,7 @@ class IdealemSession:
         for ci in range(self._C):
             self._stats[ci].bytes_in += arr[ci].nbytes
         if nb == 0:
-            empty = [b""] * self._C
-            return empty[0] if self.channels is None else empty
+            return None
 
         blocks = np.stack([j[: nb * B].reshape(nb, B) for j in joined])
         payloads, bases = [], []
@@ -209,28 +254,45 @@ class IdealemSession:
             p, b = self.codec._transform(blocks[ci])
             payloads.append(p)
             bases.append(b)
-        decisions = self._decide(np.stack(payloads))
+        return PreparedChunk(blocks, np.stack(payloads), bases, nb)
 
+    def commit(self, prep: PreparedChunk, decisions) -> List[bytes]:
+        """Apply per-channel decision triples for a prepared chunk: update
+        stats and emit (or buffer) each channel's segment.  Always returns
+        a per-channel list; decisions may cover only ``prep.nb`` blocks."""
         outs = []
         for ci in range(self._C):
             hit, slot, ovw = decisions[ci]
             st = self._stats[ci]
-            st.blocks += nb
+            st.blocks += prep.nb
             st.hits += int(np.sum(hit))
             if self.emit_segments:
                 outs.append(self._emit(
-                    ci, blocks[ci], payloads[ci], bases[ci], hit, slot, ovw,
-                    tail=np.zeros(0, dtype=self.dtype), more=True))
+                    ci, prep.blocks[ci], prep.payloads[ci], prep.bases[ci],
+                    hit, slot, ovw, tail=np.zeros(0, dtype=self.dtype),
+                    more=True))
             else:
                 buf = self._buf[ci]
-                buf["raw"].append(blocks[ci])
-                buf["payload"].append(payloads[ci])
-                if bases[ci] is not None:
-                    buf["bases"].append(bases[ci])
+                buf["raw"].append(prep.blocks[ci])
+                buf["payload"].append(prep.payloads[ci])
+                if prep.bases[ci] is not None:
+                    buf["bases"].append(prep.bases[ci])
                 buf["hit"].append(hit)
                 buf["slot"].append(slot)
                 buf["ovw"].append(ovw)
                 outs.append(b"")
+        return outs
+
+    def feed(self, chunk) -> Union[bytes, List[bytes]]:
+        """Compress the next chunk; returns the emitted segment bytes (one
+        ``bytes`` for single-channel sessions, a list for ``channels=C``).
+        Samples not filling a block are buffered for the next feed/finish;
+        an empty ``bytes`` means no full block completed yet."""
+        prep = self.prepare(chunk)
+        if prep is None:
+            empty = [b""] * self._C
+            return empty[0] if self.channels is None else empty
+        outs = self.commit(prep, self._decide(prep.payloads))
         return outs[0] if self.channels is None else outs
 
     def finish(self) -> Union[bytes, List[bytes]]:

@@ -1,3 +1,5 @@
+from .encode_plan import EncodePlan, make_encode_plan, pad_channels, shard_state
 from .mesh import batch_axes, make_debug_mesh, make_production_mesh
 
-__all__ = ["batch_axes", "make_debug_mesh", "make_production_mesh"]
+__all__ = ["EncodePlan", "make_encode_plan", "pad_channels", "shard_state",
+           "batch_axes", "make_debug_mesh", "make_production_mesh"]

@@ -1,0 +1,122 @@
+"""Encode plans: how a batched (C, nb, n) encode spreads over the devices.
+
+The batched encoder (DESIGN.md Sec. 2) treats channels as embarrassingly
+parallel; this module decides the mapping onto hardware for the scale-out
+path (DESIGN.md Sec. 6):
+
+  * mesh shape: a 1-D mesh over (at most) all local devices -- never more
+    devices than channels, a device with zero channels is wasted;
+  * channel padding: C rounded up to a mesh-axis multiple, the pad rows
+    masked out of the scan with the encoder's block-validity mask;
+  * block quantum: the suggested per-feed block count that keeps every
+    shard's scan long enough to amortize dispatch (one compiled shape).
+
+Plans are plain data: the codec core takes ``mesh``/``axis_name`` and
+padded arrays, so ``repro.core`` stays free of launch-layer imports.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["EncodePlan", "make_encode_plan", "shard_state", "pad_channels"]
+
+# Per-shard bytes of block payload a single feed step should carry before
+# scan-dispatch overhead stops dominating (CPU/TPU measured order only).
+_QUANTUM_BYTES = 1 << 20
+
+
+class EncodePlan(NamedTuple):
+    """Placement decision for one batched encode configuration."""
+
+    mesh: Mesh
+    axis_name: str
+    channels: int          # logical channel count C
+    padded_channels: int   # C rounded up to a devices multiple
+    shard_channels: int    # channels resident per device
+    block_quantum: int     # suggested blocks per channel per feed step
+
+    @property
+    def num_devices(self) -> int:
+        return self.mesh.shape[self.axis_name]
+
+    def channel_sharding(self, trailing_dims: int = 0) -> NamedSharding:
+        """Sharding for an array with a leading channel axis."""
+        return NamedSharding(
+            self.mesh, P(self.axis_name, *([None] * trailing_dims)))
+
+    def state_sharding(self):
+        """``DictState``-shaped sharding pytree for carry placement
+        (sessions and the serve coalescer device_put with this, keeping
+        ``repro.core`` free of launch imports).  The field layout comes
+        from ``encoder.state_partition_spec`` -- the one source of truth
+        the shard_map in_specs also use."""
+        from repro.core.encoder import state_partition_spec
+
+        specs = state_partition_spec(self.axis_name)
+        return type(specs)(*(NamedSharding(self.mesh, p) for p in specs))
+
+    def summary(self) -> dict:
+        return {
+            "devices": self.num_devices,
+            "channels": self.channels,
+            "padded_channels": self.padded_channels,
+            "shard_channels": self.shard_channels,
+            "block_quantum": self.block_quantum,
+        }
+
+
+def make_encode_plan(
+    channels: int,
+    *,
+    block_size: int = 32,
+    itemsize: int = 4,
+    devices: Optional[Sequence] = None,
+    axis_name: str = "channels",
+) -> EncodePlan:
+    """Pick mesh shape, channel padding and per-shard batch quantum.
+
+    ``devices`` defaults to all local devices; pass a subset to pin the
+    encode to specific chips.  ``itemsize`` is the on-device payload dtype
+    (the encoder computes in float32 by default).
+    """
+    if channels < 1:
+        raise ValueError("channels must be >= 1")
+    devs = list(devices) if devices is not None else jax.devices()
+    nd = max(1, min(len(devs), channels))
+    mesh = Mesh(np.array(devs[:nd]), (axis_name,))
+    padded = -(-channels // nd) * nd
+    shard_channels = padded // nd
+    quantum = max(1, _QUANTUM_BYTES // (shard_channels * block_size * itemsize))
+    return EncodePlan(
+        mesh=mesh,
+        axis_name=axis_name,
+        channels=channels,
+        padded_channels=padded,
+        shard_channels=shard_channels,
+        block_quantum=quantum,
+    )
+
+
+def pad_channels(plan: EncodePlan, arr: np.ndarray) -> np.ndarray:
+    """Pad the leading channel axis of a host array up to the plan's padded
+    channel count (pad rows are masked out of the scan by the caller)."""
+    pad = plan.padded_channels - arr.shape[0]
+    if pad == 0:
+        return arr
+    width = [(0, pad)] + [(0, 0)] * (arr.ndim - 1)
+    return np.pad(arr, width)
+
+
+def shard_state(plan: EncodePlan, state):
+    """Place a ``DictState`` with a (padded) leading channel axis so each
+    device holds its channel shard (the carry then stays device-resident
+    across resumable encode calls)."""
+    if state.count.shape[0] != plan.padded_channels:
+        raise ValueError(
+            f"state carries {state.count.shape[0]} channels, plan expects "
+            f"{plan.padded_channels} (padded)")
+    return jax.device_put(state, plan.state_sharding())

@@ -1,4 +1,5 @@
-from .engine import ServeEngine, prefill_step, serve_step
-from .compress import CompressionService
+from .engine import FlushPolicy, ServeEngine, prefill_step, serve_step
+from .compress import CompressionService, StreamCoalescer
 
-__all__ = ["ServeEngine", "prefill_step", "serve_step", "CompressionService"]
+__all__ = ["FlushPolicy", "ServeEngine", "prefill_step", "serve_step",
+           "CompressionService", "StreamCoalescer"]

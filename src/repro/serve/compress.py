@@ -16,6 +16,15 @@ Request lifecycle:
 Concatenating every returned segment yields a stream that
 ``repro.core.stream.decode_stream`` decodes identically to one-shot
 ``IdealemCodec.encode`` over the full signal.
+
+``CompressionService`` dispatches one device scan per feed per stream --
+right for few fat streams.  ``StreamCoalescer`` (DESIGN.md Sec. 6) is the
+heavy-traffic endpoint: it accumulates ``submit()`` payloads from many
+live streams and, when its ``FlushPolicy`` trips, cuts ONE padded device
+batch (streams stacked on the channel axis, ragged block counts masked),
+then scatters the encoded segments back per stream.  Per-stream bytes are
+identical to what the per-stream service would emit; an ``EncodePlan``
+shards the batch's channel axis across devices.
 """
 from __future__ import annotations
 
@@ -26,7 +35,17 @@ import numpy as np
 from repro.core import IdealemCodec
 from repro.core.session import IdealemSession, SessionStats
 
-__all__ = ["CompressionService"]
+from .engine import FlushPolicy
+
+__all__ = ["CompressionService", "StreamCoalescer"]
+
+
+def _fold_stats(agg: SessionStats, st: SessionStats) -> None:
+    agg.blocks += st.blocks
+    agg.hits += st.hits
+    agg.segments += st.segments
+    agg.bytes_in += st.bytes_in
+    agg.bytes_out += st.bytes_out
 
 
 class CompressionService:
@@ -36,6 +55,9 @@ class CompressionService:
         self._defaults = codec_defaults
         self._streams: Dict[str, IdealemSession] = {}
         self._closed: Dict[str, Union[SessionStats, List[SessionStats]]] = {}
+        # closed streams whose id was reopened: per-id stats are replaced,
+        # but their traffic must stay in the service aggregate
+        self._retired = SessionStats()
 
     @property
     def active_streams(self) -> List[str]:
@@ -49,7 +71,10 @@ class CompressionService:
         codec = IdealemCodec(**{**self._defaults, **codec_overrides})
         self._streams[stream_id] = codec.session(channels=channels,
                                                  dtype=dtype)
-        self._closed.pop(stream_id, None)
+        old = self._closed.pop(stream_id, None)
+        if old is not None:
+            for one in (old if isinstance(old, list) else [old]):
+                _fold_stats(self._retired, one)
 
     def feed(self, stream_id: str, chunk) -> Union[bytes, List[bytes]]:
         """Compress the next chunk of an open stream; returns segment bytes
@@ -72,14 +97,11 @@ class CompressionService:
                   if stream_id in self._streams else self._closed[stream_id])
             return self._stats_dict(st)
         agg = SessionStats()
+        _fold_stats(agg, self._retired)
         for st in list(self._closed.values()) + [
                 s.stats for s in self._streams.values()]:
             for one in (st if isinstance(st, list) else [st]):
-                agg.blocks += one.blocks
-                agg.hits += one.hits
-                agg.segments += one.segments
-                agg.bytes_in += one.bytes_in
-                agg.bytes_out += one.bytes_out
+                _fold_stats(agg, one)
         return agg.as_dict()
 
     # ------------------------------------------------------------- internals
@@ -94,3 +116,233 @@ class CompressionService:
         if isinstance(st, list):
             return {"channels": [one.as_dict() for one in st]}
         return st.as_dict()
+
+
+class StreamCoalescer:
+    """Batch many live streams into one padded device encode per step.
+
+    Every open stream owns a channel slot in one batched ``DictState``
+    cohort (slots are reset on reuse, so a recycled slot behaves like a
+    fresh dictionary).  ``submit`` only stages bytes host-side; the device
+    is touched once per ``flush`` -- triggered by the ``FlushPolicy`` or
+    called explicitly -- which cuts a single ``(capacity, nb, n)`` scan
+    with ragged streams padded and masked, then scatters each stream's
+    segment bytes back.
+
+    One codec configuration per coalescer: heterogeneous configs cannot
+    share a scan (route them to separate coalescers or the plain
+    ``CompressionService``).
+
+    ``plan`` (``repro.launch.encode_plan.EncodePlan``) shards the slot
+    axis over its mesh; capacity is then pinned to the plan's padded
+    channel count.  Without a plan the slot table doubles on demand.
+    ``block_bucket`` rounds the padded scan length up so recurring traffic
+    reuses a handful of compiled shapes.
+    """
+
+    def __init__(self, policy: Optional[FlushPolicy] = None, plan=None,
+                 capacity: int = 64, block_bucket: int = 32,
+                 dtype=np.float64, **codec_kwargs):
+        self._codec = IdealemCodec(**codec_kwargs)
+        if self._codec.backend == "numpy":
+            raise ValueError("StreamCoalescer batches on device; use "
+                             "CompressionService for the numpy backend")
+        if plan is not None and plan.channels != plan.padded_channels:
+            raise ValueError("coalescer plans must be made for a padded "
+                             "channel count (channels % devices == 0)")
+        self.policy = policy or FlushPolicy()
+        self.plan = plan
+        self._capacity = plan.padded_channels if plan is not None else capacity
+        self._bucket = max(1, block_bucket)
+        self._dtype = np.dtype(dtype)
+        self._sessions: Dict[str, IdealemSession] = {}
+        self._slots: Dict[str, int] = {}
+        self._free = list(range(self._capacity))[::-1]  # pop() -> lowest
+        self._pending: Dict[str, List[np.ndarray]] = {}
+        # per-stream staged samples (carried tail + pending chunks) plus
+        # aggregate flush-pressure counters, kept incrementally so submit()
+        # stays O(1) no matter how many streams are open
+        self._buffered: Dict[str, int] = {}
+        self._ready_streams = 0
+        self._ready_blocks = 0
+        self._state = None  # batched DictState over capacity slots
+        self._closed: Dict[str, SessionStats] = {}
+        self._retired = SessionStats()  # closed ids later reopened
+
+    @property
+    def active_streams(self) -> List[str]:
+        return sorted(self._sessions)
+
+    @property
+    def capacity(self) -> int:
+        return self._capacity
+
+    # ------------------------------------------------------------- lifecycle
+    def open_stream(self, stream_id: str) -> None:
+        if stream_id in self._sessions:
+            raise KeyError(f"stream {stream_id!r} already open")
+        if not self._free:
+            self._grow()
+        slot = self._free.pop()
+        self._reset_slot(slot)
+        self._sessions[stream_id] = self._codec.session(dtype=self._dtype)
+        self._slots[stream_id] = slot
+        self._pending[stream_id] = []
+        self._buffered[stream_id] = 0
+        old = self._closed.pop(stream_id, None)
+        if old is not None:
+            _fold_stats(self._retired, old)
+
+    def submit(self, stream_id: str, chunk) -> Optional[Dict[str, bytes]]:
+        """Stage a chunk; returns the flush result when the policy trips
+        (segments for every flushed stream, keyed by stream id), else
+        ``None``.  No device work happens before the flush."""
+        if stream_id not in self._sessions:
+            raise KeyError(f"stream {stream_id!r} is not open")
+        arr = np.asarray(chunk)
+        if arr.ndim != 1:
+            raise ValueError("coalesced streams feed 1-D chunks")
+        self._pending[stream_id].append(arr)
+        B = self._codec.block_size
+        old = self._buffered[stream_id]
+        new = old + len(arr)
+        self._buffered[stream_id] = new
+        self._ready_blocks += new // B - old // B
+        if old // B == 0 and new // B > 0:
+            self._ready_streams += 1
+        if self.policy.should_flush(self._ready_streams, self._ready_blocks):
+            return self.flush()
+        return None
+
+    def flush(self) -> Dict[str, bytes]:
+        """Encode all pending blocks in one padded device batch and return
+        each flushed stream's segment bytes."""
+        return self._flush(list(self._sessions))
+
+    def close_stream(self, stream_id: str) -> bytes:
+        """Flush the stream's pending samples, emit its tail-carrying final
+        segment, and recycle its slot."""
+        sess = self._sessions.get(stream_id)
+        if sess is None:
+            raise KeyError(f"stream {stream_id!r} is not open")
+        flushed = self._flush([stream_id]).get(stream_id, b"")
+        final = sess.finish()
+        self._closed[stream_id] = sess.stats
+        self._free.append(self._slots.pop(stream_id))
+        del self._sessions[stream_id]
+        del self._pending[stream_id]
+        del self._buffered[stream_id]
+        return flushed + final
+
+    def stats(self, stream_id: Optional[str] = None) -> dict:
+        if stream_id is not None:
+            st = (self._sessions[stream_id].stats
+                  if stream_id in self._sessions
+                  else self._closed[stream_id])
+            return st.as_dict()
+        agg = SessionStats()
+        _fold_stats(agg, self._retired)
+        for st in list(self._closed.values()) + [
+                s.stats for s in self._sessions.values()]:
+            _fold_stats(agg, st)
+        return agg.as_dict()
+
+    # ------------------------------------------------------------- internals
+    def _reset_slot(self, slot: int) -> None:
+        """A recycled slot must look like a fresh dictionary: clearing the
+        per-entry validity and the FIFO counter is sufficient (stale block
+        values are never consulted while invalid, and inserts overwrite)."""
+        if self._state is None:
+            return
+        st = self._state
+        self._state = st._replace(
+            valid=st.valid.at[slot].set(False),
+            count=st.count.at[slot].set(0),
+        )
+
+    def _grow(self) -> None:
+        if self.plan is not None:
+            raise RuntimeError(
+                f"coalescer at plan-pinned capacity {self._capacity}")
+        import jax.numpy as jnp
+        old = self._capacity
+        self._capacity = old * 2
+        self._free.extend(range(self._capacity - 1, old - 1, -1))
+        if self._state is not None:
+            pad = ((0, old),)
+            st = self._state
+            self._state = st._replace(
+                sorted_blocks=jnp.pad(st.sorted_blocks, pad + ((0, 0),) * 2),
+                dmin=jnp.pad(st.dmin, pad + ((0, 0),)),
+                dmax=jnp.pad(st.dmax, pad + ((0, 0),)),
+                valid=jnp.pad(st.valid, pad + ((0, 0),)),
+                count=jnp.pad(st.count, pad),
+            )
+
+    def _init_state(self, n_lem: int):
+        import jax
+        from repro.core.encoder import init_state
+        st = init_state(self._codec.num_dict, n_lem, channels=self._capacity)
+        if self.plan is not None:
+            st = jax.device_put(st, self.plan.state_sharding())
+        return st
+
+    def _flush(self, stream_ids: List[str]) -> Dict[str, bytes]:
+        import jax.numpy as jnp
+        from repro.core.encoder import (encode_decisions_batched,
+                                        encode_decisions_sharded)
+        prepared = {}
+        B = self._codec.block_size
+        for sid in stream_ids:
+            chunks = self._pending[sid]
+            if not chunks:
+                continue  # nothing staged; the (< block) tail stays put
+            self._pending[sid] = []
+            ready = self._buffered[sid] // B
+            self._buffered[sid] %= B  # the tail carries over
+            self._ready_blocks -= ready
+            if ready:
+                self._ready_streams -= 1
+            prep = self._sessions[sid].prepare(np.concatenate(chunks))
+            if prep is not None:
+                prepared[sid] = prep
+        if not prepared:
+            return {}
+
+        cdc = self._codec
+        n_lem = cdc._lem_n()
+        nb_max = max(p.nb for p in prepared.values())
+        nb_pad = -(-nb_max // self._bucket) * self._bucket
+        batch = np.zeros((self._capacity, nb_pad, n_lem), dtype=np.float32)
+        valid = np.zeros((self._capacity, nb_pad), dtype=bool)
+        for sid, prep in prepared.items():
+            slot = self._slots[sid]
+            batch[slot, :prep.nb] = prep.payloads[0]
+            valid[slot, :prep.nb] = True
+
+        if self._state is None:
+            self._state = self._init_state(n_lem)
+        kw = dict(
+            num_dict=cdc.num_dict, d_crit=float(cdc.d_crit),
+            rel_tol=float(cdc.rel_tol), use_minmax=cdc.use_minmax,
+            use_ks=cdc.use_ks,
+        )
+        if cdc.backend == "pallas":
+            from repro.kernels.ops import dict_match
+            kw["matcher"] = dict_match
+        bj, vj = jnp.asarray(batch), jnp.asarray(valid)
+        if self.plan is not None:
+            (h, s, o), self._state = encode_decisions_sharded(
+                bj, mesh=self.plan.mesh, axis_name=self.plan.axis_name,
+                state=self._state, valid=vj, **kw)
+        else:
+            (h, s, o), self._state = encode_decisions_batched(
+                bj, state=self._state, valid=vj, **kw)
+        h, s, o = (np.asarray(v) for v in (h, s, o))
+
+        out = {}
+        for sid, prep in prepared.items():
+            slot, nb = self._slots[sid], prep.nb
+            dec = (h[slot, :nb], s[slot, :nb], o[slot, :nb])
+            out[sid] = self._sessions[sid].commit(prep, [dec])[0]
+        return out

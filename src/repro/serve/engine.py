@@ -4,6 +4,11 @@
 one new token against a KV/state cache of the configured context length.
 ``ServeEngine`` is the host loop: batch requests, prefill, decode until done
 (static batch; slots refill between generations).
+
+``FlushPolicy`` is the serving layer's shared micro-batching knob: request
+coalescers (the compression ingest path in ``repro.serve.compress``, and
+eventually continuous-batching LM decode) accumulate per-client payloads
+and cut one padded device batch when the policy trips.
 """
 from __future__ import annotations
 
@@ -18,6 +23,24 @@ import numpy as np
 from repro.models.common import ModelConfig
 from repro.models import lm
 from repro.models.lm import DecodeCache, decode_step, init_cache
+
+
+@dataclass(frozen=True)
+class FlushPolicy:
+    """When a coalescer should stop accumulating and cut a device batch.
+
+    ``max_batch_blocks`` bounds the padded scan length (device latency and
+    the compile-shape bucket); ``max_batch_streams`` bounds how many
+    clients wait on one dispatch (tail latency).  Either threshold trips a
+    flush; callers may always flush earlier (timers, shutdown).
+    """
+
+    max_batch_blocks: int = 4096
+    max_batch_streams: int = 256
+
+    def should_flush(self, n_streams: int, n_blocks: int) -> bool:
+        return (n_streams >= self.max_batch_streams
+                or n_blocks >= self.max_batch_blocks)
 
 
 def serve_step(params, cache: DecodeCache, tokens, cfg: ModelConfig):

@@ -1,0 +1,117 @@
+"""Shared test infrastructure.
+
+* ``lcg_signal`` / ``mixed_signal``: deterministic signal generators.  The
+  golden-corpus streams are generated from ``lcg_signal`` -- a hand-rolled
+  LCG, so the reference bytes cannot drift with numpy RNG stream changes.
+* ``GOLDEN_CASES``: the mode x D-regime corpus table shared by the golden
+  regression test and ``tests/golden/make_golden.py``.
+* hypothesis profiles + strategies for the differential fuzz suite
+  (``test_fuzz_roundtrip.py``); everything hypothesis-related is guarded so
+  the suite still collects when hypothesis is not installed.
+"""
+import os
+
+import numpy as np
+
+# --------------------------------------------------- deterministic signals
+_LCG_A, _LCG_C, _LCG_M = 6364136223846793005, 1442695040888963407, 2**64
+
+
+def lcg_signal(n: int, seed: int = 1, lo: float = 0.0,
+               hi: float = 1.0) -> np.ndarray:
+    """Uniform-ish values in [lo, hi) from a fixed 64-bit LCG (independent
+    of any library's RNG stream; safe to pin golden bytes against)."""
+    out = np.empty(n, dtype=np.float64)
+    s = (seed * 2 + 1) & (_LCG_M - 1)
+    for i in range(n):
+        s = (_LCG_A * s + _LCG_C) % _LCG_M
+        out[i] = s / _LCG_M
+    return lo + out * (hi - lo)
+
+
+def mixed_signal(n: int, seed: int = 0) -> np.ndarray:
+    """Multi-source mixture (numpy RNG): hits, misses and FIFO overwrites
+    all occur.  For tests that compare paths within one process only."""
+    rng = np.random.default_rng(seed)
+    parts = [rng.normal(m, s, size=n // 3)
+             for m, s in [(0, 1), (5, 0.5), (0, 1)]]
+    return np.concatenate(parts + [rng.normal(0, 1, size=n - 3 * (n // 3))])
+
+
+# -------------------------------------------------------- golden corpus map
+# name -> codec kwargs; one case per mode x D regime (ISSUE 2).  The signal
+# is lcg_signal(16 * 40 + 5, seed=<case index>), scaled into the
+# value_range when one is set.
+GOLDEN_CASES = {
+    "std_D1": dict(mode="std", num_dict=1),
+    "std_D32": dict(mode="std", num_dict=32),
+    "residual_D1": dict(mode="residual", num_dict=1),
+    "residual_D32_vr": dict(mode="residual", num_dict=32,
+                            value_range=(0.0, 360.0)),
+    "delta_D1_vr": dict(mode="delta", num_dict=1,
+                        value_range=(0.0, 360.0)),
+    "delta_D32": dict(mode="delta", num_dict=32),
+    # small FIFO + wandering level: pins the 0xFF overwrite prefix bytes
+    "std_D4_ovw": dict(mode="std", num_dict=4),
+}
+GOLDEN_BLOCK = 16
+GOLDEN_SAMPLES = 16 * 40 + 5
+
+
+def golden_signal(name: str) -> np.ndarray:
+    idx = list(GOLDEN_CASES).index(name)
+    vr = GOLDEN_CASES[name].get("value_range")
+    lo, hi = vr if vr is not None else (-4.0, 4.0)
+    x = lcg_signal(GOLDEN_SAMPLES, seed=idx + 1, lo=lo, hi=hi)
+    # step the level so the FIFO sees misses (and, for _ovw, overwrites)
+    n_lvl, scale = (16, 0.9) if name.endswith("_ovw") else (5, 0.07)
+    x += np.repeat(np.arange(n_lvl), len(x) // n_lvl + 1)[:len(x)] \
+        * (hi - lo) * scale
+    return np.mod(x, hi - lo) + lo if vr is not None else x
+
+
+def golden_codec_kwargs(name: str) -> dict:
+    return dict(block_size=GOLDEN_BLOCK, alpha=0.05, rel_tol=0.5,
+                backend="numpy", **GOLDEN_CASES[name])
+
+
+# ------------------------------------------------------ hypothesis plumbing
+try:
+    from hypothesis import HealthCheck, settings
+    from hypothesis import strategies as st
+
+    settings.register_profile(
+        "quick", max_examples=10, deadline=None,
+        suppress_health_check=[HealthCheck.too_slow])
+    settings.register_profile("ci", max_examples=60, deadline=None)
+    settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "default"))
+
+    @st.composite
+    def codec_cases(draw):
+        """(codec kwargs, signal) pairs spanning mode x D x B x dtype x
+        bounded value_range -- the fuzz axes named in ISSUE 2."""
+        mode = draw(st.sampled_from(["std", "residual", "delta"]))
+        num_dict = draw(st.sampled_from([1, 2, 32, 255]))
+        block_size = draw(st.integers(min_value=4, max_value=40))
+        dtype = draw(st.sampled_from([np.float64, np.float32]))
+        value_range = (None if mode == "std"
+                       else draw(st.sampled_from([None, (0.0, 360.0)])))
+        nb = draw(st.integers(min_value=0, max_value=50))
+        tail = draw(st.integers(min_value=0, max_value=block_size - 1))
+        seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+        rng = np.random.default_rng(seed)
+        n = nb * block_size + tail
+        # mixture of a few levels so hit/miss/overwrite all happen
+        levels = rng.normal(0, 2, size=4)
+        x = (rng.normal(0, 1, size=n)
+             + levels[rng.integers(0, 4, size=n // max(block_size, 1) + 1)
+                      .repeat(block_size)[:n]])
+        if value_range is not None:
+            x = np.mod(x * 40.0, 360.0)
+        kwargs = dict(mode=mode, block_size=block_size, num_dict=num_dict,
+                      alpha=0.05, rel_tol=0.5, value_range=value_range,
+                      backend="numpy")
+        return kwargs, x.astype(dtype)
+
+except ImportError:  # hypothesis is optional (requirements-dev.txt)
+    pass

@@ -1,0 +1,54 @@
+"""Regenerate the golden stream corpus from the seed-oracle path.
+
+Every stream is assembled with the retained seed implementations
+(``encode_decisions_np`` decisions + ``_assemble_stream_py`` serializer)
+over the LCG-deterministic signals in tests/conftest.py, so the bytes are
+independent of both the vectorized stream path under test and numpy's RNG
+stream.  Run from the repo root:
+
+  PYTHONPATH=src python tests/golden/make_golden.py
+
+Regenerating is only legitimate when the stream FORMAT deliberately
+changes (a header version bump); commit the new bytes with that change.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import numpy as np  # noqa: E402
+
+from conftest import GOLDEN_CASES, golden_codec_kwargs, golden_signal  # noqa: E402
+from repro.core import IdealemCodec  # noqa: E402
+from repro.core.npref import encode_decisions_np  # noqa: E402
+from repro.core.stream import StreamHeader, _assemble_stream_py  # noqa: E402
+
+
+def oracle_encode(name: str) -> bytes:
+    codec = IdealemCodec(**golden_codec_kwargs(name))
+    x = golden_signal(name)
+    B = codec.block_size
+    nb = len(x) // B
+    blocks = np.ascontiguousarray(x[:nb * B]).reshape(nb, B)
+    payload, bases = codec._transform(blocks)
+    hit, slot, ovw = encode_decisions_np(
+        payload, num_dict=codec.num_dict, d_crit=float(codec.d_crit),
+        rel_tol=float(codec.rel_tol), use_minmax=codec.use_minmax,
+        use_ks=codec.use_ks)
+    header = StreamHeader(codec.mode_id, B, codec.num_dict, codec.max_count,
+                          x.dtype, codec.value_range, nb, x[nb * B:])
+    return _assemble_stream_py(header, blocks, payload, bases, hit, slot, ovw)
+
+
+def main() -> None:
+    out_dir = os.path.dirname(os.path.abspath(__file__))
+    for name in GOLDEN_CASES:
+        blob = oracle_encode(name)
+        path = os.path.join(out_dir, f"{name}.idlm")
+        with open(path, "wb") as f:
+            f.write(blob)
+        print(f"{name}.idlm  {len(blob)} bytes")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,151 @@
+"""Differential fuzz: vectorized stream path vs the retained seed oracles.
+
+One shared check runs every case through three independent layers:
+
+  1. byte-identity: ``assemble_stream`` (vectorized) == ``_assemble_stream_py``
+     (seed loop) == ``IdealemCodec.encode``;
+  2. parse-identity: ``parse_stream`` (vectorized gather) event-for-event
+     equal to ``_parse_stream_py`` (seed walk);
+  3. decode round-trip structure: length, exact tail, miss blocks
+     reproduced, hit blocks sourced from their dictionary entry;
+  4. segment framing: chunked session output decodes and parses like the
+     one-shot stream (CONT/MORE paths the seed oracle cannot produce).
+
+A deterministic sweep pins the mode x D regimes so the differential runs
+even without hypothesis; the hypothesis test widens the same check over
+random (mode, D, B, dtype, value_range, signal) draws (ISSUE 2).
+"""
+import numpy as np
+import pytest
+
+from conftest import mixed_signal
+from repro.core import IdealemCodec
+from repro.core.npref import encode_decisions_np
+from repro.core.stream import (StreamHeader, _assemble_stream_py,
+                               _parse_stream_py, assemble_stream,
+                               decode_stream, parse_stream)
+
+
+def _events_equal(ev_a, ev_b):
+    assert len(ev_a) == len(ev_b)
+    for a, b in zip(ev_a, ev_b):
+        assert a["kind"] == b["kind"]
+        assert a["slot"] == b["slot"]
+        if a["kind"] == "miss":
+            assert a["overwrite"] == b["overwrite"]
+            np.testing.assert_array_equal(np.asarray(a["payload"]),
+                                          np.asarray(b["payload"]))
+        if "base" in a or "base" in b:
+            assert float(a["base"]) == float(b["base"])
+
+
+def check_roundtrip(kwargs: dict, x: np.ndarray) -> None:
+    codec = IdealemCodec(**kwargs)
+    B = codec.block_size
+    nb = len(x) // B
+    blob = codec.encode(x)
+
+    # --- oracle re-derivation of the exact same stream ---
+    blocks = np.ascontiguousarray(x[:nb * B]).reshape(nb, B)
+    payload, bases = codec._transform(blocks)
+    hit, slot, ovw = encode_decisions_np(
+        payload, num_dict=codec.num_dict, d_crit=float(codec.d_crit),
+        rel_tol=float(codec.rel_tol), use_minmax=codec.use_minmax,
+        use_ks=codec.use_ks)
+    header = StreamHeader(codec.mode_id, B, codec.num_dict, codec.max_count,
+                          x.dtype, codec.value_range, nb, x[nb * B:])
+    args = (header, blocks, payload, bases, hit, slot, ovw)
+    oracle = _assemble_stream_py(*args)
+    assert assemble_stream(*args) == oracle  # vectorized == seed loop
+    assert blob == oracle                    # full codec == seed loop
+
+    # --- parse differential ---
+    hdr_py, ev_py = _parse_stream_py(blob)
+    hdr_vec, ev_vec = parse_stream(blob)
+    assert (hdr_py.mode, hdr_py.block_size, hdr_py.num_dict,
+            hdr_py.n_blocks) == (hdr_vec.mode, hdr_vec.block_size,
+                                 hdr_vec.num_dict, hdr_vec.n_blocks)
+    np.testing.assert_array_equal(hdr_py.tail, hdr_vec.tail)
+    _events_equal(ev_py, ev_vec)
+
+    # --- decode round-trip structure ---
+    y = decode_stream(blob)
+    assert len(y) == len(x)
+    np.testing.assert_array_equal(y[nb * B:], x[nb * B:])  # tail verbatim
+    tol = 1e-5 if x.dtype == np.float32 else 1e-9
+    last_miss = {}
+    for i, ev in enumerate(ev_vec):
+        yb, xb = y[i * B:(i + 1) * B], blocks[i]
+        if ev["kind"] == "miss":
+            last_miss[ev["slot"]] = i
+            if codec.mode == "std":
+                np.testing.assert_array_equal(yb, xb)  # stored verbatim
+            else:
+                np.testing.assert_allclose(yb, xb, atol=tol * 400)
+        elif codec.mode == "std":
+            # hit: a permutation of the dictionary source block
+            src = last_miss[ev["slot"]]
+            np.testing.assert_array_equal(np.sort(yb), np.sort(blocks[src]))
+        else:
+            assert abs(float(yb[0]) - float(ev["base"])) <= tol * 400
+
+    # --- segment framing: chunked session == one-shot ---
+    s = codec.session(dtype=x.dtype)
+    step = max(2 * B + 3, len(x) // 3)
+    segs = [s.feed(x[lo:lo + step]) for lo in range(0, len(x), step)]
+    segs.append(s.finish())
+    chunked = b"".join(segs)
+    np.testing.assert_array_equal(decode_stream(chunked), y)
+    _, ev_chunked = parse_stream(chunked)
+    assert ([(e["kind"], e["slot"]) for e in ev_chunked]
+            == [(e["kind"], e["slot"]) for e in ev_vec])
+
+
+# ------------------------------------------------------ deterministic sweep
+SWEEP = [
+    ("std", 1, 8, np.float64, None),
+    ("std", 2, 16, np.float32, None),
+    ("std", 32, 16, np.float64, None),
+    ("std", 255, 5, np.float64, None),
+    ("residual", 1, 16, np.float64, (0.0, 360.0)),
+    ("residual", 32, 4, np.float32, None),
+    ("residual", 255, 16, np.float64, (0.0, 360.0)),
+    ("delta", 1, 16, np.float32, None),
+    ("delta", 2, 7, np.float64, (0.0, 360.0)),
+    ("delta", 32, 16, np.float64, None),
+]
+
+
+@pytest.mark.parametrize("mode,num_dict,B,dtype,vr", SWEEP)
+def test_differential_sweep(mode, num_dict, B, dtype, vr):
+    x = mixed_signal(B * 60 + B // 2, seed=num_dict)
+    if vr is not None:
+        x = np.mod(x * 40.0, 360.0)
+    kwargs = dict(mode=mode, block_size=B, num_dict=num_dict, alpha=0.05,
+                  rel_tol=0.5, value_range=vr, backend="numpy")
+    check_roundtrip(kwargs, x.astype(dtype))
+
+
+def test_differential_tail_only_stream():
+    kwargs = dict(mode="std", block_size=16, num_dict=3, backend="numpy")
+    check_roundtrip(kwargs, mixed_signal(7, seed=1))
+
+
+# --------------------------------------------------------- hypothesis fuzz
+try:
+    import hypothesis  # noqa: F401
+
+    from hypothesis import given, settings
+
+    from conftest import codec_cases
+
+    @given(codec_cases())
+    @settings(max_examples=30, deadline=None)
+    def test_fuzz_roundtrip_property(case):
+        kwargs, x = case
+        check_roundtrip(kwargs, x)
+
+except ImportError:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_fuzz_roundtrip_property():
+        pass

@@ -1,12 +1,18 @@
-"""Pallas dict_match kernel vs pure-jnp oracle: shape/dtype sweep + properties."""
+"""Pallas dict_match kernel vs pure-jnp oracle: shape/dtype sweep + edge
+sizes (TILE_D padding, D=1, the n=256 block cap, min/max gate boundaries)
++ hypothesis properties (skipped when hypothesis is absent)."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 from repro.core.ks import ks_statistic_many
+from repro.kernels.dict_match import TILE_D
 from repro.kernels.ops import dict_match, dict_match_ks, dict_match_reference
 
 
@@ -58,14 +64,74 @@ def test_matcher_signature_for_encoder():
     )
 
 
-@given(st.integers(min_value=1, max_value=40),
-       st.integers(min_value=4, max_value=96),
-       st.integers(min_value=0, max_value=2**31 - 1))
-@settings(max_examples=15, deadline=None)
-def test_kernel_property_identical_block_zero_distance(D, n, seed):
-    rng = np.random.default_rng(seed)
-    xs = jnp.sort(jnp.asarray(rng.normal(size=n), dtype=jnp.float32))
-    ds = jnp.tile(xs[None, :], (D, 1))
-    ks, mm = dict_match(xs, ds, ds.min(axis=1), ds.max(axis=1), 0.0)
-    np.testing.assert_allclose(np.asarray(ks), 0.0, atol=1e-7)
-    assert bool(jnp.all(mm))  # zero tolerance still passes: identical extremes
+# -------------------------------------------------------- edge-size parity
+# D off the TILE_D grid (pad-and-slice wrapper), D=1, and n at the 256
+# block-size cap; the fused mm gate is asserted alongside ks everywhere.
+EDGE_D = [1, TILE_D - 1, TILE_D + 1, 2 * TILE_D + 5, 255]
+
+
+@pytest.mark.parametrize("D", EDGE_D)
+@pytest.mark.parametrize("n", [2, 256])
+def test_kernel_parity_edge_sizes(D, n):
+    assert 255 % TILE_D != 0  # the max-D case must exercise the pad path
+    xs, ds = _case(D, n, np.float32, seed=D * 1000 + n)
+    dmin, dmax = ds.min(axis=1), ds.max(axis=1)
+    ks_k, mm_k = dict_match(xs, ds, dmin, dmax, 0.3)
+    ks_r, mm_r = dict_match_reference(xs, ds, dmin, dmax, 0.3)
+    assert ks_k.shape == mm_k.shape == (D,)
+    np.testing.assert_allclose(np.asarray(ks_k), np.asarray(ks_r), atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(mm_k), np.asarray(mm_r))
+
+
+def test_kernel_minmax_gate_boundary():
+    """mm parity exactly at the eq. (3) tolerance boundary: both paths
+    compute t = (dmax - dmin) * r in f32, so the <=/>= comparisons must
+    agree bitwise, including extremes landing exactly on dmin/dmax +- t."""
+    n = 32
+    xs = jnp.linspace(0.0, 1.0, n, dtype=jnp.float32)
+    base = jnp.tile(xs[None, :], (6, 1))
+    r = jnp.float32(0.25)
+    t = (base[:, -1] - base[:, 0]) * r
+    # rows shifted so candidate extremes sit below/at/above the gate edges
+    shift = jnp.asarray([0.0, 1.0, -1.0, 1.0001, 0.5, 2.0],
+                        dtype=jnp.float32)[:, None] * t[:, None]
+    ds = base + shift
+    dmin, dmax = ds.min(axis=1), ds.max(axis=1)
+    ks_k, mm_k = dict_match(xs, ds, dmin, dmax, float(r))
+    ks_r, mm_r = dict_match_reference(xs, ds, dmin, dmax, float(r))
+    np.testing.assert_array_equal(np.asarray(mm_k), np.asarray(mm_r))
+    assert bool(mm_k[0]) and bool(mm_k[1]) and bool(mm_k[2])  # on-edge pass
+    assert not bool(mm_k[3]) and not bool(mm_k[5])            # outside fail
+    np.testing.assert_allclose(np.asarray(ks_k), np.asarray(ks_r), atol=1e-6)
+
+
+def test_kernel_mm_independent_of_stored_order():
+    """The gate reads only (dmin, dmax): shuffling each dictionary row must
+    not change mm (the encoder stores rows sorted; the kernel must not
+    rely on it)."""
+    rng = np.random.default_rng(5)
+    xs, ds = _case(24, 64, np.float32, seed=5)
+    dmin, dmax = ds.min(axis=1), ds.max(axis=1)
+    perm = rng.permutation(64)
+    ks_a, mm_a = dict_match(xs, ds, dmin, dmax, 0.4)
+    ks_b, mm_b = dict_match(xs, ds[:, perm], dmin, dmax, 0.4)
+    np.testing.assert_array_equal(np.asarray(mm_a), np.asarray(mm_b))
+    np.testing.assert_allclose(np.asarray(ks_a), np.asarray(ks_b), atol=1e-6)
+
+
+if HAVE_HYPOTHESIS:
+    @given(st.integers(min_value=1, max_value=40),
+           st.integers(min_value=4, max_value=96),
+           st.integers(min_value=0, max_value=2**31 - 1))
+    @settings(max_examples=15, deadline=None)
+    def test_kernel_property_identical_block_zero_distance(D, n, seed):
+        rng = np.random.default_rng(seed)
+        xs = jnp.sort(jnp.asarray(rng.normal(size=n), dtype=jnp.float32))
+        ds = jnp.tile(xs[None, :], (D, 1))
+        ks, mm = dict_match(xs, ds, ds.min(axis=1), ds.max(axis=1), 0.0)
+        np.testing.assert_allclose(np.asarray(ks), 0.0, atol=1e-7)
+        assert bool(jnp.all(mm))  # zero tolerance passes: identical extremes
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_kernel_property_identical_block_zero_distance():
+        pass

@@ -1,0 +1,146 @@
+"""Scale-out encode acceptance: sharded output byte-identical to
+single-device output (ISSUE 2).
+
+Multi-device cells run ``repro.launch.shard_check`` in a subprocess so the
+forced host device count precedes the jax import; masked-scan semantics
+(the padding story that makes sharding and coalescing exact) are checked
+in-process on the default single device.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+
+def _run_check(devices: int, backend: str):
+    env = dict(os.environ, PYTHONPATH="src", REPRO_SHARD_DEVICES=str(devices))
+    env.pop("XLA_FLAGS", None)  # shard_check owns the flag
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.shard_check",
+         "--backend", backend],
+        capture_output=True, text=True, timeout=1200, env=env,
+        cwd=os.getcwd())
+    assert out.returncode == 0, out.stdout[-2000:] + out.stderr[-2000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+@pytest.mark.parametrize("devices,backend", [(2, "jax"), (4, "jax"),
+                                             (2, "pallas")])
+def test_sharded_encode_byte_identical(devices, backend):
+    rec = _run_check(devices, backend)
+    assert rec["status"] == "ok"
+    assert rec["devices"] == devices
+    assert len(rec["cases"]) == 6  # every mode x D regime
+
+
+# ----------------------------------------------------- in-process (1 device)
+def test_masked_scan_is_noop_on_invalid_blocks():
+    import jax.numpy as jnp
+    from repro.core.encoder import encode_decisions
+
+    rng = np.random.default_rng(0)
+    blocks = jnp.asarray(rng.normal(size=(50, 16)), jnp.float32)
+    kw = dict(num_dict=5, d_crit=0.45, rel_tol=0.5)
+    ref = encode_decisions(blocks, **kw)
+
+    # interleave garbage blocks masked out: real positions must decide
+    # identically, masked positions must report all-zero decisions
+    blk2 = jnp.zeros((100, 16), jnp.float32).at[::2].set(blocks)
+    valid = np.zeros(100, dtype=bool)
+    valid[::2] = True
+    out = encode_decisions(blk2, valid=jnp.asarray(valid), **kw)
+    for i in range(3):
+        np.testing.assert_array_equal(np.asarray(ref[i]),
+                                      np.asarray(out[i])[::2])
+        assert not np.any(np.asarray(out[i])[1::2])
+
+
+def test_sharded_single_device_matches_batched():
+    import jax.numpy as jnp
+    from repro.core.encoder import (encode_decisions_batched,
+                                    encode_decisions_sharded)
+    from repro.launch.encode_plan import make_encode_plan
+
+    rng = np.random.default_rng(1)
+    bc = jnp.asarray(rng.normal(size=(3, 40, 16)), jnp.float32)
+    kw = dict(num_dict=7, d_crit=0.45, rel_tol=0.5)
+    plan = make_encode_plan(3, block_size=16)
+    ref = encode_decisions_batched(bc, **kw)
+    out = encode_decisions_sharded(bc, mesh=plan.mesh,
+                                   axis_name=plan.axis_name, **kw)
+    for i in range(3):
+        np.testing.assert_array_equal(np.asarray(ref[i]), np.asarray(out[i]))
+
+
+def test_encode_plan_shapes():
+    from repro.launch.encode_plan import make_encode_plan, pad_channels
+
+    plan = make_encode_plan(5, block_size=32)
+    assert plan.channels == 5
+    assert plan.padded_channels % plan.num_devices == 0
+    assert plan.shard_channels * plan.num_devices == plan.padded_channels
+    assert plan.block_quantum >= 1
+    padded = pad_channels(plan, np.ones((5, 4)))
+    assert padded.shape == (plan.padded_channels, 4)
+    with pytest.raises(ValueError):
+        make_encode_plan(0)
+
+
+def test_coalescer_matches_per_stream_service():
+    """Coalesced ragged traffic decodes exactly like the per-stream path."""
+    from repro.core import IdealemCodec
+    from repro.serve import FlushPolicy, StreamCoalescer
+
+    B = 16
+    kw = dict(mode="residual", block_size=B, num_dict=31, alpha=0.05,
+              rel_tol=0.5)
+    codec = IdealemCodec(**kw)
+    rng = np.random.default_rng(3)
+    signals = {f"s{i}": rng.normal(i, 1.0, size=B * 50 + 3 * i)
+               for i in range(5)}
+
+    co = StreamCoalescer(policy=FlushPolicy(max_batch_blocks=40),
+                         capacity=2, **kw)  # forces one capacity growth
+    segs = {sid: [] for sid in signals}
+    for sid in signals:
+        co.open_stream(sid)
+    offs = {sid: 0 for sid in signals}
+    steps = {sid: 29 + 17 * i for i, sid in enumerate(signals)}
+    while any(offs[sid] < len(x) for sid, x in signals.items()):
+        for sid, x in signals.items():
+            if offs[sid] < len(x):
+                res = co.submit(sid, x[offs[sid]:offs[sid] + steps[sid]])
+                offs[sid] += steps[sid]
+                if res:
+                    for k, v in res.items():
+                        segs[k].append(v)
+    for sid in signals:
+        segs[sid].append(co.close_stream(sid))
+    for sid, x in signals.items():
+        got = codec.decode(b"".join(segs[sid]))
+        np.testing.assert_array_equal(got, codec.decode(codec.encode(x)))
+    assert co.capacity == 8  # grew 2 -> 4 -> 8 for 5 streams
+    assert co.stats()["blocks"] == sum(len(x) // B for x in signals.values())
+
+
+def test_coalescer_slot_reuse_is_fresh():
+    """A recycled slot must not leak the previous stream's dictionary."""
+    from repro.core import IdealemCodec
+    from repro.serve import StreamCoalescer
+
+    kw = dict(mode="std", block_size=16, num_dict=7, alpha=0.05, rel_tol=0.5)
+    codec = IdealemCodec(**kw)
+    rng = np.random.default_rng(9)
+    x = rng.normal(size=16 * 40)
+    co = StreamCoalescer(capacity=1, **kw)
+    for name in ("a", "b"):
+        co.open_stream(name)
+        co.submit(name, x)
+        blob = co.close_stream(name)
+        np.testing.assert_array_equal(codec.decode(blob),
+                                      codec.decode(codec.encode(x)))
+    with pytest.raises(KeyError):
+        co.submit("a", x)
