@@ -2,8 +2,8 @@
 PY ?= python
 export PYTHONPATH := src
 
-.PHONY: test test-core bench bench-stream bench-shard shard-check \
-	example-stream
+.PHONY: test test-core bench bench-quick bench-stream bench-shard \
+	bench-store shard-check store-check example-stream
 
 # Tier-1 verification (ROADMAP.md): the full suite, fail-fast.
 test:
@@ -24,9 +24,20 @@ bench-stream:
 bench-shard:
 	$(PY) -m benchmarks.bench_shard_encode
 
+bench-store:
+	$(PY) -m benchmarks.bench_store_decode
+
+# CI smoke profile: small workloads, fast host/codec benches only.
+bench-quick:
+	$(PY) -m benchmarks.run --quick
+
 # Sharded-encode byte-identity self-check on forced host devices.
 shard-check:
 	REPRO_SHARD_DEVICES=4 $(PY) -m repro.launch.shard_check
+
+# Container range-decode == sequential-decode-slice over the golden corpus.
+store-check:
+	$(PY) scripts/store_tool.py selfcheck tests/golden/*.idlm
 
 example-stream:
 	$(PY) examples/stream_compress.py --channels 8 --samples 16384

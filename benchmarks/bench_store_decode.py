@@ -1,0 +1,110 @@
+"""Read-path throughput: full sequential decode vs indexed range decode vs
+batched multi-range decode over a packed container (DESIGN.md Sec. 7).
+
+The write side already batches (PR 2); this measures what the footer index
+buys consumers: answering a small block range without walking the whole
+stream, and answering MANY concurrent ranges in one padded reconstruct
+(the ``DecompressionService`` flush path).  A large multi-segment session
+stream is packed once; then we time
+
+  full/stream      -- ``decode_stream`` over the raw segment chain
+  full/container   -- ``decode_channels`` through the index
+  range/seq_slice  -- a small range served by full decode + slice (naive)
+  range/indexed    -- the same range via ``decode_range`` (seek + 1 walk)
+  ranges/loop      -- R random ranges, one ``decode_range`` each
+  ranges/batched   -- the same R ranges in ONE ``decode_ranges`` batch
+
+``REPRO_BENCH_QUICK=1`` (the CI smoke) shrinks the stream.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from repro.core import IdealemCodec
+from repro.core.stream import decode_stream
+from repro.store import Container, decode_channels, decode_range, decode_ranges, pack
+
+from .common import csv_row
+
+QUICK = bool(int(os.environ.get("REPRO_BENCH_QUICK", "0")))
+B = 16
+NB = 4_000 if QUICK else 40_000
+FEED_BLOCKS = 512          # session chunk quantum -> segments per stream
+RANGE_BLOCKS = 16          # "small range" a consumer asks for
+N_RANGES = 64              # concurrent requests in the batched case
+
+
+def _time(fn, repeat=3):
+    fn()  # warmup
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        fn()
+    return (time.perf_counter() - t0) / repeat
+
+
+def _build_store():
+    rng = np.random.default_rng(0)
+    levels = rng.normal(0, 2, size=8)
+    n = NB * B
+    x = (rng.normal(0, 1, size=n)
+         + levels[rng.integers(0, 8, size=NB).repeat(B)])
+    codec = IdealemCodec(mode="std", block_size=B, num_dict=64, alpha=0.05,
+                         rel_tol=0.5, backend="jax")
+    s = codec.session()
+    segs = [s.feed(x[lo:lo + FEED_BLOCKS * B])
+            for lo in range(0, n, FEED_BLOCKS * B)]
+    segs.append(s.finish())
+    stream = b"".join(segs)
+    return stream, Container(pack(stream))
+
+
+def run():
+    rows = []
+    stream, store = _build_store()
+    nb = store.total_blocks(0)
+    y = decode_stream(stream)
+
+    t_full = _time(lambda: decode_stream(stream), repeat=1)
+    rows.append(csv_row("store_decode/full/stream", t_full * 1e6,
+                        f"blocks={nb};segments={store.n_chunks}"))
+    t_cont = _time(lambda: decode_channels(store), repeat=1)
+    np.testing.assert_array_equal(decode_channels(store)[0], y)
+    rows.append(csv_row("store_decode/full/container", t_cont * 1e6,
+                        f"blocks={nb};vs_stream={t_full / t_cont:.2f}x"))
+
+    i = nb // 2
+    t_naive = _time(lambda: decode_stream(stream)[i * B:(i + RANGE_BLOCKS) * B],
+                    repeat=1)
+    t_range = _time(lambda: decode_range(store, i, i + RANGE_BLOCKS))
+    np.testing.assert_array_equal(decode_range(store, i, i + RANGE_BLOCKS),
+                                  y[i * B:(i + RANGE_BLOCKS) * B])
+    rows.append(csv_row("store_decode/range/seq_slice", t_naive * 1e6,
+                        f"range_blocks={RANGE_BLOCKS}"))
+    rows.append(csv_row(
+        "store_decode/range/indexed", t_range * 1e6,
+        f"range_blocks={RANGE_BLOCKS};speedup={t_naive / t_range:.1f}x"))
+
+    rng = np.random.default_rng(1)
+    starts = rng.integers(0, nb - RANGE_BLOCKS, size=N_RANGES)
+    reqs = [(0, int(s), int(s) + RANGE_BLOCKS) for s in starts]
+    t_loop = _time(lambda: [decode_range(store, i, j) for _, i, j in reqs])
+    t_batch = _time(lambda: decode_ranges(store, reqs))
+    for (_, i, j), got in zip(reqs, decode_ranges(store, reqs)):
+        np.testing.assert_array_equal(got, y[i * B:j * B])
+    blocks = N_RANGES * RANGE_BLOCKS
+    rows.append(csv_row("store_decode/ranges/loop", t_loop * 1e6,
+                        f"requests={N_RANGES};blocks={blocks}"))
+    rows.append(csv_row(
+        "store_decode/ranges/batched", t_batch * 1e6,
+        f"requests={N_RANGES};blocks={blocks}"
+        f";speedup={t_loop / t_batch:.1f}x"
+        f";blocks_per_s={blocks / t_batch:.0f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

@@ -9,6 +9,7 @@ implementation over the seed loop.
 """
 from __future__ import annotations
 
+import os
 import time
 
 import numpy as np
@@ -53,7 +54,10 @@ def _time(fn, repeat=3):
     return (time.time() - t0) / repeat
 
 
-def run(nb: int = 120_000, B: int = 16):
+def run(nb: int = None, B: int = 16):
+    if nb is None:  # --quick smoke shrinks the trace ~10x
+        quick = bool(int(os.environ.get("REPRO_BENCH_QUICK", "0")))
+        nb = 12_000 if quick else 120_000
     rows = []
     rng = np.random.default_rng(1)
     blocks = rng.normal(size=(nb, B))

@@ -2,34 +2,55 @@
 
 Prints ``name,us_per_call,derived`` CSV lines.  Roofline rows are emitted
 when dry-run artifacts exist (run scripts/run_dryrun_sweep.sh first).
+
+``--quick`` (or ``REPRO_BENCH_QUICK=1``) is the CI smoke profile: modules
+that expose a quick knob shrink their workloads, and only the fast,
+dependency-light host/codec benches run.
 """
 from __future__ import annotations
 
+import argparse
+import importlib
+import os
 import sys
 import traceback
 
+QUICK_MODULES = ("stream_io", "store_decode")  # fast host-path smoke set
 
-def main() -> None:
-    from . import (bench_fig3_pvalue, bench_fig12_spectral,
-                   bench_fig14_tradeoff, bench_fig15_speed, bench_gradcomp,
-                   bench_limits, bench_shard_encode, bench_stream_io,
-                   bench_table1_ratio, bench_table2_quality, roofline)
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(prog="benchmarks.run")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: small workloads, host/codec benches only")
+    args = ap.parse_args(argv)
+    # the env var alone activates quick too, as the module docstring says
+    if bool(int(os.environ.get("REPRO_BENCH_QUICK", "0") or "0")):
+        args.quick = True
+    if args.quick:
+        os.environ["REPRO_BENCH_QUICK"] = "1"
+
     modules = [
-        ("table1", bench_table1_ratio),
-        ("table2", bench_table2_quality),
-        ("fig3", bench_fig3_pvalue),
-        ("fig12", bench_fig12_spectral),
-        ("fig14", bench_fig14_tradeoff),
-        ("fig15", bench_fig15_speed),
-        ("limits", bench_limits),
-        ("gradcomp", bench_gradcomp),
-        ("stream_io", bench_stream_io),
-        ("shard_encode", bench_shard_encode),
-        ("roofline", roofline),
+        ("table1", "bench_table1_ratio"),
+        ("table2", "bench_table2_quality"),
+        ("fig3", "bench_fig3_pvalue"),
+        ("fig12", "bench_fig12_spectral"),
+        ("fig14", "bench_fig14_tradeoff"),
+        ("fig15", "bench_fig15_speed"),
+        ("limits", "bench_limits"),
+        ("gradcomp", "bench_gradcomp"),
+        ("stream_io", "bench_stream_io"),
+        ("shard_encode", "bench_shard_encode"),
+        ("store_decode", "bench_store_decode"),
+        ("roofline", "roofline"),
     ]
+    if args.quick:
+        modules = [(n, m) for n, m in modules if n in QUICK_MODULES]
     failed = []
-    for name, mod in modules:
+    for name, modname in modules:
         try:
+            # imported per bench so a missing optional dep (e.g. zstandard
+            # for the baseline codecs) only fails its own rows
+            mod = importlib.import_module(f"benchmarks.{modname}")
             for row in mod.run():
                 print(row, flush=True)
         except Exception:

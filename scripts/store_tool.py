@@ -1,0 +1,152 @@
+"""CLI over the indexed decode store (repro.store): pack raw ``.idlm``
+streams into random-access containers, inspect their index, extract
+decoded ranges, and self-check range-decode equivalence.
+
+  pack      out.idlmc stream.idlm [stream2.idlm ...]   (file i -> channel i)
+  inspect   container.idlmc [--chunks]
+  extract   container.idlmc [--channel C] [--blocks i:j] [-o out.npy]
+  selfcheck stream.idlm [...]   pack each stream, then verify decode_range
+            equals the matching slice of the sequential full decode for a
+            sweep of ranges (the ISSUE 3 random-access criterion)
+
+``make store-check`` runs selfcheck over the golden corpus.
+"""
+import argparse
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.stream import decode_stream  # noqa: E402
+from repro.store import (Container, decode_channels, decode_range,  # noqa: E402
+                         pack)
+
+
+def cmd_pack(args) -> int:
+    streams = {}
+    for ch, path in enumerate(args.streams):
+        with open(path, "rb") as f:
+            streams[ch] = f.read()
+    pack(streams, path=args.out)
+    store = Container.open(args.out)
+    print(f"packed {len(streams)} stream(s) -> {args.out} "
+          f"({store.n_chunks} chunks, {os.path.getsize(args.out)} bytes)")
+    return 0
+
+
+def cmd_inspect(args) -> int:
+    store = Container.open(args.container)
+    info = store.describe()
+    print(f"container: {args.container}")
+    print(f"  chunks={info['chunks']} data_bytes={info['data_bytes']} "
+          f"index_bytes={info['index_bytes']}")
+    for c, ci in sorted(info["channels"].items()):
+        print(f"  channel {c}: segments={ci['segments']} "
+              f"blocks={ci['blocks']} tail={ci['tail_samples']} "
+              f"mode={ci['mode']} B={ci['block_size']} D={ci['num_dict']} "
+              f"dtype={ci['dtype']} finished={ci['finished']}")
+    if args.chunks:
+        cols = store._cols
+        print("  chunk channel offset length blocks blocks_before fill "
+              "flags restart")
+        for k in range(store.n_chunks):
+            print("  " + " ".join(
+                str(int(cols[name][k]))
+                for name in ("channel", "offset", "length", "n_blocks",
+                             "blocks_before", "fill_in", "flags", "restart")))
+    return 0
+
+
+def _parse_range(spec, total):
+    if spec is None:
+        return 0, total
+    lo, _, hi = spec.partition(":")
+    return int(lo or 0), int(hi or total)
+
+
+def cmd_extract(args) -> int:
+    store = Container.open(args.container)
+    if args.blocks is None:
+        # whole channel(s), tail included
+        chans = store.channels if args.channel is None else [args.channel]
+        out = decode_channels(store, chans)
+        arr = (np.stack([out[c] for c in chans]) if len(chans) > 1
+               else out[chans[0]])
+    else:
+        channel = args.channel or 0
+        i, j = _parse_range(args.blocks, store.total_blocks(channel))
+        arr = decode_range(store, i, j, channel=channel)
+    if args.output:
+        np.save(args.output, arr)
+        print(f"wrote {arr.shape} {arr.dtype} -> {args.output}")
+    else:
+        np.savetxt(sys.stdout, np.atleast_2d(arr), fmt="%.17g")
+    return 0
+
+
+def cmd_selfcheck(args) -> int:
+    failures = 0
+    for path in args.streams:
+        with open(path, "rb") as f:
+            data = f.read()
+        y = decode_stream(data)
+        store = Container(pack(data))
+        nb = store.total_blocks(0)
+        B = store.header_of(0).block_size
+        ranges = {(0, nb), (0, 1), (nb - 1, nb), (nb // 3, 2 * nb // 3 + 1)}
+        ranges |= {(i, min(i + 7, nb)) for i in range(0, nb, max(nb // 5, 1))}
+        ranges = sorted(r for r in ranges if 0 <= r[0] < r[1] <= nb)
+        bad = 0
+        for i, j in ranges:
+            got = decode_range(store, i, j)
+            if not np.array_equal(got, y[i * B:j * B]):
+                bad += 1
+                print(f"  MISMATCH {path} blocks [{i}, {j})")
+        tag = "ok" if not bad else f"{bad} FAILED"
+        print(f"{os.path.basename(path)}: blocks={nb} "
+              f"ranges={len(ranges)} {tag}")
+        failures += bad
+    if failures:
+        print(f"selfcheck FAILED ({failures} mismatching ranges)")
+        return 1
+    print("selfcheck passed: every range matches the sequential decode")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="store_tool",
+                                 description=__doc__.splitlines()[0])
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    p = sub.add_parser("pack", help="wrap .idlm streams in a container")
+    p.add_argument("out")
+    p.add_argument("streams", nargs="+")
+    p.set_defaults(fn=cmd_pack)
+
+    p = sub.add_parser("inspect", help="print the container index summary")
+    p.add_argument("container")
+    p.add_argument("--chunks", action="store_true",
+                   help="also dump the per-chunk index records")
+    p.set_defaults(fn=cmd_inspect)
+
+    p = sub.add_parser("extract", help="decode a channel/range")
+    p.add_argument("container")
+    p.add_argument("--channel", type=int, default=None)
+    p.add_argument("--blocks", default=None, metavar="I:J",
+                   help="block range (default: whole channel incl. tail)")
+    p.add_argument("-o", "--output", default=None, help="write .npy here")
+    p.set_defaults(fn=cmd_extract)
+
+    p = sub.add_parser("selfcheck",
+                       help="verify range-decode == full-decode slices")
+    p.add_argument("streams", nargs="+")
+    p.set_defaults(fn=cmd_selfcheck)
+
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

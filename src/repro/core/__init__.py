@@ -8,6 +8,7 @@ Public API:
 """
 from .idealem import IdealemCodec
 from .session import IdealemSession, PreparedChunk, SessionStats
+from .stream import StreamFormatError
 from .ks import critical_distance, ks_pvalue, ks_statistic, ks_statistic_many
 from .encoder import (DictState, encode_decisions, encode_decisions_batched,
                       encode_decisions_sharded, init_state)
@@ -18,6 +19,7 @@ __all__ = [
     "IdealemSession",
     "PreparedChunk",
     "SessionStats",
+    "StreamFormatError",
     "DictState",
     "init_state",
     "critical_distance",

@@ -86,16 +86,19 @@ class IdealemCodec:
     # ------------------------------------------------------------ public API
     def session(self, channels: Optional[int] = None,
                 emit_segments: bool = True,
-                dtype=np.float64, plan=None) -> IdealemSession:
+                dtype=np.float64, plan=None,
+                container: bool = False) -> IdealemSession:
         """Open a resumable streaming session with this configuration.
 
         ``plan`` (a ``repro.launch.encode_plan.EncodePlan``) shards the
         channel axis of the device scan across the plan's mesh; output
-        bytes are identical to the unplanned session.
+        bytes are identical to the unplanned session.  ``container=True``
+        makes ``finish()`` return one indexed random-access container
+        (``repro.store``) over all channels instead of the final segment.
         """
         return IdealemSession(self, channels=channels,
                               emit_segments=emit_segments, dtype=dtype,
-                              plan=plan)
+                              plan=plan, container=container)
 
     def encode(self, x: np.ndarray) -> bytes:
         """One-shot encode: a single-feed session assembled as one segment."""

@@ -96,10 +96,18 @@ class IdealemSession:
     """
 
     def __init__(self, codec: "IdealemCodec", channels: Optional[int] = None,
-                 emit_segments: bool = True, dtype=np.float64, plan=None):
+                 emit_segments: bool = True, dtype=np.float64, plan=None,
+                 container: bool = False):
         self.codec = codec
         self.channels = channels
         self.emit_segments = emit_segments
+        self._writer = None
+        if container:
+            # every emitted segment is also appended to an in-memory
+            # indexed container (repro.store); finish() then returns the
+            # random-access packed form instead of the final segment.
+            from repro.store.container import ContainerWriter
+            self._writer = ContainerWriter()
         self.dtype = np.dtype(dtype)
         C = self._C = channels if channels is not None else 1
         if channels is not None and channels < 1:
@@ -208,6 +216,8 @@ class IdealemSession:
         st = self._stats[ci]
         st.bytes_out += len(seg)
         st.segments += 1
+        if self._writer is not None:
+            self._writer.append(seg, channel=ci)
         return seg
 
     def _empty(self, ci: int):
@@ -298,7 +308,13 @@ class IdealemSession:
     def finish(self) -> Union[bytes, List[bytes]]:
         """Close the stream(s): emit the final segment carrying the sample
         tail (segment mode) or assemble the whole classic one-segment stream
-        (``emit_segments=False``)."""
+        (``emit_segments=False``).
+
+        With ``container=True`` the return value is instead ONE packed
+        random-access container (``repro.store``) holding every segment of
+        every channel -- ready for ``decode_range`` on the serving read
+        path; the final per-channel segments are still emitted through the
+        writer like any other."""
         if self._finished:
             raise RuntimeError("session already finished")
         self._finished = True
@@ -322,6 +338,8 @@ class IdealemSession:
                     raw, payload, bases, hit, slot, ovw = self._empty(ci)
                 outs.append(self._emit(ci, raw, payload, bases, hit, slot,
                                        ovw, tail=self._tails[ci], more=False))
+        if self._writer is not None:
+            return self._writer.finalize()
         return outs[0] if self.channels is None else outs
 
     @property

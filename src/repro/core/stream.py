@@ -18,7 +18,8 @@ reconstructed by random permutation of the stored block (std mode) or by
 re-anchoring the stored transformed values on the hit's base value
 (res/delta mode; no permutation -- paper Sec. V-B2).
 
-A 40-byte header + raw tail (samples not filling a block) precedes the body.
+A fixed header (``_HDR``) + raw tail (samples not filling a block) precedes
+the body.
 
 Serialization is vectorized (DESIGN.md Sec. 4): block byte sizes, offsets
 and scatter indices are computed with numpy cumsum/fancy-indexing instead of
@@ -39,19 +40,40 @@ from __future__ import annotations
 
 import struct
 from dataclasses import dataclass, replace
-from typing import NamedTuple, Optional, Tuple
+from typing import List, NamedTuple, Optional, Tuple
 
 import numpy as np
 
 from .transforms import np_wrap_range
 
-__all__ = ["StreamHeader", "assemble_stream", "parse_stream", "decode_stream"]
+__all__ = ["StreamHeader", "StreamFormatError", "assemble_stream",
+           "parse_stream", "decode_stream"]
+
+
+class StreamFormatError(ValueError):
+    """Malformed/truncated IDEALEM stream.  ``offset`` is the byte position
+    at which parsing failed (raw ``struct.error``/``IndexError`` from the
+    walk are never surfaced to callers)."""
+
+    def __init__(self, message: str, offset: int = 0):
+        super().__init__(f"{message} (at byte {offset})")
+        self.offset = offset
+
+
+# Number of per-segment decision walks performed since import.  Tests use
+# deltas of this counter to prove the store's range decoder parses only the
+# segments covering the requested range (ISSUE 3 acceptance).
+_stats = {"segment_walks": 0}
+
+
+def segment_walk_count() -> int:
+    return _stats["segment_walks"]
 
 MAGIC = b"IDLM"
 VERSION = 2
 MODE_STD, MODE_RESIDUAL, MODE_DELTA = 0, 1, 2
 FLAG_RANGE, FLAG_F32, FLAG_MORE, FLAG_CONT = 1, 2, 4, 8
-_HDR = struct.Struct("<4sBBHBBBBddIH")  # 40 bytes
+_HDR = struct.Struct("<4sBBHBBBBddIH")  # 34 bytes (packed little-endian)
 
 
 @dataclass
@@ -94,12 +116,27 @@ def _pack_header(h: StreamHeader) -> bytes:
 
 
 def _unpack_header(buf: memoryview, off: int = 0) -> Tuple[StreamHeader, int]:
-    (magic, ver, mode, bsz, ndict, maxc, flags, _rsv, rmin, rmax,
-     n_blocks, tail_len) = _HDR.unpack_from(buf, off)
-    if magic != MAGIC or ver != VERSION:
-        raise ValueError("bad IDEALEM stream header")
+    hdr_off = off
+    try:
+        (magic, ver, mode, bsz, ndict, maxc, flags, _rsv, rmin, rmax,
+         n_blocks, tail_len) = _HDR.unpack_from(buf, off)
+    except struct.error:
+        raise StreamFormatError("truncated segment header", hdr_off) from None
+    if magic != MAGIC:
+        raise StreamFormatError("bad IDEALEM stream magic", hdr_off)
+    if ver != VERSION:
+        raise StreamFormatError(f"unsupported stream version {ver}", hdr_off)
+    if mode not in (MODE_STD, MODE_RESIDUAL, MODE_DELTA):
+        raise StreamFormatError(f"unknown mode byte {mode}", hdr_off)
+    if bsz < 2 or ndict < 1 or maxc < 1:
+        raise StreamFormatError(
+            f"degenerate header fields (B={bsz}, D={ndict}, c={maxc})",
+            hdr_off)
     dtype = np.float32 if (flags & FLAG_F32) else np.float64
     off += _HDR.size
+    if off + tail_len * np.dtype(dtype).itemsize > len(buf):
+        raise StreamFormatError(
+            f"tail of {tail_len} samples overruns the buffer", off)
     tail = np.frombuffer(buf, dtype=dtype, count=tail_len, offset=off).copy()
     off += tail_len * np.dtype(dtype).itemsize
     rng = (rmin, rmax) if (flags & FLAG_RANGE) else None
@@ -297,6 +334,15 @@ def _walk_segment(buf, off, header, fill, hits_b, slots_b, ovws_b):
     skips over value bytes; value offsets are NOT recorded here -- they are
     reconstructed vectorized from the decision arrays with the same layout
     math the assembler uses.  Returns (new_off, new_fill)."""
+    _stats["segment_walks"] += 1
+    try:
+        return _walk_segment_inner(buf, off, header, fill, hits_b, slots_b,
+                                   ovws_b)
+    except IndexError:
+        raise StreamFormatError("truncated segment body", off) from None
+
+
+def _walk_segment_inner(buf, off, header, fill, hits_b, slots_b, ovws_b):
     isz = np.dtype(header.dtype).itemsize
     bsz = header.block_size
     std = header.mode == MODE_STD
@@ -348,76 +394,101 @@ def _walk_segment(buf, off, header, fill, hits_b, slots_b, ovws_b):
                     n_left -= e
                 if e < c:
                     break
+        if n_left < 0:
+            raise StreamFormatError(
+                "hit-count run overruns the segment block count", off)
+    if off > len(buf):
+        raise StreamFormatError(
+            f"segment value bytes overrun the buffer by {off - len(buf)}",
+            len(buf))
     return off, fill
 
 
-def _parse_arrays(data) -> Tuple[StreamHeader, _Parsed]:
-    """Parse a (possibly multi-segment) stream into struct-of-arrays form.
+class SegmentRef(NamedTuple):
+    """One walked segment of a (possibly multi-segment) stream: where its
+    body lives in the buffer, which blocks it covers, and the FIFO fill
+    counter entering it.  The store's container index (repro.store) persists
+    exactly this information so a segment can later be re-walked in
+    isolation."""
 
-    Per-block Python work is the decision-byte walk only; value offsets are
-    recomputed per segment with the assembler's vectorized layout math and
-    every base/payload is gathered in one fancy-indexing pass."""
-    buf = memoryview(data)
-    u8 = np.frombuffer(buf, dtype=np.uint8)
-    off = 0
-    header0: Optional[StreamHeader] = None
-    fill = 0
+    header: StreamHeader
+    start: int       # byte offset of the segment header
+    body_start: int  # byte offset of the first decision byte
+    end: int         # byte offset one past the segment body
+    i0: int          # index of the segment's first block within the walk
+    n_blocks: int
+    fill_in: int     # FIFO fill counter entering the segment
+
+
+def _walk_all(buf: memoryview, off: int = 0, fill: int = 0,
+              till_end: bool = False):
+    """Walk a chained (FLAG_MORE) sequence of segments starting at ``off``.
+
+    Stops after the first non-MORE segment; with ``till_end`` it instead
+    walks until the buffer is exhausted (a *partial* chain -- e.g. the
+    segments a live session has emitted so far, every one FLAG_MORE --
+    which the store's container writer appends incrementally).
+
+    Returns ``(segs, is_hit, slot, ovw)``: per-segment ``SegmentRef``s plus
+    the concatenated per-block decision arrays."""
     hits_b = bytearray()
     slots_b = bytearray()
     ovws_b = bytearray()
-    segs = []  # (body_start, first_block_idx, n_blocks, cont)
+    segs: List[SegmentRef] = []
     while True:
+        start = off
         header, off = _unpack_header(buf, off)
-        if header0 is None:
-            header0 = header
-        i0, body_start = len(hits_b), off
+        i0, body_start, fill_in = len(hits_b), off, fill
         off, fill = _walk_segment(buf, off, header, fill, hits_b, slots_b,
                                   ovws_b)
-        segs.append((body_start, i0, len(hits_b) - i0, header.cont))
-        if not header.more:
+        segs.append(SegmentRef(header, start, body_start, off, i0,
+                               len(hits_b) - i0, fill_in))
+        if till_end:
+            if off >= len(buf):
+                break
+        elif not header.more:
             break
-    merged = replace(header0, n_blocks=len(hits_b), tail=header.tail,
-                     more=False, cont=False)
-    dt = np.dtype(merged.dtype)
-    isz = dt.itemsize
-    B = merged.block_size
-    std = merged.mode == MODE_STD
-    P = B if std else B - 1
-
     is_hit = np.frombuffer(hits_b, dtype=np.uint8).astype(bool)
     slot = np.frombuffer(slots_b, dtype=np.uint8).astype(np.int32)
     ovw = np.frombuffer(ovws_b, dtype=np.uint8).astype(bool)
+    return segs, is_hit, slot, ovw
 
-    base_parts = []  # per-block base offsets (res/delta), block order
-    pay_parts = []   # per-miss payload offsets, miss order
-    for body_start, i0, nbs, cont in segs:
-        if nbs == 0:
-            continue
-        h = is_hit[i0:i0 + nbs]
-        o = ovw[i0:i0 + nbs]
-        if merged.num_dict >= 2:
-            hit_sz = 1 + (0 if std else isz)
-            sizes = np.where(h, hit_sz, 1 + B * isz + o).astype(np.int64)
-            val = body_start + _excl_cumsum(sizes) + o + 1
-            if std:
-                pay_parts.append(val[~h])
-            else:
-                base_parts.append(val)
-                pay_parts.append(val[~h] + isz)
-        else:
-            lay = _single_layout(h, merged.max_count, cont, B, isz, std)
-            moffs = body_start + lay.offs[lay.has_miss]
-            if std:
-                pay_parts.append(moffs)
-            else:
-                pay_parts.append(moffs + isz)
-                bo = np.empty(nbs, dtype=np.int64)
-                bo[lay.miss_pos] = moffs
-                bo[h] = body_start + _single_hit_base_offs(
-                    lay, h, merged.max_count, isz, cont)
-                base_parts.append(bo)
 
+def _segment_offsets(header: StreamHeader, body_start: int, h: np.ndarray,
+                     o: np.ndarray, cont: bool):
+    """Absolute value-byte offsets for one walked segment, recomputed with
+    the assembler's layout math from its decision arrays.
+
+    Returns ``(base_offs, pay_offs)``: per-block base offsets (res/delta
+    modes, else ``None``) and per-miss payload offsets in miss order."""
+    dt = np.dtype(header.dtype)
+    isz = dt.itemsize
+    B = header.block_size
+    std = header.mode == MODE_STD
+    if header.num_dict >= 2:
+        hit_sz = 1 + (0 if std else isz)
+        sizes = np.where(h, hit_sz, 1 + B * isz + o).astype(np.int64)
+        val = body_start + _excl_cumsum(sizes) + o + 1
+        if std:
+            return None, val[~h]
+        return val, val[~h] + isz
+    lay = _single_layout(h, header.max_count, cont, B, isz, std)
+    moffs = body_start + lay.offs[lay.has_miss]
     if std:
+        return None, moffs
+    bo = np.empty(len(h), dtype=np.int64)
+    bo[lay.miss_pos] = moffs
+    bo[h] = body_start + _single_hit_base_offs(
+        lay, h, header.max_count, isz, cont)
+    return bo, moffs + isz
+
+
+def _gather_values(u8: np.ndarray, dt: np.dtype, P: int, base_parts,
+                   pay_parts):
+    """One fancy-indexing pass over the raw bytes: per-block bases (or
+    ``None`` for std mode) and the (n_miss, P) payload matrix."""
+    isz = dt.itemsize
+    if base_parts is None:
         bases = None
     elif base_parts:
         bo = np.concatenate(base_parts)
@@ -429,6 +500,38 @@ def _parse_arrays(data) -> Tuple[StreamHeader, _Parsed]:
         payloads = u8[po[:, None] + np.arange(P * isz)].view(dt)
     else:
         payloads = np.zeros((0, P), dtype=dt)
+    return bases, payloads
+
+
+def _parse_arrays(data) -> Tuple[StreamHeader, _Parsed]:
+    """Parse a (possibly multi-segment) stream into struct-of-arrays form.
+
+    Per-block Python work is the decision-byte walk only; value offsets are
+    recomputed per segment with the assembler's vectorized layout math and
+    every base/payload is gathered in one fancy-indexing pass."""
+    buf = memoryview(data)
+    u8 = np.frombuffer(buf, dtype=np.uint8)
+    segs, is_hit, slot, ovw = _walk_all(buf)
+    merged = replace(segs[0].header, n_blocks=len(is_hit),
+                     tail=segs[-1].header.tail, more=False, cont=False)
+    std = merged.mode == MODE_STD
+    P = merged.block_size if std else merged.block_size - 1
+
+    base_parts = None if std else []  # per-block base offsets, block order
+    pay_parts = []                    # per-miss payload offsets, miss order
+    for seg in segs:
+        if seg.n_blocks == 0:
+            continue
+        h = is_hit[seg.i0:seg.i0 + seg.n_blocks]
+        o = ovw[seg.i0:seg.i0 + seg.n_blocks]
+        bo, po = _segment_offsets(seg.header, seg.body_start, h, o,
+                                  seg.header.cont)
+        if bo is not None:
+            base_parts.append(bo)
+        pay_parts.append(po)
+
+    bases, payloads = _gather_values(u8, np.dtype(merged.dtype), P,
+                                     base_parts, pay_parts)
     return merged, _Parsed(is_hit, slot, ovw, bases, payloads)
 
 
@@ -461,18 +564,92 @@ def parse_stream(data):
     return header, events
 
 
+def _splitmix64(x: np.ndarray) -> np.ndarray:
+    """SplitMix64 finalizer on uint64 arrays (wrapping arithmetic is the
+    point; numpy only flags the wrap for 0-d inputs)."""
+    with np.errstate(over="ignore"):
+        x = (x + np.uint64(0x9E3779B97F4A7C15)).astype(np.uint64)
+        x = (x ^ (x >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+        x = (x ^ (x >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+        return x ^ (x >> np.uint64(31))
+
+
+def _hit_perms(seed: int, block_idx: np.ndarray, B: int) -> np.ndarray:
+    """Per-hit reconstruction permutations, stateless in the block position.
+
+    Each permutation is the argsort of SplitMix64 keys of (seed, global
+    sample index), so the permutation a block receives depends only on
+    ``(seed, its index in the stream)`` -- never on how many other hits are
+    being decoded in the same call.  This is what makes the store's range
+    decoder (repro.store.reader) byte-identical to the corresponding slice
+    of a full decode."""
+    with np.errstate(over="ignore"):  # seed 2**64-1 wraps on the +1
+        s = _splitmix64(np.uint64(seed & 0xFFFFFFFFFFFFFFFF) + np.uint64(1))
+        samp = (np.asarray(block_idx, dtype=np.uint64)[:, None] * np.uint64(B)
+                + np.arange(B, dtype=np.uint64)[None, :])
+    return np.argsort(_splitmix64(samp ^ s), axis=1, kind="stable")
+
+
+def _decode_sources(is_hit: np.ndarray, slot: np.ndarray) -> np.ndarray:
+    """Payload row (miss ordinal) feeding each block: misses feed themselves,
+    hits feed the most recent miss written to their slot.  Rows < 0 never
+    occur -- a hit with no preceding miss raises."""
+    nb = len(is_hit)
+    miss_pos = np.flatnonzero(~is_hit)
+    hit_pos = np.flatnonzero(is_hit)
+    src = np.zeros(nb, dtype=np.int64)
+    src[miss_pos] = np.arange(len(miss_pos))
+    if len(hit_pos):
+        hit_slots = slot[hit_pos]
+        miss_slots = slot[miss_pos]
+        for s in np.unique(hit_slots):
+            hp = hit_pos[hit_slots == s]
+            mp = miss_pos[miss_slots == s]
+            j = np.searchsorted(mp, hp) - 1
+            if len(mp) == 0 or np.any(j < 0):
+                raise StreamFormatError(f"hit on slot {s} before any miss")
+            src[hp] = src[mp[j]]
+    return src
+
+
+def _reconstruct_blocks(header: StreamHeader, rows: np.ndarray,
+                        bases: Optional[np.ndarray], is_hit: np.ndarray,
+                        block_idx: np.ndarray, seed: int) -> np.ndarray:
+    """(nb, P) source payload rows -> (nb, B) reconstructed values.
+
+    ``block_idx`` is each row's global position in its stream: std-mode hit
+    permutations are keyed on it (see ``_hit_perms``), so any sub-range of a
+    stream reconstructs byte-identically to the same rows of a full decode.
+    Purely per-block math -- callers may stack many ranges into one padded
+    call (the store's batched range decoder does)."""
+    if header.mode == MODE_STD:
+        out = rows.copy()
+        hit_pos = np.flatnonzero(is_hit)
+        if len(hit_pos):
+            perm = _hit_perms(seed, block_idx[hit_pos], header.block_size)
+            out[hit_pos] = np.take_along_axis(rows[hit_pos], perm, axis=1)
+        return out
+    base = bases[:, None]
+    t = rows if header.mode == MODE_RESIDUAL else np.cumsum(rows, axis=1)
+    out = np.concatenate([base, base + t], axis=1)
+    if header.value_range is not None:
+        out = np_wrap_range(out, *header.value_range)
+    return out
+
+
 def decode_stream(data: bytes, seed: int = 0) -> np.ndarray:
     """Full decoder: parse + vectorized reconstruct (paper Sec. V-A2/V-B2).
 
-    Hits source the most recent miss written to their slot; std-mode hits are
-    random permutations of that block (drawn in one batch), res/delta hits
-    re-anchor the stored transformed values on the hit's own base.
+    Hits source the most recent miss written to their slot; std-mode hits
+    are random permutations of that block, res/delta hits re-anchor the
+    stored transformed values on the hit's own base.
 
-    Note: the permutations are drawn as one ``(n_hits, B)`` batch, so for a
-    given ``seed`` the sampled permutations differ from the seed decoder's
-    sequential per-hit draws.  Any permutation is a valid reconstruction
-    (the format pins bytes, not the decoder's RNG sequence); decode remains
-    deterministic for a fixed stream + seed.
+    Note: each hit's permutation is drawn statelessly from ``(seed, block
+    position)`` (``_hit_perms``), so the sampled permutations differ from
+    the seed decoder's sequential per-hit draws.  Any permutation is a valid
+    reconstruction (the format pins bytes, not the decoder's RNG sequence);
+    decode is deterministic for a fixed stream + seed, and positional keying
+    makes ``repro.store`` range decodes exact slices of this output.
     """
     header, pr = _parse_arrays(data)
     dt = np.dtype(header.dtype)
@@ -480,36 +657,9 @@ def decode_stream(data: bytes, seed: int = 0) -> np.ndarray:
     if nb == 0:
         return np.concatenate([header.tail]) if len(header.tail) else (
             np.zeros((0,), dtype=dt))
-    B = header.block_size
-    rng = np.random.default_rng(seed)
-
-    miss_pos = np.flatnonzero(~pr.is_hit)
-    hit_pos = np.flatnonzero(pr.is_hit)
-    src = np.zeros(nb, dtype=np.int64)  # payload row feeding each block
-    src[miss_pos] = np.arange(len(miss_pos))
-    if len(hit_pos):
-        hit_slots = pr.slot[hit_pos]
-        miss_slots = pr.slot[miss_pos]
-        for s in np.unique(hit_slots):
-            hp = hit_pos[hit_slots == s]
-            mp = miss_pos[miss_slots == s]
-            j = np.searchsorted(mp, hp) - 1
-            if len(mp) == 0 or np.any(j < 0):
-                raise ValueError(f"hit on slot {s} before any miss")
-            src[hp] = src[mp[j]]
-    rows = pr.payloads[src]  # (nb, P)
-
-    if header.mode == MODE_STD:
-        out = rows.copy()
-        if len(hit_pos):
-            perm = np.argsort(rng.random((len(hit_pos), B)), axis=1)
-            out[hit_pos] = np.take_along_axis(rows[hit_pos], perm, axis=1)
-    else:
-        base = pr.bases[:, None]
-        t = rows if header.mode == MODE_RESIDUAL else np.cumsum(rows, axis=1)
-        out = np.concatenate([base, base + t], axis=1)
-        if header.value_range is not None:
-            out = np_wrap_range(out, *header.value_range)
+    rows = pr.payloads[_decode_sources(pr.is_hit, pr.slot)]  # (nb, P)
+    out = _reconstruct_blocks(header, rows, pr.bases, pr.is_hit,
+                              np.arange(nb), seed)
     return np.concatenate([out.ravel(), header.tail])
 
 

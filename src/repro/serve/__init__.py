@@ -1,5 +1,6 @@
 from .engine import FlushPolicy, ServeEngine, prefill_step, serve_step
-from .compress import CompressionService, StreamCoalescer
+from .compress import (CompressionService, DecompressionService,
+                       StreamCoalescer)
 
 __all__ = ["FlushPolicy", "ServeEngine", "prefill_step", "serve_step",
-           "CompressionService", "StreamCoalescer"]
+           "CompressionService", "DecompressionService", "StreamCoalescer"]

@@ -25,10 +25,18 @@ batch (streams stacked on the channel axis, ragged block counts masked),
 then scatters the encoded segments back per stream.  Per-stream bytes are
 identical to what the per-stream service would emit; an ``EncodePlan``
 shards the batch's channel axis across devices.
+
+``DecompressionService`` (DESIGN.md Sec. 7) is the symmetric READ path:
+range requests against packed containers (``repro.store``), answered from
+an LRU of parsed segments, with concurrent requests coalesced into one
+padded batched reconstruct per flush -- the same ``FlushPolicy`` (count,
+block and ``max_age_s`` deadline triggers) on both sides of the codec.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Union
+import time
+from collections import OrderedDict
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -37,7 +45,7 @@ from repro.core.session import IdealemSession, SessionStats
 
 from .engine import FlushPolicy
 
-__all__ = ["CompressionService", "StreamCoalescer"]
+__all__ = ["CompressionService", "StreamCoalescer", "DecompressionService"]
 
 
 def _fold_stats(agg: SessionStats, st: SessionStats) -> None:
@@ -64,13 +72,19 @@ class CompressionService:
         return sorted(self._streams)
 
     def open_stream(self, stream_id: str, channels: Optional[int] = None,
-                    dtype=np.float64, **codec_overrides) -> None:
-        """Register a stream; codec kwargs override the service defaults."""
+                    dtype=np.float64, container: bool = False,
+                    **codec_overrides) -> None:
+        """Register a stream; codec kwargs override the service defaults.
+
+        ``container=True`` makes ``close_stream`` return the whole stream
+        as one indexed random-access container (``repro.store``) instead of
+        the final segment -- the encode->store->range-decode round trip."""
         if stream_id in self._streams:
             raise KeyError(f"stream {stream_id!r} already open")
         codec = IdealemCodec(**{**self._defaults, **codec_overrides})
         self._streams[stream_id] = codec.session(channels=channels,
-                                                 dtype=dtype)
+                                                 dtype=dtype,
+                                                 container=container)
         old = self._closed.pop(stream_id, None)
         if old is not None:
             for one in (old if isinstance(old, list) else [old]):
@@ -82,8 +96,9 @@ class CompressionService:
         return self._session(stream_id).feed(chunk)
 
     def close_stream(self, stream_id: str) -> Union[bytes, List[bytes]]:
-        """Finalize a stream: emits the tail-carrying final segment and
-        retires the session (stats remain queryable)."""
+        """Finalize a stream: emits the tail-carrying final segment (or,
+        for ``container=True`` streams, the packed container over every
+        segment) and retires the session (stats remain queryable)."""
         sess = self._session(stream_id)
         seg = sess.finish()
         self._closed[stream_id] = sess.stats
@@ -142,7 +157,8 @@ class StreamCoalescer:
 
     def __init__(self, policy: Optional[FlushPolicy] = None, plan=None,
                  capacity: int = 64, block_bucket: int = 32,
-                 dtype=np.float64, **codec_kwargs):
+                 dtype=np.float64, clock: Optional[Callable[[], float]] = None,
+                 **codec_kwargs):
         self._codec = IdealemCodec(**codec_kwargs)
         if self._codec.backend == "numpy":
             raise ValueError("StreamCoalescer batches on device; use "
@@ -168,6 +184,12 @@ class StreamCoalescer:
         self._state = None  # batched DictState over capacity slots
         self._closed: Dict[str, SessionStats] = {}
         self._retired = SessionStats()  # closed ids later reopened
+        # deadline trigger (FlushPolicy.max_age_s): per-stream timestamp of
+        # the oldest staged payload, so partial flushes (close_stream) don't
+        # leave survivors aged by a departed stream's older submissions; the
+        # clock is injectable for deterministic tests
+        self._clock = clock if clock is not None else time.monotonic
+        self._staged_ts: Dict[str, float] = {}
 
     @property
     def active_streams(self) -> List[str]:
@@ -203,6 +225,8 @@ class StreamCoalescer:
         if arr.ndim != 1:
             raise ValueError("coalesced streams feed 1-D chunks")
         self._pending[stream_id].append(arr)
+        if len(arr) and stream_id not in self._staged_ts:
+            self._staged_ts[stream_id] = self._clock()
         B = self._codec.block_size
         old = self._buffered[stream_id]
         new = old + len(arr)
@@ -210,7 +234,17 @@ class StreamCoalescer:
         self._ready_blocks += new // B - old // B
         if old // B == 0 and new // B > 0:
             self._ready_streams += 1
-        if self.policy.should_flush(self._ready_streams, self._ready_blocks):
+        if self.policy.should_flush(self._ready_streams, self._ready_blocks,
+                                    self._age()):
+            return self.flush()
+        return None
+
+    def poll(self) -> Optional[Dict[str, bytes]]:
+        """Deadline tick for the ``max_age_s`` trigger: callers with a
+        latency SLO call this from their timer loop; flushes (and returns
+        the segments) iff the policy's deadline has expired."""
+        if self.policy.should_flush(self._ready_streams, self._ready_blocks,
+                                    self._age()):
             return self.flush()
         return None
 
@@ -232,6 +266,7 @@ class StreamCoalescer:
         del self._sessions[stream_id]
         del self._pending[stream_id]
         del self._buffered[stream_id]
+        self._staged_ts.pop(stream_id, None)
         return flushed + final
 
     def stats(self, stream_id: Optional[str] = None) -> dict:
@@ -248,6 +283,11 @@ class StreamCoalescer:
         return agg.as_dict()
 
     # ------------------------------------------------------------- internals
+    def _age(self) -> Optional[float]:
+        if not self._staged_ts:
+            return None
+        return self._clock() - min(self._staged_ts.values())
+
     def _reset_slot(self, slot: int) -> None:
         """A recycled slot must look like a fresh dictionary: clearing the
         per-entry validity and the FIFO counter is sufficient (stale block
@@ -298,6 +338,7 @@ class StreamCoalescer:
             if not chunks:
                 continue  # nothing staged; the (< block) tail stays put
             self._pending[sid] = []
+            self._staged_ts.pop(sid, None)
             ready = self._buffered[sid] // B
             self._buffered[sid] %= B  # the tail carries over
             self._ready_blocks -= ready
@@ -346,3 +387,219 @@ class StreamCoalescer:
             dec = (h[slot, :nb], s[slot, :nb], o[slot, :nb])
             out[sid] = self._sessions[sid].commit(prep, [dec])[0]
         return out
+
+
+class DecompressionService:
+    """The read-side sibling of ``StreamCoalescer`` (DESIGN.md Sec. 7):
+    serve block-range reads out of packed containers (``repro.store``).
+
+    Containers are ``attach``\\ ed under an id; ``read`` answers one range
+    immediately, ``submit``/``flush`` coalesce many concurrent range
+    requests -- ragged, across stores and channels -- into ONE padded
+    batched reconstruct per compatible group (``store.decode_ranges``),
+    mirroring how the write side cuts one padded scan per flush.  The same
+    ``FlushPolicy`` decides when to stop accumulating: ``max_batch_blocks``
+    bounds the padded batch, ``max_batch_streams`` the number of waiting
+    requests, ``max_age_s`` the deadline (measured with an injectable
+    clock, like the coalescer).
+
+    Parsed segments are kept in a per-service LRU keyed by ``(store id,
+    chunk)``: hot segments -- shared prefixes, popular ranges -- are walked
+    once and then served from cache; eviction is by total cached blocks so
+    fat segments don't dodge the budget.  Decoded output is NOT cached
+    (it is range-shaped and cheap to rebuild from parsed segments).
+    """
+
+    def __init__(self, policy: Optional[FlushPolicy] = None,
+                 cache_blocks: int = 1 << 16,
+                 clock: Optional[Callable[[], float]] = None):
+        from repro.store import Container  # noqa: F401 (import check only)
+        self.policy = policy or FlushPolicy()
+        self._cache_blocks = cache_blocks
+        self._clock = clock if clock is not None else time.monotonic
+        self._stores: Dict[str, "Container"] = {}
+        self._seeds: Dict[str, int] = {}
+        self._cache: "OrderedDict[Tuple[str, int], object]" = OrderedDict()
+        self._cached_blocks = 0
+        # pending request: (id, store, channel, start, stop, submit ts);
+        # FIFO order makes the head the batch's oldest for the deadline
+        self._pending: List[Tuple[str, str, int, int, int, float]] = []
+        self._pending_blocks = 0
+        self.stats = {"requests": 0, "blocks_out": 0, "flushes": 0,
+                      "failed_requests": 0, "cache_hits": 0,
+                      "cache_misses": 0}
+        self.last_errors: Dict[str, Exception] = {}
+
+    # ------------------------------------------------------------- lifecycle
+    def attach(self, store_id: str, container, seed: int = 0) -> None:
+        """Register a container (bytes or ``repro.store.Container``) for
+        serving.  ``seed`` pins the decoder's hit-permutation stream."""
+        from repro.store import Container
+        if store_id in self._stores:
+            raise KeyError(f"store {store_id!r} already attached")
+        if not isinstance(container, Container):
+            container = Container(container)
+        self._stores[store_id] = container
+        self._seeds[store_id] = seed
+
+    def detach(self, store_id: str) -> None:
+        self._store(store_id)
+        del self._stores[store_id]
+        del self._seeds[store_id]
+        self._cache = OrderedDict(
+            (k, v) for k, v in self._cache.items() if k[0] != store_id)
+        self._cached_blocks = sum(len(p.is_hit)
+                                  for p in self._cache.values())
+        # staged requests against the departing store cannot be answered:
+        # record them in last_errors (same contract as a failed flush
+        # group) instead of dropping them silently
+        dropped = [r for r in self._pending if r[1] == store_id]
+        for rid, *_ in dropped:
+            self.last_errors[rid] = KeyError(
+                f"store {store_id!r} detached with request pending")
+        self.stats["failed_requests"] += len(dropped)
+        self._pending = [r for r in self._pending if r[1] != store_id]
+        self._pending_blocks = sum(r[4] - r[3] for r in self._pending)
+
+    @property
+    def attached_stores(self) -> List[str]:
+        return sorted(self._stores)
+
+    # ------------------------------------------------------------ read paths
+    def read(self, store_id: str, start_block: int, stop_block: int,
+             channel: int = 0) -> np.ndarray:
+        """Synchronous single-range read through the segment cache."""
+        from repro.store import decode_range
+        store = self._store(store_id)
+        out = decode_range(store, start_block, stop_block, channel=channel,
+                           seed=self._seeds[store_id],
+                           parse=self._parse_for(store_id))
+        self.stats["requests"] += 1
+        self.stats["blocks_out"] += stop_block - start_block
+        return out
+
+    def read_channels(self, store_id: str,
+                      channels: Optional[Sequence[int]] = None
+                      ) -> Dict[int, np.ndarray]:
+        """Full decode of whole channels (tails included), batched."""
+        from repro.store import decode_channels
+        store = self._store(store_id)
+        out = decode_channels(store, channels,
+                              seed=self._seeds[store_id],
+                              parse=self._parse_for(store_id))
+        self.stats["requests"] += len(out)
+        self.stats["blocks_out"] += sum(
+            store.total_blocks(c) for c in out)
+        return out
+
+    def submit(self, request_id: str, store_id: str, start_block: int,
+               stop_block: int, channel: int = 0
+               ) -> Optional[Dict[str, np.ndarray]]:
+        """Stage a range request; returns the whole batch's answers (keyed
+        by request id) when the flush policy trips, else ``None``."""
+        store = self._store(store_id)
+        total = store.total_blocks(channel)
+        if not (0 <= start_block < stop_block <= total):
+            raise IndexError(
+                f"block range [{start_block}, {stop_block}) outside "
+                f"[0, {total}) of {store_id!r} channel {channel}")
+        if any(r[0] == request_id for r in self._pending):
+            raise KeyError(f"request {request_id!r} already pending")
+        self._pending.append(
+            (request_id, store_id, channel, start_block, stop_block,
+             self._clock()))
+        self._pending_blocks += stop_block - start_block
+        if self.policy.should_flush(len(self._pending), self._pending_blocks,
+                                    self._age()):
+            return self.flush()
+        return None
+
+    def poll(self) -> Optional[Dict[str, np.ndarray]]:
+        """Deadline tick (``FlushPolicy.max_age_s``), like the coalescer's."""
+        if self._pending and self.policy.should_flush(
+                len(self._pending), self._pending_blocks, self._age()):
+            return self.flush()
+        return None
+
+    def flush(self) -> Dict[str, np.ndarray]:
+        """Answer every pending request.  Requests sharing a store, a
+        stream shape and a length bucket ride one padded ``decode_ranges``
+        batch; incompatible groups get their own batch (never one call per
+        request).  The power-of-two length bucket mirrors the write side's
+        ``block_bucket``: without it one long request would pad every short
+        request in the batch up to its length.
+
+        A group that fails to decode (corrupt chunk, racing detach) fails
+        ALONE: its requests are reported in ``last_errors`` (request id ->
+        exception) and every other group's answers are still returned.
+        ``last_errors`` accumulates (detach records dropped requests there
+        too); callers correlating answers by id should ``pop`` entries they
+        have handled."""
+        from repro.store import decode_ranges
+        pending, self._pending = self._pending, []
+        self._pending_blocks = 0
+        if not pending:
+            return {}
+        groups: Dict[tuple, List[Tuple[str, int, int, int]]] = {}
+        headers: Dict[Tuple[str, int], object] = {}  # per-flush header memo
+        for rid, sid, channel, start, stop, _ts in pending:
+            hdr = headers.get((sid, channel))
+            if hdr is None:
+                hdr = headers[(sid, channel)] = self._stores[sid].header_of(
+                    int(self._stores[sid].chunks_of(channel)[0]))
+            bucket = 1 << (stop - start - 1).bit_length()
+            key = (sid, hdr.mode, hdr.block_size, np.dtype(hdr.dtype).str,
+                   hdr.value_range, bucket)
+            groups.setdefault(key, []).append((rid, channel, start, stop))
+        out: Dict[str, np.ndarray] = {}
+        for key, reqs in groups.items():
+            sid = key[0]
+            try:
+                bodies = decode_ranges(
+                    self._stores[sid], [(c, i, j) for _, c, i, j in reqs],
+                    seed=self._seeds[sid], parse=self._parse_for(sid))
+            except Exception as e:  # quarantine the group, serve the rest
+                for rid, _, _, _ in reqs:
+                    self.last_errors[rid] = e
+                self.stats["failed_requests"] += len(reqs)
+                continue
+            for (rid, _, i, j), body in zip(reqs, bodies):
+                out[rid] = body
+                self.stats["blocks_out"] += j - i
+            self.stats["requests"] += len(reqs)
+        self.stats["flushes"] += 1
+        return out
+
+    # ------------------------------------------------------------- internals
+    def _store(self, store_id: str):
+        try:
+            return self._stores[store_id]
+        except KeyError:
+            raise KeyError(f"store {store_id!r} is not attached") from None
+
+    def _parse_for(self, store_id: str):
+        """LRU-caching wrapper around ``repro.store.parse_chunk``."""
+        from repro.store import parse_chunk
+
+        def parse(store, chunk):
+            key = (store_id, chunk)
+            hit = self._cache.get(key)
+            if hit is not None:
+                self._cache.move_to_end(key)
+                self.stats["cache_hits"] += 1
+                return hit
+            self.stats["cache_misses"] += 1
+            parsed = parse_chunk(store, chunk)
+            self._cache[key] = parsed
+            self._cached_blocks += len(parsed.is_hit)
+            while self._cache and self._cached_blocks > self._cache_blocks:
+                _, old = self._cache.popitem(last=False)
+                self._cached_blocks -= len(old.is_hit)
+            return parsed
+
+        return parse
+
+    def _age(self) -> Optional[float]:
+        if not self._pending:
+            return None
+        return self._clock() - self._pending[0][5]

@@ -31,14 +31,25 @@ class FlushPolicy:
 
     ``max_batch_blocks`` bounds the padded scan length (device latency and
     the compile-shape bucket); ``max_batch_streams`` bounds how many
-    clients wait on one dispatch (tail latency).  Either threshold trips a
-    flush; callers may always flush earlier (timers, shutdown).
+    clients wait on one dispatch (tail latency); ``max_age_s`` is the
+    latency-SLO deadline -- a batch flushes once its oldest staged payload
+    has waited this long, however little has accumulated.  Any threshold
+    trips a flush; callers may always flush earlier (shutdown).
+
+    The policy is pure: coalescers measure the age with their own
+    (injectable) clock and pass it in, so deadline behaviour is unit
+    testable without real sleeps.
     """
 
     max_batch_blocks: int = 4096
     max_batch_streams: int = 256
+    max_age_s: Optional[float] = None
 
-    def should_flush(self, n_streams: int, n_blocks: int) -> bool:
+    def should_flush(self, n_streams: int, n_blocks: int,
+                     age_s: Optional[float] = None) -> bool:
+        if (self.max_age_s is not None and age_s is not None
+                and age_s >= self.max_age_s and (n_streams or n_blocks)):
+            return True
         return (n_streams >= self.max_batch_streams
                 or n_blocks >= self.max_batch_blocks)
 

@@ -1,0 +1,261 @@
+"""Batched range decode over a packed container (DESIGN.md Sec. 7).
+
+``decode_range(store, i, j)`` returns exactly
+``decode_stream(channel_stream)[i*B : j*B]`` -- byte-identical -- while
+touching only the segments that cover blocks ``[i, j)``:
+
+  1. *seek*: the footer index's cumulative block counts locate the covering
+     chunks (two ``searchsorted``\\ s, no byte walking);
+  2. *parse*: only those chunks' decision bytes are walked (``parse_chunk``,
+     cacheable -- the serving layer LRUs it);  carried dictionary entries
+     are materialized from the index's snapshot offsets as *virtual misses*
+     in front of the window, so history is never replayed;
+  3. *gather + reconstruct*: the requested blocks' payload rows are gathered
+     in one fancy-indexing pass and rebuilt by the same
+     ``_reconstruct_blocks`` math as the full decoder.  Hit permutations
+     are keyed on the global block position (``_hit_perms``), which is what
+     makes the slice exact.
+
+``decode_ranges`` is the batched entry point: many ``(channel, start,
+stop)`` requests are padded to one ``(R, nb_max, P)`` batch -- mirroring the
+masked ragged batches of ``encode_decisions_batched`` on the write side --
+and rebuilt in ONE padded reconstruct call, with one shared gather.
+``decode_channels`` decodes whole channels (tail included) through the same
+batch path.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, NamedTuple, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import stream as stream_mod
+from repro.core.stream import StreamFormatError, StreamHeader
+
+from .container import Container
+
+__all__ = [
+    "ParsedChunk",
+    "parse_chunk",
+    "decode_range",
+    "decode_ranges",
+    "decode_channels",
+]
+
+
+class ParsedChunk(NamedTuple):
+    """One chunk's walked decisions + absolute value-byte offsets.
+
+    Pure function of ``(container bytes, chunk id)`` -- safe to cache; the
+    serving layer's LRU (``repro.serve.compress.DecompressionService``)
+    holds exactly these."""
+
+    header: StreamHeader
+    is_hit: np.ndarray             # (nb,) bool
+    slot: np.ndarray               # (nb,) int32
+    base_offs: Optional[np.ndarray]  # (nb,) abs offsets (res/delta) or None
+    pay_offs: np.ndarray           # (n_miss,) abs payload offsets, miss order
+
+
+def parse_chunk(store: Container, chunk: int) -> ParsedChunk:
+    """Walk one chunk's decision bytes in isolation.
+
+    The index supplies the two pieces of cross-segment state a raw stream
+    only has implicitly: the FIFO fill counter entering the segment and
+    (elsewhere, via ``Container.snapshot``) the dictionary contents."""
+    buf = memoryview(store.data)
+    start = int(store._cols["offset"][chunk])
+    hdr, off = stream_mod._unpack_header(buf, start)
+    fill_in = int(store._cols["fill_in"][chunk])
+    hb, sb, ob = bytearray(), bytearray(), bytearray()
+    end, _ = stream_mod._walk_segment(buf, off, hdr, fill_in, hb, sb, ob)
+    if end != start + int(store._cols["length"][chunk]):
+        raise StreamFormatError(
+            f"chunk {chunk} walk ended at {end}, index says "
+            f"{start + int(store._cols['length'][chunk])}", end)
+    h = np.frombuffer(hb, np.uint8).astype(bool)
+    s = np.frombuffer(sb, np.uint8).astype(np.int32)
+    o = np.frombuffer(ob, np.uint8).astype(bool)
+    if len(h):
+        bo, po = stream_mod._segment_offsets(hdr, off, h, o, hdr.cont)
+    else:
+        bo = None if hdr.mode == stream_mod.MODE_STD else np.zeros(0, np.int64)
+        po = np.zeros(0, np.int64)
+    return ParsedChunk(hdr, h, s, bo, po)
+
+
+ParseFn = Callable[[Container, int], ParsedChunk]
+
+
+class _Window(NamedTuple):
+    """Decision state of the chunks covering one block range, plus the
+    snapshot-sourced virtual misses standing in for pre-window history."""
+
+    header: StreamHeader
+    gb0: int                  # global block index of the window's first block
+    n_vir: int                # virtual (snapshot) misses prepended
+    src_pay_offs: np.ndarray  # per-miss payload offsets (virtuals first)
+    src: np.ndarray           # per-block source row, window-local, incl. virt
+    is_hit: np.ndarray        # (window nb,) real blocks only
+    base_offs: Optional[np.ndarray]
+
+
+def _covering_chunks(store: Container, channel: int, start: int,
+                     stop: int) -> Tuple[np.ndarray, int]:
+    ks = store.chunks_of(channel)
+    total = store.total_blocks(channel)
+    if not (0 <= start < stop <= total):
+        raise IndexError(
+            f"block range [{start}, {stop}) outside [0, {total}) of "
+            f"channel {channel}")
+    ends = (store._cols["blocks_before"][ks]
+            + store._cols["n_blocks"][ks])
+    k0 = int(np.searchsorted(ends, start, side="right"))
+    k1 = int(np.searchsorted(ends, stop, side="left"))
+    return ks[k0:k1 + 1], int(store._cols["blocks_before"][ks[k0]])
+
+
+def _parse_window(store: Container, chunks: np.ndarray, gb0: int,
+                  parse: ParseFn) -> _Window:
+    parts = [parse(store, int(k)) for k in chunks]
+    hdr = parts[0].header
+    fill0 = int(store._cols["fill_in"][chunks[0]])
+    snap = store.snapshot(int(chunks[0]))
+    h = np.concatenate([p.is_hit for p in parts])
+    s = np.concatenate([p.slot for p in parts])
+    pay = np.concatenate([p.pay_offs for p in parts])
+    bo = (None if hdr.mode == stream_mod.MODE_STD
+          else np.concatenate([p.base_offs for p in parts]))
+
+    # Carried dictionary entries enter as virtual misses in front of the
+    # window: slot k's live payload lives at snapshot offset k.  After this,
+    # hit-source resolution is identical to the full decoder's.
+    h_ext = np.concatenate([np.zeros(fill0, bool), h])
+    s_ext = np.concatenate([np.arange(fill0, dtype=np.int32), s])
+    src = stream_mod._decode_sources(h_ext, s_ext)
+    return _Window(hdr, gb0, fill0, np.concatenate([snap, pay]), src, h, bo)
+
+
+def _gather_rows(u8: np.ndarray, dt: np.dtype, offs: np.ndarray,
+                 width: int) -> np.ndarray:
+    if width == 0 or len(offs) == 0:
+        return np.zeros((len(offs), width), dtype=dt)
+    return u8[offs[:, None] + np.arange(width * dt.itemsize)].view(dt)
+
+
+def decode_range(store: Container, start_block: int, stop_block: int,
+                 channel: int = 0, seed: int = 0,
+                 parse: ParseFn = parse_chunk) -> np.ndarray:
+    """Decode blocks ``[start_block, stop_block)`` of one channel.
+
+    Byte-identical to the same slice of a full ``decode_stream`` over the
+    channel's reassembled stream; work is proportional to the requested
+    range (only covering segments are walked -- see the
+    ``segment_walk_count`` assertions in tests/test_store.py)."""
+    return decode_ranges(store, [(channel, start_block, stop_block)],
+                         seed=seed, parse=parse)[0]
+
+
+def decode_ranges(store: Container, requests: Sequence[Tuple[int, int, int]],
+                  seed: int = 0, parse: ParseFn = parse_chunk
+                  ) -> List[np.ndarray]:
+    """Batched range decode: ``requests`` is ``[(channel, start, stop), ...]``.
+
+    All requests share one payload gather and ONE padded reconstruct call:
+    ranges are stacked on a leading request axis and padded to the longest
+    request, exactly like the write side's ragged coalesced batches (pad
+    rows are dead weight the reconstruct math ignores -- all-miss, zero
+    payload).  Returns one 1-D array per request, in request order."""
+    if not len(requests):
+        return []
+    # per-batch memo: requests whose windows share a chunk walk it once
+    # (the serving layer's LRU composes on top of this for cross-call reuse)
+    memo: Dict[int, ParsedChunk] = {}
+
+    def parse_once(st, k):
+        if k not in memo:
+            memo[k] = parse(st, k)
+        return memo[k]
+
+    windows = []
+    for channel, start, stop in requests:
+        chunks, gb0 = _covering_chunks(store, channel, start, stop)
+        windows.append(_parse_window(store, chunks, gb0, parse_once))
+
+    hdr = windows[0].header
+    for w in windows[1:]:
+        if ((w.header.mode, w.header.block_size, np.dtype(w.header.dtype),
+             w.header.value_range)
+                != (hdr.mode, hdr.block_size, np.dtype(hdr.dtype),
+                    hdr.value_range)):
+            raise ValueError(
+                "batched ranges must share mode/block_size/dtype/value_range"
+                "; split heterogeneous requests into separate decode_ranges "
+                "calls")
+    dt = np.dtype(hdr.dtype)
+    B = hdr.block_size
+    std = hdr.mode == stream_mod.MODE_STD
+    P = B if std else B - 1
+    u8 = np.frombuffer(store.data, dtype=np.uint8)
+
+    R = len(requests)
+    lens = [stop - start for _, start, stop in requests]
+    nbm = max(lens)
+
+    # one shared gather: every request's in-range payload offsets (and
+    # bases), concatenated, hit the raw bytes in a single fancy-index pass
+    po_parts, bo_parts = [], []
+    for w, (channel, start, stop) in zip(windows, requests):
+        lo = start - w.gb0
+        sl = slice(lo + w.n_vir, stop - w.gb0 + w.n_vir)
+        po_parts.append(w.src_pay_offs[w.src[sl]])
+        if not std:
+            bo_parts.append(w.base_offs[lo:stop - w.gb0])
+    rows_flat = _gather_rows(u8, dt, np.concatenate(po_parts), P)
+    bases_flat = (None if std else
+                  _gather_rows(u8, dt, np.concatenate(bo_parts), 1).ravel())
+
+    # pad to (R, nbm, ...) and rebuild everything in one call
+    rows = np.zeros((R, nbm, P), dtype=dt)
+    bases = None if std else np.zeros((R, nbm), dtype=dt)
+    is_hit = np.zeros((R, nbm), dtype=bool)
+    block_idx = np.zeros((R, nbm), dtype=np.int64)
+    pos = 0
+    for r, (w, (channel, start, stop), n) in enumerate(
+            zip(windows, requests, lens)):
+        rows[r, :n] = rows_flat[pos:pos + n]
+        if not std:
+            bases[r, :n] = bases_flat[pos:pos + n]
+        lo = start - w.gb0
+        is_hit[r, :n] = w.is_hit[lo:lo + n]
+        block_idx[r, :n] = np.arange(start, stop)
+        pos += n
+    out = stream_mod._reconstruct_blocks(
+        hdr, rows.reshape(R * nbm, P),
+        None if std else bases.reshape(R * nbm),
+        is_hit.reshape(R * nbm), block_idx.reshape(R * nbm), seed,
+    ).reshape(R, nbm, B)
+    return [out[r, :n].ravel() for r, n in enumerate(lens)]
+
+
+def decode_channels(store: Container, channels: Optional[Sequence[int]] = None,
+                    seed: int = 0, parse: ParseFn = parse_chunk
+                    ) -> Dict[int, np.ndarray]:
+    """Full decode of the selected channels (default: all), tails included,
+    through one batched ``decode_ranges`` call.  Equals ``decode_stream``
+    over each channel's reassembled stream."""
+    if channels is None:
+        channels = store.channels
+    requests, blank = [], {}
+    for c in channels:
+        nb = store.total_blocks(c)
+        if nb:
+            requests.append((c, 0, nb))
+        else:
+            blank[c] = np.zeros(0, dtype=store.header_of(
+                int(store.chunks_of(c)[0])).dtype)
+    bodies = decode_ranges(store, requests, seed=seed, parse=parse)
+    out = dict(blank)
+    for (c, _, _), body in zip(requests, bodies):
+        out[c] = body
+    return {c: np.concatenate([out[c], store.tail(c)]) for c in channels}

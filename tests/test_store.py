@@ -1,0 +1,465 @@
+"""Indexed decode store (ISSUE 3): container format round trips, range
+decode equivalence against the sequential decoder, parse locality, and the
+serving read path.
+
+The load-bearing acceptance test is range equivalence: for every golden
+mode x D case, ``decode_range(store, i, j)`` must be BYTE-identical to
+``decode_stream(stream)[i*B : j*B]`` -- including std-mode hit
+permutations, which are keyed on the global block position exactly so this
+holds.  The locality test pins, via ``segment_walk_count``, that a small
+range of a many-segment container walks only the covering segments.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from conftest import GOLDEN_CASES, golden_codec_kwargs, golden_signal
+from repro.core import IdealemCodec, StreamFormatError
+from repro.core import stream as stream_mod
+from repro.core.stream import decode_stream
+from repro.serve import DecompressionService, FlushPolicy
+from repro.store import (Container, ContainerFormatError, ContainerWriter,
+                         decode_channels, decode_range, decode_ranges, pack)
+from test_golden_corpus import _golden_bytes
+
+FEED = 100  # session chunk size (samples) used to build multi-segment streams
+
+
+def _session_stream(name, feed=FEED):
+    codec = IdealemCodec(**golden_codec_kwargs(name))
+    x = golden_signal(name)
+    s = codec.session()
+    segs = [s.feed(x[lo:lo + feed]) for lo in range(0, len(x), feed)]
+    segs.append(s.finish())
+    return b"".join(segs)
+
+
+def _all_ranges(nb):
+    return [(i, j) for i in range(nb) for j in range(i + 1, nb + 1)]
+
+
+# ----------------------------------------------- range-decode equivalence
+@pytest.mark.parametrize("name", sorted(GOLDEN_CASES))
+def test_all_ranges_equal_full_decode_oneshot(name):
+    """Every (i, j) over every golden one-shot stream: the random-access
+    read must be byte-identical to the sequential decode's slice."""
+    blob = _golden_bytes(name)
+    y = decode_stream(blob)
+    store = Container(pack(blob))
+    B = store.header_of(0).block_size
+    nb = store.total_blocks(0)
+    for i, j in _all_ranges(nb):
+        np.testing.assert_array_equal(
+            decode_range(store, i, j), y[i * B:j * B],
+            err_msg=f"{name} blocks [{i}, {j})")
+
+
+@pytest.mark.parametrize("name", sorted(GOLDEN_CASES))
+def test_all_ranges_equal_full_decode_multisegment(name):
+    """Same, over the chunked-session (FLAG_MORE/FLAG_CONT) form of each
+    golden signal: ranges that start inside continuation segments source
+    carried dictionary entries from the index snapshots."""
+    blob = _session_stream(name)
+    y = decode_stream(blob)
+    np.testing.assert_array_equal(y, decode_stream(_golden_bytes(name)))
+    store = Container(pack(blob))
+    assert store.n_chunks > 3  # must actually be multi-segment
+    B = store.header_of(0).block_size
+    nb = store.total_blocks(0)
+    for i, j in _all_ranges(nb):
+        np.testing.assert_array_equal(
+            decode_range(store, i, j), y[i * B:j * B],
+            err_msg=f"{name} blocks [{i}, {j})")
+
+
+def test_decode_ranges_batched_equals_loop():
+    blob = _session_stream("std_D32")
+    store = Container(pack(blob))
+    nb = store.total_blocks(0)
+    reqs = [(0, i, j) for i, j in [(0, nb), (3, 5), (nb - 1, nb), (7, 29)]]
+    batched = decode_ranges(store, reqs)
+    for (_, i, j), got in zip(reqs, batched):
+        np.testing.assert_array_equal(got, decode_range(store, i, j))
+
+
+def test_decode_channels_equals_stream_decode():
+    rng = np.random.default_rng(0)
+    C = 3
+    chans = np.stack([rng.normal(c, 1.0, size=16 * 50 + 4) for c in range(C)])
+    codec = IdealemCodec(mode="std", block_size=16, num_dict=8, alpha=0.05,
+                         rel_tol=0.5, backend="numpy")
+    s = codec.session(channels=C)
+    parts = [s.feed(chans[:, :300]), s.feed(chans[:, 300:]), s.finish()]
+    per_chan = {c: b"".join(p[c] for p in parts) for c in range(C)}
+    store = Container(pack(per_chan))
+    assert store.channels == [0, 1, 2]
+    out = decode_channels(store)
+    for c in range(C):
+        np.testing.assert_array_equal(out[c], decode_stream(per_chan[c]))
+        np.testing.assert_array_equal(store.tail(c), chans[c][-4:])
+
+
+def test_empty_and_tail_only_streams_pack():
+    """Zero-block streams (empty / shorter than one block) still pack and
+    read back: the container must not choke on 0-block chunks."""
+    codec = IdealemCodec(mode="std", block_size=16, num_dict=4,
+                         backend="numpy")
+    for x in [np.zeros(0), np.arange(5, dtype=np.float64)]:
+        store = Container(pack(codec.encode(x)))
+        assert store.total_blocks(0) == 0
+        np.testing.assert_array_equal(decode_channels(store)[0], x)
+        with pytest.raises(IndexError):
+            decode_range(store, 0, 1)
+
+
+def test_out_of_range_requests_raise():
+    store = Container(pack(_golden_bytes("std_D32")))
+    nb = store.total_blocks(0)
+    for bad in [(-1, 2), (0, nb + 1), (5, 5), (7, 3)]:
+        with pytest.raises(IndexError):
+            decode_range(store, *bad)
+    with pytest.raises(KeyError):
+        decode_range(store, 0, 1, channel=9)
+
+
+# --------------------------------------------------------- parse locality
+def test_small_range_walks_only_covering_segments():
+    """Acceptance criterion: decoding a small range of a large multi-segment
+    container parses only the segments covering that range."""
+    blob = _session_stream("std_D32", feed=4 * 16)  # 4-block segments
+    store = Container(pack(blob))
+    assert store.n_chunks >= 10
+    y = decode_stream(blob)
+
+    before = stream_mod.segment_walk_count()
+    got = decode_range(store, 17, 19)  # inside one 4-block segment
+    assert stream_mod.segment_walk_count() - before == 1
+    np.testing.assert_array_equal(got, y[17 * 16:19 * 16])
+
+    before = stream_mod.segment_walk_count()
+    decode_range(store, 18, 22)  # straddles a segment boundary
+    assert stream_mod.segment_walk_count() - before == 2
+
+    before = stream_mod.segment_walk_count()
+    decode_range(store, 0, store.total_blocks(0))
+    full_walks = stream_mod.segment_walk_count() - before
+    assert full_walks >= 10  # the full read really does walk everything
+
+
+def test_seek_work_independent_of_prefix_length():
+    """The indexed read of the LAST block must not get slower (in walked
+    segments -- the work unit) as the stream grows."""
+    for feed in [64, 16 * 40 + 5]:
+        blob = _session_stream("delta_D1_vr", feed=feed)
+        store = Container(pack(blob))
+        nb = store.total_blocks(0)
+        before = stream_mod.segment_walk_count()
+        decode_range(store, nb - 1, nb)
+        assert stream_mod.segment_walk_count() - before == 1
+
+
+# ------------------------------------------------------- container format
+def test_container_rejects_corruption():
+    good = pack(_golden_bytes("std_D32"))
+    Container(good)  # sanity
+    with pytest.raises(ContainerFormatError, match="magic"):
+        Container(b"NOTAPACK" + good[8:])
+    with pytest.raises(ContainerFormatError, match="footer"):
+        Container(good[:-8])
+    with pytest.raises(ContainerFormatError, match="CRC"):
+        flipped = bytearray(good)
+        flipped[-30] ^= 0xFF  # inside the index
+        Container(bytes(flipped))
+    with pytest.raises(ContainerFormatError):
+        Container(good[: len(good) // 2])
+    with pytest.raises(ContainerFormatError):
+        Container(b"")
+
+
+def test_container_rejects_out_of_region_snapshot():
+    """Snapshot offsets feed the payload gather directly, so a forged one
+    must be caught at open time, not surface as a numpy IndexError (or a
+    silent read of index bytes as samples) during decode."""
+    import struct
+    import zlib
+    good = pack(_session_stream("std_D32"))
+    store = Container(good)
+    foot = struct.Struct("<8sQII")
+    magic, idx_off, idx_len, _ = foot.unpack_from(good, len(good) - foot.size)
+    index = bytearray(good[idx_off:idx_off + idx_len])
+    # last 8 index bytes = a snapshot offset (final CONT chunk has fill>0)
+    assert store.snapshot(store.n_chunks - 1).size > 0
+    struct.pack_into("<q", index, idx_len - 8, 10 ** 9)
+    forged = (good[:idx_off] + bytes(index)
+              + foot.pack(magic, idx_off, idx_len, zlib.crc32(bytes(index))))
+    with pytest.raises(ContainerFormatError, match="snapshot offset"):
+        Container(forged)
+
+
+def test_container_is_byte_verbatim():
+    """Chunks store segments untouched: reassembling a channel reproduces
+    the original stream exactly."""
+    for name in sorted(GOLDEN_CASES):
+        blob = _session_stream(name)
+        store = Container(pack(blob))
+        assert store.stream_bytes(0) == blob
+
+
+def test_writer_rejects_malformed_appends():
+    seg_stream = _session_stream("std_D32")
+    segs, _, _, _ = stream_mod._walk_all(memoryview(seg_stream))
+    seg_bytes = [seg_stream[s.start:s.end] for s in segs]
+
+    w = ContainerWriter()
+    with pytest.raises(StreamFormatError, match="FLAG_CONT"):
+        w.append(seg_bytes[1])  # a continuation segment cannot open a channel
+
+    w = ContainerWriter()
+    w.append(seg_bytes[0])
+    with pytest.raises(StreamFormatError, match="FLAG_CONT"):
+        w.append(seg_bytes[0])  # restarting mid-channel is rejected
+
+    w = ContainerWriter()
+    w.append(seg_stream)  # whole chain: final segment closes the channel
+    with pytest.raises(StreamFormatError, match="finished"):
+        w.append(seg_bytes[1])
+
+    w = ContainerWriter()
+    w.append(seg_bytes[0])
+    # same channel, different codec parameters -- must not be accepted.
+    # max_count (header byte 9) is ignored by the D>=2 walk, so the segment
+    # stays structurally valid and only the parameter check can object.
+    mutated = bytearray(seg_bytes[1])
+    mutated[9] ^= 0x0F
+    with pytest.raises(StreamFormatError, match="parameters"):
+        w.append(bytes(mutated))
+
+
+def test_writer_file_roundtrip_and_reopen(tmp_path):
+    blob = _session_stream("residual_D32_vr")
+    segs, _, _, _ = stream_mod._walk_all(memoryview(blob))
+    seg_bytes = [blob[s.start:s.end] for s in segs]
+    path = os.path.join(tmp_path, "t.idlmc")
+
+    w = ContainerWriter(path)
+    for sb in seg_bytes[: len(seg_bytes) // 2]:
+        w.append(sb)
+    assert w.finalize() is None
+    w2 = ContainerWriter.reopen(path)
+    for sb in seg_bytes[len(seg_bytes) // 2:]:
+        w2.append(sb)
+    w2.finalize()
+
+    store = Container.open(path)
+    assert store.stream_bytes(0) == blob
+    y = decode_stream(blob)
+    nb = store.total_blocks(0)
+    for i, j in [(0, nb), (nb // 2 - 1, nb // 2 + 2), (nb - 1, nb)]:
+        np.testing.assert_array_equal(decode_range(store, i, j),
+                                      y[i * 16:j * 16])
+
+
+def test_session_and_service_container_output():
+    """encode -> store -> range-decode end to end through the public API."""
+    from repro.serve import CompressionService
+    rng = np.random.default_rng(3)
+    x = np.concatenate([rng.normal(i % 4, 1.0, size=256) for i in range(20)])
+    kwargs = dict(mode="std", block_size=16, num_dict=16, alpha=0.05,
+                  rel_tol=0.5, backend="numpy")
+    codec = IdealemCodec(**kwargs)
+    y = codec.decode(codec.encode(x))
+
+    s = codec.session(container=True)
+    for lo in range(0, len(x), 700):
+        s.feed(x[lo:lo + 700])
+    store = Container(s.finish())
+    np.testing.assert_array_equal(decode_channels(store)[0], y)
+
+    svc = CompressionService(**kwargs)
+    svc.open_stream("pmu", container=True)
+    for lo in range(0, len(x), 700):
+        svc.feed("pmu", x[lo:lo + 700])
+    store2 = Container(svc.close_stream("pmu"))
+    nb = store2.total_blocks(0)
+    np.testing.assert_array_equal(decode_range(store2, 5, 9), y[5 * 16:9 * 16])
+    np.testing.assert_array_equal(decode_channels(store2)[0], y)
+    assert nb == len(x) // 16
+
+
+# ------------------------------------------------------- serving read path
+def test_decompression_service_reads_and_batches():
+    blob = _session_stream("std_D32")
+    y = decode_stream(blob)
+    svc = DecompressionService(policy=FlushPolicy(max_batch_streams=3))
+    svc.attach("g", pack(blob))
+    with pytest.raises(KeyError):
+        svc.attach("g", pack(blob))
+
+    np.testing.assert_array_equal(svc.read("g", 2, 6), y[2 * 16:6 * 16])
+    assert svc.submit("r1", "g", 0, 4) is None
+    assert svc.submit("r2", "g", 10, 12) is None
+    with pytest.raises(KeyError):
+        svc.submit("r1", "g", 0, 1)  # duplicate pending id
+    ans = svc.submit("r3", "g", 39, 40)  # third request trips the policy
+    assert set(ans) == {"r1", "r2", "r3"}
+    np.testing.assert_array_equal(ans["r1"], y[: 4 * 16])
+    np.testing.assert_array_equal(ans["r3"], y[39 * 16:40 * 16])
+    assert svc.stats["flushes"] == 1
+
+    np.testing.assert_array_equal(svc.read_channels("g")[0], y)
+    with pytest.raises(IndexError):
+        svc.submit("r4", "g", 0, 10 ** 6)
+    svc.detach("g")
+    with pytest.raises(KeyError):
+        svc.read("g", 0, 1)
+
+
+def test_detach_drops_pending_accounting():
+    """Detaching a store with staged requests must also drop their block
+    count and age, or survivors inherit flush pressure from dead work."""
+    blob = _session_stream("std_D32")
+    y = decode_stream(blob)
+    t = [0.0]
+    svc = DecompressionService(
+        policy=FlushPolicy(max_batch_blocks=50, max_age_s=10.0),
+        clock=lambda: t[0])
+    svc.attach("a", pack(blob))
+    svc.attach("b", pack(blob))
+    assert svc.submit("r1", "a", 0, 40) is None
+    svc.detach("a")
+    t[0] = 9.0
+    # 20 pending blocks < 50 and the oldest LIVE request is 0s old: neither
+    # threshold may trip on stale accounting from the detached store
+    assert svc.submit("r2", "b", 0, 20) is None
+    assert svc.poll() is None
+    t[0] = 19.5
+    out = svc.poll()  # r2 is now 10.5s old: deadline fires on its own age
+    assert set(out) == {"r2"}
+    np.testing.assert_array_equal(out["r2"], y[: 20 * 16])
+    # the dropped request is reported, not silently forgotten -- and a
+    # later flush must not erase the record before the caller reads it
+    assert isinstance(svc.last_errors["r1"], KeyError)
+    assert svc.stats["failed_requests"] == 1
+
+
+def test_decompression_service_lru_cache():
+    blob = _session_stream("std_D32", feed=4 * 16)
+    store = Container(pack(blob))
+    svc = DecompressionService(cache_blocks=10 ** 9)
+    svc.attach("s", store)
+    svc.read("s", 17, 19)
+    misses0 = svc.stats["cache_misses"]
+    svc.read("s", 17, 19)  # identical request: served from cache
+    assert svc.stats["cache_misses"] == misses0
+    assert svc.stats["cache_hits"] >= 1
+
+    # a tiny budget must evict instead of growing without bound
+    small = DecompressionService(cache_blocks=4)
+    small.attach("s", store)
+    small.read("s", 0, store.total_blocks(0))
+    assert small._cached_blocks <= 4
+
+
+def test_decompression_service_deadline_injected_clock():
+    t = [0.0]
+    svc = DecompressionService(policy=FlushPolicy(max_age_s=0.5),
+                               clock=lambda: t[0])
+    svc.attach("s", pack(_golden_bytes("std_D1")))
+    y = decode_stream(_golden_bytes("std_D1"))
+    assert svc.submit("a", "s", 1, 3) is None
+    assert svc.poll() is None          # young batch: no flush
+    t[0] = 0.6
+    out = svc.poll()                   # deadline expired: flush now
+    np.testing.assert_array_equal(out["a"], y[16:3 * 16])
+    assert svc.poll() is None          # deadline rearmed
+
+
+def test_flush_isolates_failing_group():
+    """A corrupt store must fail alone: healthy requests in the same flush
+    still get their answers; the failed ids surface in last_errors."""
+    blob = _session_stream("std_D32")
+    y = decode_stream(blob)
+    good = pack(blob)
+    bad = bytearray(good)
+    # corrupt the first decision byte of a mid-stream chunk body (0xFF = a
+    # bogus overwrite prefix => the walk consumes a phantom 130-byte miss
+    # and misses the indexed chunk length); the footer CRC covers only the
+    # index, so attach-time validation passes
+    store = Container(good)
+    off = (int(store._cols["offset"][store.n_chunks - 2])
+           + stream_mod._HDR.size)  # tail-less mid segment: body starts here
+    bad[off] = 0xFF
+    svc = DecompressionService(policy=FlushPolicy(max_batch_streams=2))
+    svc.attach("good", good)
+    svc.attach("bad", bytes(bad))
+    nb = store.total_blocks(0)
+    assert svc.submit("rb", "bad", 0, nb) is None
+    ans = svc.submit("rg", "good", 3, 7)
+    assert set(ans) == {"rg"}
+    np.testing.assert_array_equal(ans["rg"], y[3 * 16:7 * 16])
+    assert isinstance(svc.last_errors["rb"], StreamFormatError)
+    assert svc.stats["failed_requests"] == 1
+
+
+def test_flush_mixed_length_requests():
+    """Short and long requests in one flush (distinct padding buckets) all
+    decode exactly."""
+    blob = _session_stream("std_D32")
+    y = decode_stream(blob)
+    svc = DecompressionService(policy=FlushPolicy(max_batch_streams=5))
+    svc.attach("s", pack(blob))
+    nb = Container(pack(blob)).total_blocks(0)
+    reqs = [("a", 0, 1), ("b", 5, 6), ("c", 17, 18), ("d", 0, nb)]
+    for rid, i, j in reqs:
+        svc.submit(rid, "s", i, j)
+    ans = svc.submit("e", "s", 8, 10)
+    for rid, i, j in reqs + [("e", 8, 10)]:
+        np.testing.assert_array_equal(ans[rid], y[i * 16:j * 16])
+
+
+def test_decode_seed_minus_one_no_warning():
+    """seed=-1 masks to 2**64-1; the permutation hash must wrap silently."""
+    import warnings
+    blob = _golden_bytes("std_D32")
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        a = decode_stream(blob, seed=-1)
+        store = Container(pack(blob))
+        np.testing.assert_array_equal(
+            decode_range(store, 0, 40, seed=-1), a[:40 * 16])
+
+
+# ------------------------------------------------------- hypothesis ranges
+try:
+    import hypothesis  # noqa: F401
+
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    _PREPPED = {}
+
+    def _prepped(name):
+        if name not in _PREPPED:
+            blob = _session_stream(name)
+            _PREPPED[name] = (Container(pack(blob)), decode_stream(blob))
+        return _PREPPED[name]
+
+    @given(name=st.sampled_from(sorted(GOLDEN_CASES)),
+           data=st.data())
+    @settings(max_examples=60, deadline=None)
+    def test_random_ranges_property(name, data):
+        """Property form of the acceptance criterion: ANY range of ANY
+        golden-case container equals the sequential decode's slice."""
+        store, y = _prepped(name)
+        nb = store.total_blocks(0)
+        B = store.header_of(int(store.chunks_of(0)[0])).block_size
+        i = data.draw(st.integers(min_value=0, max_value=nb - 1))
+        j = data.draw(st.integers(min_value=i + 1, max_value=nb))
+        np.testing.assert_array_equal(decode_range(store, i, j),
+                                      y[i * B:j * B])
+
+except ImportError:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_random_ranges_property():
+        pass

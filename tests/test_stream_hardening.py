@@ -1,0 +1,119 @@
+"""Parser hardening (ISSUE 3 satellite): malformed or truncated streams must
+raise the typed ``StreamFormatError`` -- with a byte offset -- never a raw
+``IndexError``/``struct.error``/``ValueError`` from the walk internals.
+
+The fuzz corpus is the golden streams themselves: every truncation point of
+a real stream (all three modes, D regimes, tails, the 0xFF prefix) plus
+targeted corruptions of each header field and hand-built pathological
+bodies.
+"""
+import struct
+
+import numpy as np
+import pytest
+
+from conftest import GOLDEN_CASES
+from repro.core.stream import (_HDR, MAGIC, VERSION, StreamFormatError,
+                               StreamHeader, _pack_header, decode_stream,
+                               parse_stream)
+from test_golden_corpus import _golden_bytes
+
+
+def _assert_typed_failure(data):
+    """Parsing must fail, and fail with the typed error (which subclasses
+    ValueError, so pre-hardening callers keep working)."""
+    with pytest.raises(StreamFormatError) as ei:
+        parse_stream(data)
+    assert isinstance(ei.value, ValueError)
+    assert "byte" in str(ei.value)  # offset is part of the message
+    with pytest.raises(StreamFormatError):
+        decode_stream(data)
+
+
+@pytest.mark.parametrize("name", sorted(GOLDEN_CASES))
+def test_every_truncation_point_raises_typed(name):
+    """A stream cut anywhere strictly inside must raise StreamFormatError:
+    in the header, the tail, a decision byte or the value payload."""
+    blob = _golden_bytes(name)
+    # full sweep is ~1.4k parses per case; stride keeps it fast while still
+    # crossing every region (header/tail boundary at 40, body, final bytes)
+    cuts = set(range(0, 64)) | set(range(64, len(blob), 7)) \
+        | set(range(len(blob) - 16, len(blob)))
+    for cut in sorted(cuts):
+        _assert_typed_failure(blob[:cut])
+
+
+@pytest.mark.parametrize("name", sorted(GOLDEN_CASES))
+def test_golden_stream_still_parses_whole(name):
+    parse_stream(_golden_bytes(name))  # the sweep above must not overfit
+
+
+def test_corrupt_header_fields_raise_typed():
+    blob = bytearray(_golden_bytes("std_D32"))
+    for pos, bad, what in [
+        (0, ord(b"X"), "magic"),
+        (4, VERSION + 9, "version"),
+        (5, 7, "mode byte"),
+    ]:
+        mutated = bytearray(blob)
+        mutated[pos] = bad
+        with pytest.raises(StreamFormatError, match="byte"):
+            parse_stream(bytes(mutated))
+
+    # degenerate geometry: block_size == 0 must be rejected, not divide the
+    # layout math
+    hdr = struct.unpack_from("<4sBBHBBBBddIH", blob, 0)
+    zeroed = bytearray(blob)
+    struct.pack_into("<H", zeroed, 6, 0)  # block_size field
+    with pytest.raises(StreamFormatError):
+        parse_stream(bytes(zeroed))
+    assert hdr[0] == MAGIC
+
+
+def test_tail_overrun_raises_typed():
+    h = StreamHeader(0, 16, 4, 255, np.dtype(np.float64), None, 0,
+                     np.zeros(3))
+    blob = _pack_header(h)
+    # claim a 1000-sample tail but provide 3
+    forged = bytearray(blob)
+    struct.pack_into("<H", forged, _HDR.size - 2, 1000)
+    with pytest.raises(StreamFormatError, match="tail"):
+        parse_stream(bytes(forged))
+
+
+def test_single_dict_count_overrun_raises_typed():
+    """A D==1 hit-count byte larger than the remaining block count is a
+    corrupt stream, not an infinite/negative walk."""
+    h = StreamHeader(0, 16, 1, 255, np.dtype(np.float64), None, 2,
+                     np.zeros(0))
+    body = np.arange(16, dtype=np.float64).tobytes() + bytes([200])
+    # padding so the walk fails on the count, not the buffer end
+    blob = _pack_header(h) + body + bytes(64)
+    with pytest.raises(StreamFormatError, match="run overruns"):
+        parse_stream(blob)
+
+
+def test_hit_before_any_miss_raises_typed():
+    """A decision byte naming an unfilled slot as a hit source is corrupt;
+    the decoder must refuse rather than emit garbage."""
+    h = StreamHeader(0, 16, 5, 255, np.dtype(np.float64), None, 1,
+                     np.zeros(0))
+    blob = _pack_header(h) + bytes([3])  # slot 3 'hit' with empty FIFO
+    parse_stream(blob)  # structurally parseable ...
+    with pytest.raises(StreamFormatError, match="before any miss"):
+        decode_stream(blob)  # ... but not decodable
+
+
+def test_random_garbage_never_leaks_raw_errors():
+    """Deterministic byte fuzz: random buffers (some with a valid magic
+    prefix) either parse or raise the typed error -- nothing else."""
+    rng = np.random.default_rng(0)
+    for trial in range(200):
+        n = int(rng.integers(0, 120))
+        data = rng.integers(0, 256, size=n, dtype=np.uint8).tobytes()
+        if trial % 2:
+            data = MAGIC + bytes([VERSION]) + data
+        try:
+            parse_stream(data)
+        except StreamFormatError:
+            pass

@@ -203,3 +203,62 @@ def test_compression_service_lifecycle():
     svc.feed("b", x[:100])
     assert svc.stats()["blocks"] >= 120
     svc.close_stream("b")
+
+
+# ------------------------------------------------ time-based flush trigger
+def test_flush_policy_deadline_is_pure():
+    """max_age_s trips on the reported age alone -- no wall clock, and only
+    when something is actually staged."""
+    from repro.serve import FlushPolicy
+    p = FlushPolicy(max_batch_blocks=100, max_batch_streams=10, max_age_s=2.0)
+    assert not p.should_flush(1, 5, age_s=1.9)
+    assert p.should_flush(1, 5, age_s=2.0)
+    assert not p.should_flush(0, 0, age_s=50.0)  # nothing ready: no flush
+    assert p.should_flush(1, 100, age_s=None)    # count triggers still work
+    # age is optional: legacy two-argument callers are unaffected
+    assert not FlushPolicy(max_age_s=0.1).should_flush(1, 1)
+
+
+def test_coalescer_deadline_flush_injected_clock():
+    """The coalescer measures batch age with an injectable clock: old
+    staged payloads flush via poll()/submit() without count pressure."""
+    from repro.serve import FlushPolicy
+    from repro.serve.compress import StreamCoalescer
+    t = [0.0]
+    co = StreamCoalescer(
+        policy=FlushPolicy(max_age_s=2.0, max_batch_blocks=10 ** 9,
+                           max_batch_streams=10 ** 9),
+        clock=lambda: t[0], mode="std", block_size=16, num_dict=8,
+        alpha=0.05, rel_tol=0.5, backend="jax")
+    rng = np.random.default_rng(0)
+    co.open_stream("a")
+    co.open_stream("b")
+    assert co.submit("a", rng.normal(size=100)) is None  # batch born at t=0
+    t[0] = 1.0
+    assert co.submit("b", rng.normal(size=50)) is None
+    assert co.poll() is None                   # oldest age 1.0 < 2.0
+    t[0] = 2.5
+    out = co.poll()                            # deadline expired
+    assert out is not None and set(out) == {"a", "b"}
+    y = decode_stream(out["a"] + co.close_stream("a"))
+    assert len(y) == 100
+    assert co.poll() is None                   # rearmed: nothing staged
+
+    # sub-block staging alone must not trip the deadline (nothing to cut)
+    co.submit("b", rng.normal(size=3))
+    t[0] = 10.0
+    assert co.poll() is None
+
+    # a partial flush (close_stream) must not leave survivors aged by the
+    # departed stream's older submissions
+    co.open_stream("c")
+    t[0] = 20.0
+    co.submit("b", rng.normal(size=40))   # b staged at t=20
+    t[0] = 21.5
+    co.submit("c", rng.normal(size=40))   # c staged at t=21.5
+    co.close_stream("b")
+    t[0] = 22.5
+    assert co.poll() is None              # c is only 1.0s old, not 2.5s
+    t[0] = 23.6
+    out = co.poll()                       # now c's own age crossed 2.0
+    assert out is not None and set(out) == {"c"}
