@@ -3,7 +3,7 @@ PY ?= python
 export PYTHONPATH := src
 
 .PHONY: test test-core bench bench-quick bench-stream bench-shard \
-	bench-store shard-check store-check example-stream
+	bench-store bench-decode shard-check store-check example-stream
 
 # Tier-1 verification (ROADMAP.md): the full suite, fail-fast.
 test:
@@ -27,6 +27,10 @@ bench-shard:
 bench-store:
 	$(PY) -m benchmarks.bench_store_decode
 
+# Host vs device reconstruct through the unified decode engine.
+bench-decode:
+	$(PY) -m benchmarks.bench_decode_backends
+
 # CI smoke profile: small workloads, fast host/codec benches only.
 bench-quick:
 	$(PY) -m benchmarks.run --quick
@@ -35,9 +39,13 @@ bench-quick:
 shard-check:
 	REPRO_SHARD_DEVICES=4 $(PY) -m repro.launch.shard_check
 
-# Container range-decode == sequential-decode-slice over the golden corpus.
+# Container range-decode == sequential-decode-slice over the golden corpus
+# (also through a mmap-backed file open), plus a size-capped synthetic
+# >RAM-budget archive verified via Container.open(mmap=True).
 store-check:
 	$(PY) scripts/store_tool.py selfcheck tests/golden/*.idlm
+	$(PY) scripts/store_tool.py selfcheck tests/golden/*.idlm --mmap
+	$(PY) scripts/store_tool.py bigcheck --mb 48 --mmap
 
 example-stream:
 	$(PY) examples/stream_compress.py --channels 8 --samples 16384

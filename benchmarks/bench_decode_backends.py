@@ -1,0 +1,111 @@
+"""Host vs device reconstruction through the unified decode engine
+(DESIGN.md Sec. 8).
+
+The same padded ``DecodePlan`` is rebuilt by every backend
+(``repro.core.decode.BACKENDS``) in two serving shapes:
+
+  full/<backend>     -- one whole-channel decode (``decode_channels``)
+  ranges/<backend>   -- R concurrent small ranges padded into ONE
+                        reconstruct dispatch (``decode_ranges``), the
+                        ``DecompressionService`` flush shape
+
+Every backend's output is asserted byte-identical to the host before
+timing, and the device rows report the engine's fallback counter -- a row
+that silently fell back to the host would otherwise masquerade as a
+device measurement.  Delta mode is used so the device path exercises the
+sequential-cumsum story (the pallas kernel / fori_loop), not just the
+gather.  ``REPRO_BENCH_QUICK=1`` (the CI smoke) shrinks the stream.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from repro.core import IdealemCodec
+from repro.core import decode as decode_mod
+from repro.core.stream import decode_stream
+from repro.store import Container, decode_channels, decode_ranges, pack
+
+from .common import csv_row
+
+QUICK = bool(int(os.environ.get("REPRO_BENCH_QUICK", "0")))
+B = 32
+NB = 2_000 if QUICK else 20_000
+FEED_BLOCKS = 512
+RANGE_BLOCKS = 16
+N_RANGES = 32 if QUICK else 256
+BACKENDS = ("numpy", "jax", "pallas")
+
+
+def _time(fn, repeat=3):
+    fn()  # warmup (includes any jit compile)
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        fn()
+    return (time.perf_counter() - t0) / repeat
+
+
+def _build_store():
+    rng = np.random.default_rng(0)
+    levels = rng.normal(0, 3, size=8)
+    n = NB * B
+    x = (np.cumsum(rng.normal(0, 0.05, size=n))
+         + levels[rng.integers(0, 8, size=NB).repeat(B)])
+    codec = IdealemCodec(mode="delta", block_size=B, num_dict=64, alpha=0.05,
+                         rel_tol=0.5, backend="jax")
+    s = codec.session()
+    segs = [s.feed(x[lo:lo + FEED_BLOCKS * B])
+            for lo in range(0, n, FEED_BLOCKS * B)]
+    segs.append(s.finish())
+    stream = b"".join(segs)
+    return stream, Container(pack(stream))
+
+
+def run():
+    rows = []
+    stream, store = _build_store()
+    nb = store.total_blocks(0)
+    y = decode_stream(stream)
+
+    rng = np.random.default_rng(1)
+    starts = rng.integers(0, nb - RANGE_BLOCKS, size=N_RANGES)
+    reqs = [(0, int(s), int(s) + RANGE_BLOCKS) for s in starts]
+    blocks = N_RANGES * RANGE_BLOCKS
+
+    times = {}
+    for backend in BACKENDS:
+        f0 = decode_mod.decode_stats()["fallbacks"]
+        out = decode_channels(store, backend=backend)[0]
+        np.testing.assert_array_equal(out, y)  # byte identity before timing
+        for (_, i, j), got in zip(reqs, decode_ranges(store, reqs,
+                                                      backend=backend)):
+            np.testing.assert_array_equal(got, y[i * B:j * B])
+        fell = decode_mod.decode_stats()["fallbacks"] - f0
+
+        t_full = _time(lambda: decode_channels(store, backend=backend),
+                       repeat=1)
+        t_rng = _time(lambda: decode_ranges(store, reqs, backend=backend))
+        times[backend] = (t_full, t_rng)
+        rows.append(csv_row(
+            f"decode_backends/full/{backend}", t_full * 1e6,
+            f"blocks={nb};fallbacks={fell}"))
+        rows.append(csv_row(
+            f"decode_backends/ranges/{backend}", t_rng * 1e6,
+            f"requests={N_RANGES};blocks={blocks};fallbacks={fell}"
+            f";blocks_per_s={blocks / t_rng:.0f}"))
+
+    host_full, host_rng = times["numpy"]
+    best = min(BACKENDS[1:], key=lambda b: times[b][1])
+    rows.append(csv_row(
+        "decode_backends/ranges/device_vs_host", times[best][1] * 1e6,
+        f"best_device={best}"
+        f";speedup_vs_numpy={host_rng / times[best][1]:.2f}x"
+        f";full_speedup={host_full / times[best][0]:.2f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

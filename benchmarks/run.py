@@ -15,7 +15,8 @@ import os
 import sys
 import traceback
 
-QUICK_MODULES = ("stream_io", "store_decode")  # fast host-path smoke set
+QUICK_MODULES = ("stream_io", "store_decode",
+                 "decode_backends")  # fast host/codec smoke set
 
 
 def main(argv=None) -> None:
@@ -41,6 +42,7 @@ def main(argv=None) -> None:
         ("stream_io", "bench_stream_io"),
         ("shard_encode", "bench_shard_encode"),
         ("store_decode", "bench_store_decode"),
+        ("decode_backends", "bench_decode_backends"),
         ("roofline", "roofline"),
     ]
     if args.quick:

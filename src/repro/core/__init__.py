@@ -6,6 +6,8 @@ Public API:
   ks_statistic, ks_pvalue, critical_distance
   residual/delta transforms, quality measures
 """
+from .decode import BACKENDS as DECODE_BACKENDS
+from .decode import DecodePlan, decode_stats, reconstruct
 from .idealem import IdealemCodec
 from .session import IdealemSession, PreparedChunk, SessionStats
 from .stream import StreamFormatError
@@ -16,6 +18,10 @@ from .metrics import quality_measures, amplitude_spectrum, spectral_band_error
 
 __all__ = [
     "IdealemCodec",
+    "DecodePlan",
+    "DECODE_BACKENDS",
+    "reconstruct",
+    "decode_stats",
     "IdealemSession",
     "PreparedChunk",
     "SessionStats",

@@ -1,0 +1,442 @@
+"""Unified decode engine: one reconstruction path for every consumer.
+
+Reconstruction in IDEALEM (paper Sec. V-A2/V-B2) is per-block math: a hit
+is either a random permutation of its source block (std mode) or the
+stored transformed values re-anchored on the hit's own base (res/delta,
+delta adding an in-block cumsum).  Before this module, that math lived in
+three near-duplicate host walks -- ``core.stream.decode_stream``,
+``store.reader.decode_range(s)`` and the ``DecompressionService`` flush
+loop.  Now every consumer builds a :class:`DecodePlan` -- the explicit
+struct-of-arrays form of "what feeds each output block" -- and calls
+:func:`reconstruct` on it (DESIGN.md Sec. 8).
+
+Plans are backend-agnostic.  Three backends produce byte-identical output:
+
+  ``numpy``   -- the host reference (fancy-index gather + vectorized math);
+  ``jax``     -- jnp gather / permutation-apply / re-anchor, with the delta
+                 cumsum as a sequential ``fori_loop`` (XLA's associative
+                 ``cumsum`` rounds f64 differently -- measured, see
+                 tests/test_decode_backends.py);
+  ``pallas``  -- the jax path with the cumsum in the
+                 ``repro.kernels.seq_cumsum`` kernel.
+
+Byte-exactness on an accelerator is *checked, never assumed*: the first
+time a (backend, mode, dtype, value_range, block_size) combination runs,
+a small probe plan is reconstructed on both paths and compared
+``tobytes()``-for-``tobytes()``.  If the device result differs (e.g. f64
+emulation on TPU) -- or the device path raises -- the engine logs the
+fallback once and routes that combination to the host path; the decision
+is observable via :func:`decode_stats` and pinned by tests.
+
+Device dispatch shapes are padded to powers of two (pad rows are zero-
+payload misses the per-block math ignores), so serving traffic reuses a
+handful of compiled shapes instead of recompiling per request length.
+"""
+from __future__ import annotations
+
+import logging
+from dataclasses import dataclass
+from typing import List, NamedTuple, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .transforms import np_wrap_range
+
+__all__ = [
+    "MODE_STD", "MODE_RESIDUAL", "MODE_DELTA", "BACKENDS",
+    "DecodePlan", "PlanPart", "plan_from_parsed", "pad_parts",
+    "reconstruct", "decode_sources", "hit_perms", "gather_rows",
+    "decode_stats", "reset_decode_stats",
+]
+
+MODE_STD, MODE_RESIDUAL, MODE_DELTA = 0, 1, 2
+
+#: Recognised ``backend=`` values (plus ``"auto"``: device when the
+#: exactness probe passes on this host, else numpy).
+BACKENDS = ("numpy", "jax", "pallas")
+
+logger = logging.getLogger("repro.core.decode")
+
+# Per-process accounting of backend routing.  ``fallbacks`` counts calls
+# that *asked* for a device backend but ran on the host because the probe
+# failed (or the device path raised); tests pin this so a silent fallback
+# cannot masquerade as device coverage.
+_stats = {"host_calls": 0, "device_calls": 0, "fallbacks": 0}
+_exact_cache: dict = {}
+
+
+def decode_stats() -> dict:
+    return dict(_stats)
+
+
+def reset_decode_stats() -> None:
+    for k in _stats:
+        _stats[k] = 0
+
+
+# ------------------------------------------------------------------ the plan
+
+@dataclass(frozen=True)
+class DecodePlan:
+    """Everything :func:`reconstruct` needs, as flat arrays.
+
+    ``payloads`` holds each *source* block's stored values once (misses in
+    stream order, plus any snapshot-materialized virtual misses and -- for
+    padded batch plans -- one trailing all-zero row).  ``src[i]`` is the
+    payload row feeding output block ``i``; hits share their source miss's
+    row.  ``block_idx[i]`` is the block's global position in its stream:
+    std-mode hit permutations are keyed on ``(seed, block_idx)``
+    (:func:`hit_perms`), which is what makes any sub-range reconstruct
+    byte-identically to the same rows of a full decode.  ``overwrite`` is
+    carried for completeness/debugging; FIFO overwrites are a framing
+    concern and do not affect reconstruction.
+    """
+
+    mode: int
+    block_size: int
+    dtype: np.dtype
+    value_range: Optional[Tuple[float, float]]
+    payloads: np.ndarray            # (n_rows, P) source payload rows
+    src: np.ndarray                 # (nb,) payload row per output block
+    bases: Optional[np.ndarray]     # (nb,) res/delta modes, else None
+    is_hit: np.ndarray              # (nb,) bool
+    block_idx: np.ndarray           # (nb,) global block positions
+    seed: int = 0
+    overwrite: Optional[np.ndarray] = None  # (nb,) bool, informational
+
+    @property
+    def nb(self) -> int:
+        return len(self.src)
+
+    @property
+    def payload_width(self) -> int:
+        return int(self.payloads.shape[1])
+
+
+class PlanPart(NamedTuple):
+    """One request's worth of plan inputs, sources already resolved
+    (``rows[i]`` is the payload feeding the part's block ``i``).  Parts
+    from many requests -- across containers -- are padded into one
+    :class:`DecodePlan` by :func:`pad_parts`."""
+
+    rows: np.ndarray                # (n, P) per-block source payloads
+    bases: Optional[np.ndarray]     # (n,) or None (std mode)
+    is_hit: np.ndarray              # (n,) bool
+    block_idx: np.ndarray           # (n,) global block positions
+
+
+# ------------------------------------------------------- plan construction
+
+def decode_sources(is_hit: np.ndarray, slot: np.ndarray) -> np.ndarray:
+    """Payload row (miss ordinal) feeding each block: misses feed
+    themselves, hits feed the most recent miss written to their slot.
+    A hit with no preceding miss on its slot is malformed input."""
+    from .stream import StreamFormatError  # typed error lives with the parser
+    nb = len(is_hit)
+    miss_pos = np.flatnonzero(~is_hit)
+    hit_pos = np.flatnonzero(is_hit)
+    src = np.zeros(nb, dtype=np.int64)
+    src[miss_pos] = np.arange(len(miss_pos))
+    if len(hit_pos):
+        hit_slots = slot[hit_pos]
+        miss_slots = slot[miss_pos]
+        for s in np.unique(hit_slots):
+            hp = hit_pos[hit_slots == s]
+            mp = miss_pos[miss_slots == s]
+            j = np.searchsorted(mp, hp) - 1
+            if len(mp) == 0 or np.any(j < 0):
+                raise StreamFormatError(f"hit on slot {s} before any miss")
+            src[hp] = src[mp[j]]
+    return src
+
+
+def _splitmix64(x: np.ndarray) -> np.ndarray:
+    """SplitMix64 finalizer on uint64 arrays (wrapping arithmetic is the
+    point; numpy only flags the wrap for 0-d inputs)."""
+    with np.errstate(over="ignore"):
+        x = (x + np.uint64(0x9E3779B97F4A7C15)).astype(np.uint64)
+        x = (x ^ (x >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+        x = (x ^ (x >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+        return x ^ (x >> np.uint64(31))
+
+
+def hit_perms(seed: int, block_idx: np.ndarray, B: int) -> np.ndarray:
+    """Per-hit reconstruction permutations, stateless in the block position.
+
+    Each permutation is the argsort of SplitMix64 keys of (seed, global
+    sample index), so the permutation a block receives depends only on
+    ``(seed, its index in the stream)`` -- never on how many other blocks
+    share the reconstruct call."""
+    with np.errstate(over="ignore"):  # seed 2**64-1 wraps on the +1
+        s = _splitmix64(np.uint64(seed & 0xFFFFFFFFFFFFFFFF) + np.uint64(1))
+        samp = (np.asarray(block_idx, dtype=np.uint64)[:, None] * np.uint64(B)
+                + np.arange(B, dtype=np.uint64)[None, :])
+    return np.argsort(_splitmix64(samp ^ s), axis=1, kind="stable")
+
+
+def gather_rows(u8: np.ndarray, dt: np.dtype, offs: np.ndarray,
+                width: int) -> np.ndarray:
+    """One fancy-indexing pass over raw stream/container bytes:
+    ``width``-value rows at byte offsets ``offs``."""
+    if width == 0 or len(offs) == 0:
+        return np.zeros((len(offs), width), dtype=dt)
+    return u8[offs[:, None] + np.arange(width * dt.itemsize)].view(dt)
+
+
+def plan_from_parsed(header, parsed, seed: int = 0) -> DecodePlan:
+    """Plan for a full sequential decode of one parsed stream.
+
+    ``header``/``parsed`` are duck-typed (``repro.core.stream`` supplies
+    ``StreamHeader`` and its struct-of-arrays ``_Parsed``); block positions
+    are simply ``0..nb``."""
+    nb = len(parsed.is_hit)
+    return DecodePlan(
+        mode=header.mode, block_size=header.block_size,
+        dtype=np.dtype(header.dtype), value_range=header.value_range,
+        payloads=parsed.payloads,
+        src=decode_sources(parsed.is_hit, parsed.slot),
+        bases=parsed.bases, is_hit=parsed.is_hit,
+        block_idx=np.arange(nb, dtype=np.int64), seed=seed,
+        overwrite=parsed.overwrite)
+
+
+def pad_parts(mode: int, block_size: int, dtype, value_range,
+              parts: Sequence[PlanPart], seed: int = 0
+              ) -> Tuple[DecodePlan, int]:
+    """Pad R ragged request parts into ONE plan of shape ``(R * nbm,)``.
+
+    The read-side mirror of the encoder's masked ragged batches: requests
+    are stacked on a leading axis and padded to the longest; pad blocks
+    are all-miss with a shared all-zero payload row, dead weight the
+    per-block math ignores.  Returns ``(plan, nbm)``; callers reshape
+    ``reconstruct(plan)`` to ``(R, nbm, B)`` and slice each request back
+    out.
+    """
+    dt = np.dtype(dtype)
+    R = len(parts)
+    lens = [len(p.is_hit) for p in parts]
+    nbm = max(lens)
+    P = block_size if mode == MODE_STD else block_size - 1
+    n_rows = sum(lens)
+    payloads = np.zeros((n_rows + 1, P), dtype=dt)   # last row: shared pad
+    src = np.full((R, nbm), n_rows, dtype=np.int64)
+    is_hit = np.zeros((R, nbm), dtype=bool)
+    block_idx = np.zeros((R, nbm), dtype=np.int64)
+    bases = None if mode == MODE_STD else np.zeros((R, nbm), dtype=dt)
+    pos = 0
+    for r, (p, n) in enumerate(zip(parts, lens)):
+        payloads[pos:pos + n] = p.rows
+        src[r, :n] = np.arange(pos, pos + n)
+        is_hit[r, :n] = p.is_hit
+        block_idx[r, :n] = p.block_idx
+        if bases is not None:
+            bases[r, :n] = p.bases
+        pos += n
+    plan = DecodePlan(
+        mode=mode, block_size=block_size, dtype=dt, value_range=value_range,
+        payloads=payloads, src=src.ravel(),
+        bases=None if bases is None else bases.ravel(),
+        is_hit=is_hit.ravel(), block_idx=block_idx.ravel(), seed=seed)
+    return plan, nbm
+
+
+# ------------------------------------------------------------ numpy backend
+
+def _reconstruct_numpy(plan: DecodePlan) -> np.ndarray:
+    rows = plan.payloads[plan.src]          # fancy index: always a fresh copy
+    if plan.mode == MODE_STD:
+        out = rows
+        hit_pos = np.flatnonzero(plan.is_hit)
+        if len(hit_pos):
+            perm = hit_perms(plan.seed, plan.block_idx[hit_pos],
+                             plan.block_size)
+            out[hit_pos] = np.take_along_axis(rows[hit_pos], perm, axis=1)
+        return out
+    base = plan.bases[:, None]
+    t = rows if plan.mode == MODE_RESIDUAL else np.cumsum(rows, axis=1)
+    out = np.concatenate([base, base + t], axis=1)
+    if plan.value_range is not None:
+        out = np_wrap_range(out, *plan.value_range)
+    return out
+
+
+# ----------------------------------------------------------- device backend
+
+def _pow2(n: int) -> int:
+    return max(1, 1 << (int(n) - 1).bit_length())
+
+
+_dev_fns: dict = {}
+
+
+def _device_fn(backend: str, mode: int, value_range):
+    """Jitted device reconstruct for one (backend, mode, range) combo.
+    Gather, permutation apply, re-anchor and (delta) sequential cumsum all
+    run on device; inputs arrive pre-padded to power-of-two shapes."""
+    key = (backend, mode, value_range)
+    fn = _dev_fns.get(key)
+    if fn is not None:
+        return fn
+    import jax
+    import jax.numpy as jnp
+
+    def _seq_cumsum_jnp(x):
+        P = x.shape[1]
+
+        def body(j, carry):
+            acc, out = carry
+            v = jax.lax.dynamic_slice_in_dim(x, j, 1, axis=1)[:, 0]
+            acc = acc + v
+            out = jax.lax.dynamic_update_slice_in_dim(
+                out, acc[:, None], j, axis=1)
+            return acc, out
+
+        out0 = jax.lax.dynamic_update_slice_in_dim(
+            jnp.zeros_like(x), x[:, :1], 0, axis=1)
+        _, out = jax.lax.fori_loop(1, P, body, (x[:, 0], out0))
+        return out
+
+    if mode == MODE_STD:
+        def fn(payloads, src, perm):
+            rows = jnp.take(payloads, src, axis=0)
+            return jnp.take_along_axis(rows, perm, axis=1)
+    else:
+        def fn(payloads, src, bases):
+            rows = jnp.take(payloads, src, axis=0)
+            if mode == MODE_RESIDUAL:
+                t = rows
+            elif backend == "pallas":
+                from repro.kernels.seq_cumsum import seq_cumsum
+                t = seq_cumsum(rows)
+            else:
+                t = _seq_cumsum_jnp(rows)
+            out = jnp.concatenate([bases[:, None], bases[:, None] + t],
+                                  axis=1)
+            if value_range is not None:
+                rmin, rmax = value_range
+                out = jnp.mod(out - rmin, rmax - rmin) + rmin
+            return out
+
+    fn = _dev_fns[key] = jax.jit(fn)
+    return fn
+
+
+def _run_device(plan: DecodePlan, backend: str) -> np.ndarray:
+    """Dispatch one plan on a device backend, padding shapes to powers of
+    two so serving traffic reuses compiled shapes.  f64 plans run under an
+    ``enable_x64`` scope (the encoder's f32 paths are unaffected)."""
+    from jax.experimental import enable_x64
+    dt = np.dtype(plan.dtype)
+    nb, P = plan.nb, plan.payload_width
+    nbp, nrp = _pow2(nb), _pow2(len(plan.payloads) + 1)
+    payloads = np.zeros((nrp, P), dtype=dt)
+    payloads[:len(plan.payloads)] = plan.payloads
+    src = np.full(nbp, nrp - 1, dtype=np.int64)  # pads read the zero row
+    src[:nb] = plan.src
+    fn = _device_fn(backend, plan.mode, plan.value_range)
+    with enable_x64():
+        if plan.mode == MODE_STD:
+            perm = np.broadcast_to(
+                np.arange(plan.block_size, dtype=np.int64),
+                (nbp, plan.block_size)).copy()
+            hit_pos = np.flatnonzero(plan.is_hit)
+            if len(hit_pos):
+                perm[hit_pos] = hit_perms(plan.seed, plan.block_idx[hit_pos],
+                                          plan.block_size)
+            out = fn(payloads, src, perm)
+        else:
+            bases = np.zeros(nbp, dtype=dt)
+            bases[:nb] = plan.bases
+            out = fn(payloads, src, bases)
+        res = np.asarray(out)
+    return res[:nb]
+
+
+# --------------------------------------------- exactness probe + dispatch
+
+def _probe_plan(mode: int, dtype, value_range, block_size: int) -> DecodePlan:
+    """Small deterministic plan with mantissa-rich values: hits, misses,
+    shared sources and (delta) long accumulation chains all present."""
+    dt = np.dtype(dtype)
+    B = block_size
+    P = B if mode == MODE_STD else B - 1
+    n_rows, nb = 5, 16
+    bits = _splitmix64(np.arange(n_rows * P, dtype=np.uint64) + np.uint64(7))
+    vals = (bits.astype(np.float64) / 2.0 ** 64 - 0.5) * 8.0
+    payloads = vals.reshape(n_rows, P).astype(dt)
+    src = (np.arange(nb, dtype=np.int64) * 3) % n_rows
+    is_hit = np.ones(nb, dtype=bool)
+    is_hit[:n_rows] = False
+    bases = None
+    if mode != MODE_STD:
+        bbits = _splitmix64(np.arange(nb, dtype=np.uint64) + np.uint64(99))
+        bases = ((bbits.astype(np.float64) / 2.0 ** 64 - 0.5) * 700.0
+                 ).astype(dt)
+    return DecodePlan(mode=mode, block_size=B, dtype=dt,
+                      value_range=value_range, payloads=payloads, src=src,
+                      bases=bases, is_hit=is_hit,
+                      block_idx=np.arange(nb, dtype=np.int64), seed=3)
+
+
+def _device_exact(backend: str, plan: DecodePlan) -> bool:
+    """Probe (once per combination) whether ``backend`` reproduces the host
+    path byte-for-byte on this device.  A failed or crashing probe routes
+    the combination to the host path, with a single logged warning."""
+    key = (backend, plan.mode, np.dtype(plan.dtype).str, plan.value_range,
+           plan.block_size)
+    ok = _exact_cache.get(key)
+    if ok is None:
+        probe = _probe_plan(plan.mode, plan.dtype, plan.value_range,
+                            plan.block_size)
+        want = _reconstruct_numpy(probe)
+        try:
+            got = _run_device(probe, backend)
+            ok = got.tobytes() == want.tobytes()
+            if not ok:
+                logger.warning(
+                    "decode backend %r is not byte-exact on this device for "
+                    "%s; falling back to host reconstruction", backend, key)
+        except Exception as e:
+            ok = False
+            logger.warning(
+                "decode backend %r failed on this device for %s (%s); "
+                "falling back to host reconstruction", backend, key, e)
+        _exact_cache[key] = ok
+    return ok
+
+
+def reconstruct(plan: DecodePlan, backend: str = "numpy") -> np.ndarray:
+    """Rebuild ``(nb, B)`` block values from a plan (paper Sec. V-A2/V-B2).
+
+    ``backend`` is ``"numpy"`` (host reference), ``"jax"``/``"pallas"``
+    (device; byte-identical, auto-falling back to host -- logged and
+    counted in :func:`decode_stats` -- when the exactness probe fails on
+    the current device), or ``"auto"`` (device iff the probe passes).
+    Purely per-block math: callers may stack many ranges into one padded
+    plan (:func:`pad_parts`) and slice the result apart.
+    """
+    if backend == "auto":
+        backend = "jax"
+    elif backend not in BACKENDS:
+        raise ValueError(f"unknown decode backend {backend!r}; "
+                         f"expected one of {BACKENDS + ('auto',)}")
+    if plan.nb == 0:
+        return np.zeros((0, plan.block_size), dtype=np.dtype(plan.dtype))
+    if backend != "numpy":
+        if _device_exact(backend, plan):
+            try:
+                out = _run_device(plan, backend)
+            except Exception as e:
+                # the probe passed but THIS shape failed (device OOM,
+                # shape-specific compile error): serve the call from the
+                # host instead of failing it
+                logger.warning(
+                    "decode backend %r failed at dispatch (nb=%d): %s; "
+                    "serving this call from the host path",
+                    backend, plan.nb, e)
+            else:
+                _stats["device_calls"] += 1
+                return out
+        _stats["fallbacks"] += 1
+    _stats["host_calls"] += 1
+    return _reconstruct_numpy(plan)

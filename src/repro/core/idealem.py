@@ -46,8 +46,9 @@ class IdealemCodec:
     use_ks: bool = True
     max_count: int = 255
     value_range: Optional[Tuple[float, float]] = None
-    backend: str = "jax"  # "jax" | "numpy" | "pallas"
+    backend: str = "jax"  # "jax" | "numpy" | "pallas" (encode scan)
     decode_seed: int = 0
+    decode_backend: str = "numpy"  # reconstruction backend (core.decode)
     d_crit: float = field(init=False)
 
     def __post_init__(self):
@@ -111,8 +112,11 @@ class IdealemCodec:
         s.feed(x)
         return s.finish()
 
-    def decode(self, blob: bytes) -> np.ndarray:
-        return stream_mod.decode_stream(blob, seed=self.decode_seed)
+    def decode(self, blob: bytes, backend: Optional[str] = None) -> np.ndarray:
+        """Decode a stream; ``backend`` overrides the codec's
+        ``decode_backend`` (all backends are byte-identical)."""
+        return stream_mod.decode_stream(blob, seed=self.decode_seed,
+                                        backend=backend or self.decode_backend)
 
     @staticmethod
     def compression_ratio(x: np.ndarray, blob: bytes) -> float:

@@ -44,7 +44,8 @@ from typing import List, NamedTuple, Optional, Tuple
 
 import numpy as np
 
-from .transforms import np_wrap_range
+from . import decode as decode_mod
+from .decode import MODE_DELTA, MODE_RESIDUAL, MODE_STD  # noqa: F401 (re-export)
 
 __all__ = ["StreamHeader", "StreamFormatError", "assemble_stream",
            "parse_stream", "decode_stream"]
@@ -71,7 +72,6 @@ def segment_walk_count() -> int:
 
 MAGIC = b"IDLM"
 VERSION = 2
-MODE_STD, MODE_RESIDUAL, MODE_DELTA = 0, 1, 2
 FLAG_RANGE, FLAG_F32, FLAG_MORE, FLAG_CONT = 1, 2, 4, 8
 _HDR = struct.Struct("<4sBBHBBBBddIH")  # 34 bytes (packed little-endian)
 
@@ -487,20 +487,15 @@ def _gather_values(u8: np.ndarray, dt: np.dtype, P: int, base_parts,
                    pay_parts):
     """One fancy-indexing pass over the raw bytes: per-block bases (or
     ``None`` for std mode) and the (n_miss, P) payload matrix."""
-    isz = dt.itemsize
     if base_parts is None:
         bases = None
-    elif base_parts:
-        bo = np.concatenate(base_parts)
-        bases = u8[bo[:, None] + np.arange(isz)].view(dt).ravel()
     else:
-        bases = np.zeros(0, dtype=dt)
-    if pay_parts:
-        po = np.concatenate(pay_parts)
-        payloads = u8[po[:, None] + np.arange(P * isz)].view(dt)
-    else:
-        payloads = np.zeros((0, P), dtype=dt)
-    return bases, payloads
+        bo = (np.concatenate(base_parts) if base_parts
+              else np.zeros(0, dtype=np.int64))
+        bases = decode_mod.gather_rows(u8, dt, bo, 1).ravel()
+    po = (np.concatenate(pay_parts) if pay_parts
+          else np.zeros(0, dtype=np.int64))
+    return bases, decode_mod.gather_rows(u8, dt, po, P)
 
 
 def _parse_arrays(data) -> Tuple[StreamHeader, _Parsed]:
@@ -564,92 +559,33 @@ def parse_stream(data):
     return header, events
 
 
-def _splitmix64(x: np.ndarray) -> np.ndarray:
-    """SplitMix64 finalizer on uint64 arrays (wrapping arithmetic is the
-    point; numpy only flags the wrap for 0-d inputs)."""
-    with np.errstate(over="ignore"):
-        x = (x + np.uint64(0x9E3779B97F4A7C15)).astype(np.uint64)
-        x = (x ^ (x >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
-        x = (x ^ (x >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
-        return x ^ (x >> np.uint64(31))
+# Reconstruction itself lives in the unified decode engine (repro.core.
+# decode, DESIGN.md Sec. 8); these aliases keep the historical access
+# points of the parsing layer working.
+_splitmix64 = decode_mod._splitmix64
+_hit_perms = decode_mod.hit_perms
+_decode_sources = decode_mod.decode_sources
 
 
-def _hit_perms(seed: int, block_idx: np.ndarray, B: int) -> np.ndarray:
-    """Per-hit reconstruction permutations, stateless in the block position.
-
-    Each permutation is the argsort of SplitMix64 keys of (seed, global
-    sample index), so the permutation a block receives depends only on
-    ``(seed, its index in the stream)`` -- never on how many other hits are
-    being decoded in the same call.  This is what makes the store's range
-    decoder (repro.store.reader) byte-identical to the corresponding slice
-    of a full decode."""
-    with np.errstate(over="ignore"):  # seed 2**64-1 wraps on the +1
-        s = _splitmix64(np.uint64(seed & 0xFFFFFFFFFFFFFFFF) + np.uint64(1))
-        samp = (np.asarray(block_idx, dtype=np.uint64)[:, None] * np.uint64(B)
-                + np.arange(B, dtype=np.uint64)[None, :])
-    return np.argsort(_splitmix64(samp ^ s), axis=1, kind="stable")
-
-
-def _decode_sources(is_hit: np.ndarray, slot: np.ndarray) -> np.ndarray:
-    """Payload row (miss ordinal) feeding each block: misses feed themselves,
-    hits feed the most recent miss written to their slot.  Rows < 0 never
-    occur -- a hit with no preceding miss raises."""
-    nb = len(is_hit)
-    miss_pos = np.flatnonzero(~is_hit)
-    hit_pos = np.flatnonzero(is_hit)
-    src = np.zeros(nb, dtype=np.int64)
-    src[miss_pos] = np.arange(len(miss_pos))
-    if len(hit_pos):
-        hit_slots = slot[hit_pos]
-        miss_slots = slot[miss_pos]
-        for s in np.unique(hit_slots):
-            hp = hit_pos[hit_slots == s]
-            mp = miss_pos[miss_slots == s]
-            j = np.searchsorted(mp, hp) - 1
-            if len(mp) == 0 or np.any(j < 0):
-                raise StreamFormatError(f"hit on slot {s} before any miss")
-            src[hp] = src[mp[j]]
-    return src
-
-
-def _reconstruct_blocks(header: StreamHeader, rows: np.ndarray,
-                        bases: Optional[np.ndarray], is_hit: np.ndarray,
-                        block_idx: np.ndarray, seed: int) -> np.ndarray:
-    """(nb, P) source payload rows -> (nb, B) reconstructed values.
-
-    ``block_idx`` is each row's global position in its stream: std-mode hit
-    permutations are keyed on it (see ``_hit_perms``), so any sub-range of a
-    stream reconstructs byte-identically to the same rows of a full decode.
-    Purely per-block math -- callers may stack many ranges into one padded
-    call (the store's batched range decoder does)."""
-    if header.mode == MODE_STD:
-        out = rows.copy()
-        hit_pos = np.flatnonzero(is_hit)
-        if len(hit_pos):
-            perm = _hit_perms(seed, block_idx[hit_pos], header.block_size)
-            out[hit_pos] = np.take_along_axis(rows[hit_pos], perm, axis=1)
-        return out
-    base = bases[:, None]
-    t = rows if header.mode == MODE_RESIDUAL else np.cumsum(rows, axis=1)
-    out = np.concatenate([base, base + t], axis=1)
-    if header.value_range is not None:
-        out = np_wrap_range(out, *header.value_range)
-    return out
-
-
-def decode_stream(data: bytes, seed: int = 0) -> np.ndarray:
-    """Full decoder: parse + vectorized reconstruct (paper Sec. V-A2/V-B2).
+def decode_stream(data: bytes, seed: int = 0,
+                  backend: str = "numpy") -> np.ndarray:
+    """Full decoder: parse -> ``DecodePlan`` -> ``decode.reconstruct``
+    (paper Sec. V-A2/V-B2).
 
     Hits source the most recent miss written to their slot; std-mode hits
     are random permutations of that block, res/delta hits re-anchor the
-    stored transformed values on the hit's own base.
+    stored transformed values on the hit's own base.  ``backend`` selects
+    the reconstruction backend (``repro.core.decode.BACKENDS``); every
+    backend is byte-identical (device backends fall back to the host when
+    the exactness probe fails -- logged).
 
     Note: each hit's permutation is drawn statelessly from ``(seed, block
-    position)`` (``_hit_perms``), so the sampled permutations differ from
-    the seed decoder's sequential per-hit draws.  Any permutation is a valid
-    reconstruction (the format pins bytes, not the decoder's RNG sequence);
-    decode is deterministic for a fixed stream + seed, and positional keying
-    makes ``repro.store`` range decodes exact slices of this output.
+    position)`` (``decode.hit_perms``), so the sampled permutations differ
+    from the seed decoder's sequential per-hit draws.  Any permutation is a
+    valid reconstruction (the format pins bytes, not the decoder's RNG
+    sequence); decode is deterministic for a fixed stream + seed, and
+    positional keying makes ``repro.store`` range decodes exact slices of
+    this output.
     """
     header, pr = _parse_arrays(data)
     dt = np.dtype(header.dtype)
@@ -657,9 +593,8 @@ def decode_stream(data: bytes, seed: int = 0) -> np.ndarray:
     if nb == 0:
         return np.concatenate([header.tail]) if len(header.tail) else (
             np.zeros((0,), dtype=dt))
-    rows = pr.payloads[_decode_sources(pr.is_hit, pr.slot)]  # (nb, P)
-    out = _reconstruct_blocks(header, rows, pr.bases, pr.is_hit,
-                              np.arange(nb), seed)
+    plan = decode_mod.plan_from_parsed(header, pr, seed=seed)
+    out = decode_mod.reconstruct(plan, backend=backend)
     return np.concatenate([out.ravel(), header.tail])
 
 

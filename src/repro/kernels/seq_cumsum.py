@@ -1,0 +1,75 @@
+"""Pallas kernel: sequential in-block cumulative sum (delta-mode decode).
+
+Delta-mode reconstruction (paper Sec. V-B2) rebuilds each block as
+``base + cumsum(deltas)``.  The host decoder uses ``np.cumsum``, which
+accumulates strictly left-to-right; XLA's ``cumsum`` lowers to an
+associative scan whose f64 rounding differs in the last bit for long
+blocks (measured, see tests/test_decode_backends.py).  Byte-identity
+between the host and device decode paths therefore needs a cumsum that
+accumulates in the SAME sequential order -- this kernel.
+
+One program per tile of TILE_R rows; within the tile a ``fori_loop`` walks
+the P columns carrying the running sum, exactly like ``np.add.accumulate``.
+Column 0 is stored as-is (``acc = x[:, 0]``, not ``0 + x[:, 0]``) so a
+leading ``-0.0`` survives bit-for-bit.  P is small (block_size - 1 <= 254)
+so the serialized column walk costs nothing against the gather around it.
+
+On CPU the kernel runs in interpret mode (like ``dict_match``); on TPU f64
+is unsupported and the caller's exactness probe (repro.core.decode) falls
+back to the host path instead.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_R = 8
+
+__all__ = ["seq_cumsum_pallas", "seq_cumsum", "TILE_R"]
+
+# On CPU we must run the kernel in interpret mode; on TPU compile for real.
+_INTERPRET = jax.default_backend() != "tpu"
+
+
+def _seq_cumsum_kernel(x_ref, o_ref):
+    P = x_ref.shape[1]
+    acc = x_ref[:, 0]
+    pl.store(o_ref, (slice(None), pl.dslice(0, 1)), acc[:, None])
+
+    def body(j, acc):
+        v = pl.load(x_ref, (slice(None), pl.dslice(j, 1)))[:, 0]
+        acc = acc + v
+        pl.store(o_ref, (slice(None), pl.dslice(j, 1)), acc[:, None])
+        return acc
+
+    jax.lax.fori_loop(1, P, body, acc)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def seq_cumsum_pallas(x, interpret: bool = True):
+    """x (R, P) -> row-wise cumulative sum, accumulated strictly
+    left-to-right (bit-identical to ``np.cumsum(x, axis=1)``).  R must be
+    a multiple of TILE_R (use ``seq_cumsum`` for arbitrary R)."""
+    R, P = x.shape
+    assert R % TILE_R == 0, "pad R to a TILE_R multiple (see seq_cumsum)"
+    return pl.pallas_call(
+        _seq_cumsum_kernel,
+        grid=(R // TILE_R,),
+        in_specs=[pl.BlockSpec((TILE_R, P), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((TILE_R, P), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, P), x.dtype),
+        interpret=interpret,
+    )(x)
+
+
+@jax.jit
+def seq_cumsum(x):
+    """Pad-to-tile wrapper for arbitrary row counts."""
+    R = x.shape[0]
+    pad = (-R) % TILE_R
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    return seq_cumsum_pallas(x, interpret=_INTERPRET)[:R]

@@ -390,36 +390,44 @@ class StreamCoalescer:
 
 
 class DecompressionService:
-    """The read-side sibling of ``StreamCoalescer`` (DESIGN.md Sec. 7):
+    """The read-side sibling of ``StreamCoalescer`` (DESIGN.md Secs. 7-8):
     serve block-range reads out of packed containers (``repro.store``).
 
     Containers are ``attach``\\ ed under an id; ``read`` answers one range
     immediately, ``submit``/``flush`` coalesce many concurrent range
     requests -- ragged, across stores and channels -- into ONE padded
-    batched reconstruct per compatible group (``store.decode_ranges``),
-    mirroring how the write side cuts one padded scan per flush.  The same
-    ``FlushPolicy`` decides when to stop accumulating: ``max_batch_blocks``
-    bounds the padded batch, ``max_batch_streams`` the number of waiting
-    requests, ``max_age_s`` the deadline (measured with an injectable
-    clock, like the coalescer).
+    reconstruct dispatch per compatible group, mirroring how the write
+    side cuts one padded scan per flush.  ``backend`` selects the
+    reconstruction backend (``repro.core.decode.BACKENDS``): on a device
+    backend all compatible requests of a flush -- even across different
+    containers -- merge into a single device dispatch (per-store parse +
+    gather stays on the host; the byte-identity fallback rule of the
+    engine applies).  The same ``FlushPolicy`` decides when to stop
+    accumulating: ``max_batch_blocks`` bounds the padded batch,
+    ``max_batch_streams`` the number of waiting requests, ``max_age_s``
+    the deadline (measured with an injectable clock, like the coalescer).
 
-    Parsed segments are kept in a per-service LRU keyed by ``(store id,
-    chunk)``: hot segments -- shared prefixes, popular ranges -- are walked
-    once and then served from cache; eviction is by total cached blocks so
+    Parsed segments are kept in a per-service LRU keyed by ``(container
+    identity, chunk)`` -- ``Container.cache_token``, i.e. ``(path,
+    generation)`` for file-backed containers -- so two attaches of the
+    same archive (or two ``Container`` instances over the same file) share
+    walks instead of re-parsing.  Eviction is by total cached blocks so
     fat segments don't dodge the budget.  Decoded output is NOT cached
     (it is range-shaped and cheap to rebuild from parsed segments).
     """
 
     def __init__(self, policy: Optional[FlushPolicy] = None,
                  cache_blocks: int = 1 << 16,
-                 clock: Optional[Callable[[], float]] = None):
+                 clock: Optional[Callable[[], float]] = None,
+                 backend: str = "numpy"):
         from repro.store import Container  # noqa: F401 (import check only)
         self.policy = policy or FlushPolicy()
+        self.backend = backend
         self._cache_blocks = cache_blocks
         self._clock = clock if clock is not None else time.monotonic
         self._stores: Dict[str, "Container"] = {}
         self._seeds: Dict[str, int] = {}
-        self._cache: "OrderedDict[Tuple[str, int], object]" = OrderedDict()
+        self._cache: "OrderedDict[Tuple[tuple, int], object]" = OrderedDict()
         self._cached_blocks = 0
         # pending request: (id, store, channel, start, stop, submit ts);
         # FIFO order makes the head the batch's oldest for the deadline
@@ -427,7 +435,7 @@ class DecompressionService:
         self._pending_blocks = 0
         self.stats = {"requests": 0, "blocks_out": 0, "flushes": 0,
                       "failed_requests": 0, "cache_hits": 0,
-                      "cache_misses": 0}
+                      "cache_misses": 0, "dispatches": 0}
         self.last_errors: Dict[str, Exception] = {}
 
     # ------------------------------------------------------------- lifecycle
@@ -443,13 +451,17 @@ class DecompressionService:
         self._seeds[store_id] = seed
 
     def detach(self, store_id: str) -> None:
-        self._store(store_id)
+        token = self._store(store_id).cache_token
         del self._stores[store_id]
         del self._seeds[store_id]
-        self._cache = OrderedDict(
-            (k, v) for k, v in self._cache.items() if k[0] != store_id)
-        self._cached_blocks = sum(len(p.is_hit)
-                                  for p in self._cache.values())
+        # evict the departing container's parsed chunks -- unless another
+        # attached store shares the same file generation and still wants them
+        live = {c.cache_token for c in self._stores.values()}
+        if token not in live:
+            self._cache = OrderedDict(
+                (k, v) for k, v in self._cache.items() if k[0] != token)
+            self._cached_blocks = sum(len(p.is_hit)
+                                      for p in self._cache.values())
         # staged requests against the departing store cannot be answered:
         # record them in last_errors (same contract as a failed flush
         # group) instead of dropping them silently
@@ -473,7 +485,8 @@ class DecompressionService:
         store = self._store(store_id)
         out = decode_range(store, start_block, stop_block, channel=channel,
                            seed=self._seeds[store_id],
-                           parse=self._parse_for(store_id))
+                           parse=self._parse_for(store_id),
+                           backend=self.backend)
         self.stats["requests"] += 1
         self.stats["blocks_out"] += stop_block - start_block
         return out
@@ -486,7 +499,8 @@ class DecompressionService:
         store = self._store(store_id)
         out = decode_channels(store, channels,
                               seed=self._seeds[store_id],
-                              parse=self._parse_for(store_id))
+                              parse=self._parse_for(store_id),
+                              backend=self.backend)
         self.stats["requests"] += len(out)
         self.stats["blocks_out"] += sum(
             store.total_blocks(c) for c in out)
@@ -522,51 +536,107 @@ class DecompressionService:
         return None
 
     def flush(self) -> Dict[str, np.ndarray]:
-        """Answer every pending request.  Requests sharing a store, a
-        stream shape and a length bucket ride one padded ``decode_ranges``
-        batch; incompatible groups get their own batch (never one call per
-        request).  The power-of-two length bucket mirrors the write side's
-        ``block_bucket``: without it one long request would pad every short
-        request in the batch up to its length.
+        """Answer every pending request through the unified decode engine.
 
-        A group that fails to decode (corrupt chunk, racing detach) fails
-        ALONE: its requests are reported in ``last_errors`` (request id ->
-        exception) and every other group's answers are still returned.
+        Two stages (DESIGN.md Sec. 8).  *Plan*: per store, all of its
+        pending requests resolve to source-gathered ``PlanPart``\\ s in one
+        ``store.plan_parts`` call (seek + walk + ONE byte gather per
+        store); a store that fails here -- corrupt chunk, racing detach --
+        fails ALONE: its requests are reported in ``last_errors`` (request
+        id -> exception) and every other store's answers are still
+        returned.  *Reconstruct*: parts sharing codec parameters and seed
+        -- across stores -- are padded into ONE plan and rebuilt in a
+        single ``decode.reconstruct`` dispatch.  On the host backend,
+        requests are additionally split by power-of-two length buckets
+        (mirroring the write side's ``block_bucket``) so one long request
+        does not pad every short one; a device dispatch amortizes its own
+        padding, so device backends merge buckets -- a flush is typically
+        one device call (``stats["dispatches"]`` counts them).
+
         ``last_errors`` accumulates (detach records dropped requests there
         too); callers correlating answers by id should ``pop`` entries they
         have handled."""
-        from repro.store import decode_ranges
+        from repro.core import decode as decode_mod
+        from repro.store import plan_parts
         pending, self._pending = self._pending, []
         self._pending_blocks = 0
         if not pending:
             return {}
-        groups: Dict[tuple, List[Tuple[str, int, int, int]]] = {}
+        by_store: Dict[tuple, List[Tuple[str, int, int, int]]] = {}
         headers: Dict[Tuple[str, int], object] = {}  # per-flush header memo
         for rid, sid, channel, start, stop, _ts in pending:
-            hdr = headers.get((sid, channel))
-            if hdr is None:
-                hdr = headers[(sid, channel)] = self._stores[sid].header_of(
-                    int(self._stores[sid].chunks_of(channel)[0]))
-            bucket = 1 << (stop - start - 1).bit_length()
-            key = (sid, hdr.mode, hdr.block_size, np.dtype(hdr.dtype).str,
-                   hdr.value_range, bucket)
-            groups.setdefault(key, []).append((rid, channel, start, stop))
-        out: Dict[str, np.ndarray] = {}
-        for key, reqs in groups.items():
-            sid = key[0]
             try:
-                bodies = decode_ranges(
+                hdr = headers.get((sid, channel))
+                if hdr is None:
+                    hdr = headers[(sid, channel)] = self._stores[
+                        sid].header_of(
+                        int(self._stores[sid].chunks_of(channel)[0]))
+            except Exception as e:  # corrupt header / racing detach
+                self.last_errors[rid] = e
+                self.stats["failed_requests"] += 1
+                continue
+            pkey = (hdr.mode, hdr.block_size, np.dtype(hdr.dtype).str,
+                    hdr.value_range)
+            by_store.setdefault((sid,) + pkey, []).append(
+                (rid, channel, start, stop))
+
+        # stage 1: plan per store (parse + shared gather, host-side)
+        groups: Dict[tuple, List[Tuple[str, int, object]]] = {}
+        for (sid, *pkey), reqs in by_store.items():
+            try:
+                hdr, parts = plan_parts(
                     self._stores[sid], [(c, i, j) for _, c, i, j in reqs],
-                    seed=self._seeds[sid], parse=self._parse_for(sid))
-            except Exception as e:  # quarantine the group, serve the rest
+                    parse=self._parse_for(sid))
+            except Exception as e:  # quarantine this store's requests
                 for rid, _, _, _ in reqs:
                     self.last_errors[rid] = e
                 self.stats["failed_requests"] += len(reqs)
                 continue
-            for (rid, _, i, j), body in zip(reqs, bodies):
-                out[rid] = body
-                self.stats["blocks_out"] += j - i
-            self.stats["requests"] += len(reqs)
+            for (rid, _, i, j), part in zip(reqs, parts):
+                bucket = (1 << (j - i - 1).bit_length()
+                          if self.backend == "numpy" else 0)
+                gkey = (tuple(pkey), self._seeds[sid], bucket)
+                groups.setdefault(gkey, []).append((rid, j - i, part))
+
+        # stage 2: one padded reconstruct dispatch per compatible group.
+        # A device group merges length buckets, but not without limit: the
+        # padded batch is R * longest blocks, which the policy's
+        # max_batch_blocks (a bound on the SUM of requested blocks) does
+        # not cap -- one huge request next to many tiny ones would blow
+        # the padding up arbitrarily.  Groups whose padded size exceeds
+        # both the policy bound and 4x their real work are re-split by
+        # pow-2 length bucket before dispatch.
+        units: List[Tuple[tuple, List[Tuple[str, int, object]]]] = []
+        for gkey, items in groups.items():
+            lens = [n for _, n, _ in items]
+            padded = len(items) * max(lens)
+            if (len(items) > 1 and padded > sum(lens) * 4
+                    and padded > self.policy.max_batch_blocks):
+                subs: Dict[int, List[Tuple[str, int, object]]] = {}
+                for it in items:
+                    subs.setdefault(1 << (it[1] - 1).bit_length(),
+                                    []).append(it)
+                units.extend((gkey, sub) for sub in subs.values())
+            else:
+                units.append((gkey, items))
+        out: Dict[str, np.ndarray] = {}
+        for ((mode, B, dt_str, vr), seed, _bucket), items in units:
+            parts = [part for _, _, part in items]
+            try:
+                plan, nbm = decode_mod.pad_parts(mode, B, np.dtype(dt_str),
+                                                 vr, parts, seed=seed)
+                body = decode_mod.reconstruct(plan, backend=self.backend)
+            except Exception as e:
+                for rid, _, _ in items:
+                    self.last_errors[rid] = e
+                self.stats["failed_requests"] += len(items)
+                continue
+            body = body.reshape(len(items), nbm, B)
+            self.stats["dispatches"] += 1
+            for r, (rid, n, _) in enumerate(items):
+                out[rid] = body[r, :n].ravel()
+                self.stats["blocks_out"] += n
+            self.stats["requests"] += len(items)
         self.stats["flushes"] += 1
         return out
 
@@ -578,11 +648,14 @@ class DecompressionService:
             raise KeyError(f"store {store_id!r} is not attached") from None
 
     def _parse_for(self, store_id: str):
-        """LRU-caching wrapper around ``repro.store.parse_chunk``."""
+        """LRU-caching wrapper around ``repro.store.parse_chunk``, keyed on
+        the container's identity (``cache_token``) so a re-attach -- or a
+        second ``Container`` over the same file -- reuses cached walks."""
         from repro.store import parse_chunk
+        token = self._store(store_id).cache_token
 
         def parse(store, chunk):
-            key = (store_id, chunk)
+            key = (token, chunk)
             hit = self._cache.get(key)
             if hit is not None:
                 self._cache.move_to_end(key)

@@ -16,7 +16,7 @@ Sec. 7):
 from .container import (Container, ContainerFormatError, ContainerWriter,
                         pack)
 from .reader import (ParsedChunk, decode_channels, decode_range,
-                     decode_ranges, parse_chunk)
+                     decode_ranges, parse_chunk, plan_parts)
 
 __all__ = [
     "Container",
@@ -25,6 +25,7 @@ __all__ = [
     "pack",
     "ParsedChunk",
     "parse_chunk",
+    "plan_parts",
     "decode_range",
     "decode_ranges",
     "decode_channels",

@@ -23,14 +23,27 @@ therefore start parsing at ANY segment -- carried dictionary entries are
 gathered straight from the snapshot offsets instead of replaying history
 (``repro.store.reader``).
 
+Snapshots are stored as *deltas* (container v2): per chunk, only the
+``(slot, offset)`` pairs that changed since the previous chunk of the same
+channel -- i.e. the slots the previous segment's misses touched.  A full
+snapshot per chunk is O(chunks x D); for a high-D channel cut into many
+tiny segments the delta form shrinks the index to O(total misses), and the
+reader reassembles the full per-chunk snapshots once at open time
+(tests/test_store.py pins the size win).
+
 Chunks are byte-verbatim segments, so concatenating a channel's chunks
 reproduces the original stream exactly; ``pack``/``append`` never re-encode.
 The strict reader validates both magics, the version, the footer CRC and
-the structural invariants before trusting any offset.
+the structural invariants before trusting any offset.  ``Container.open``
+can back the data region with a read-only ``mmap`` so archives larger than
+RAM are served zero-copy (chunks are ``memoryview`` slices into the map;
+only the index is materialized).
 """
 from __future__ import annotations
 
 import io
+import itertools
+import os
 import struct
 import zlib
 from dataclasses import dataclass, field
@@ -50,10 +63,15 @@ __all__ = [
 
 FILE_MAGIC = b"IDLMPAK1"
 FOOTER_MAGIC = b"IDLXFTR1"
-CONTAINER_VERSION = 1
+CONTAINER_VERSION = 2    # v2: dictionary snapshots stored as deltas
 _FILE_HDR = struct.Struct("<8sH6x")      # 16 bytes
 _FOOTER = struct.Struct("<8sQII")        # 24 bytes: magic, off, len, crc
 _INDEX_HDR = struct.Struct("<IHH")       # n_chunks, n_channels, reserved
+
+# Monotonic token source for containers without a backing file, so parsed-
+# chunk caches keyed on ``cache_token`` can never alias two distinct
+# in-memory containers (an ``id()`` could be recycled after GC).
+_MEM_TOKENS = itertools.count()
 
 CHUNK_CONT = 1    # segment continues the previous segment's dictionary
 CHUNK_MORE = 2    # another segment follows in this channel's stream
@@ -222,14 +240,37 @@ class ContainerWriter:
 
     # -- internals ---------------------------------------------------------
     def _serialize_index(self) -> bytes:
+        """Index layout (v2): header | fixed columns | per-chunk delta
+        count (u2) | delta slots (u8) | delta offsets (i8).
+
+        The writer keeps FULL per-chunk snapshots in memory (``reopen``
+        needs them); only serialization diffs consecutive snapshots of the
+        same channel.  The first chunk of a channel enters with an empty
+        dictionary, so its delta is empty too; growth slots (fill_in rose)
+        always diff against the -1 sentinel and are therefore emitted."""
         n = len(self._records)
         cols = list(zip(*self._records)) if n else [[] for _ in _COLUMNS]
         parts = [_INDEX_HDR.pack(n, len(self._chan), 0)]
         for (name, dt), col in zip(_COLUMNS, cols):
             parts.append(np.asarray(col, dtype=dt).tobytes())
-        snaps = (np.concatenate(self._snaps) if self._snaps
-                 else np.zeros(0, np.int64))
-        parts.append(snaps.astype("<i8").tobytes())
+        counts = np.zeros(n, dtype="<u2")
+        slot_parts, off_parts = [], []
+        prev: Dict[int, np.ndarray] = {}
+        for k, (rec, snap) in enumerate(zip(self._records, self._snaps)):
+            ch = int(rec[0])
+            p = prev.get(ch, np.zeros(0, np.int64))
+            base = np.full(len(snap), -1, dtype=np.int64)
+            base[:len(p)] = p  # fill never shrinks: len(p) <= len(snap)
+            ds = np.flatnonzero(base != snap)
+            counts[k] = len(ds)
+            slot_parts.append(ds.astype(np.uint8))
+            off_parts.append(snap[ds])
+            prev[ch] = snap
+        parts.append(counts.tobytes())
+        parts.append((np.concatenate(slot_parts) if slot_parts
+                      else np.zeros(0, np.uint8)).tobytes())
+        parts.append((np.concatenate(off_parts) if off_parts
+                      else np.zeros(0, np.int64)).astype("<i8").tobytes())
         return b"".join(parts)
 
     @classmethod
@@ -311,8 +352,10 @@ class Container:
     bodies are only ever walked by the range decoder, and only for the
     chunks a request actually covers."""
 
-    def __init__(self, data: bytes):
-        self.data = data
+    def __init__(self, data, source_path: Optional[str] = None):
+        self.data = data  # bytes, or any buffer (e.g. a read-only mmap)
+        self._mmap = None
+        self._file = None
         buf = memoryview(data)
         if len(data) < _FILE_HDR.size + _FOOTER.size:
             raise ContainerFormatError("container shorter than its framing")
@@ -330,16 +373,62 @@ class Container:
             raise ContainerFormatError("index extent inconsistent with file "
                                        "size")
         index = bytes(buf[idx_off:idx_off + idx_len])
+        del buf  # release the exported view (mmap.close() would refuse)
         if zlib.crc32(index) != crc:
             raise ContainerFormatError("index CRC mismatch")
+        #: footer CRC doubles as the container *generation*: two opens of
+        #: the same (unmodified) file share it, a reopen-append changes it.
+        self.generation = int(crc)
+        #: identity for parsed-chunk caches (``repro.serve``): containers
+        #: opened from the same file generation share cached walks.
+        if source_path is not None:
+            self.cache_token = (os.path.abspath(source_path), self.generation)
+        else:
+            self.cache_token = ("mem", next(_MEM_TOKENS))
+        self.source_path = source_path
         self.data_end = idx_off
         self._parse_index(index)
         self._check_invariants()
 
     @classmethod
-    def open(cls, path: str) -> "Container":
-        with open(path, "rb") as f:
-            return cls(f.read())
+    def open(cls, path: str, mmap: bool = False) -> "Container":
+        """Open a container file.  With ``mmap=True`` the data region is a
+        read-only memory map: chunk accesses are zero-copy ``memoryview``
+        slices into the page cache, so archives larger than RAM serve
+        range reads without ever materializing the file.  Call ``close()``
+        (or use the container as a context manager) to drop the map; views
+        handed out by ``chunk_bytes`` must not outlive it."""
+        if not mmap:
+            with open(path, "rb") as f:
+                return cls(f.read(), source_path=path)
+        import mmap as mmap_mod
+        f = open(path, "rb")
+        try:
+            mm = mmap_mod.mmap(f.fileno(), 0, access=mmap_mod.ACCESS_READ)
+        except Exception:
+            f.close()
+            raise
+        try:
+            store = cls(mm, source_path=path)
+        except Exception:
+            mm.close()
+            f.close()
+            raise
+        store._mmap, store._file = mm, f
+        return store
+
+    def close(self) -> None:
+        """Release the backing mmap/file (no-op for in-memory containers)."""
+        if self._mmap is not None:
+            self._mmap.close()
+            self._file.close()
+            self._mmap = self._file = None
+
+    def __enter__(self) -> "Container":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     # -- index parsing -----------------------------------------------------
     def _parse_index(self, index: bytes) -> None:
@@ -357,13 +446,23 @@ class Container:
             self._cols[name] = np.frombuffer(index, dtype=dt, count=n,
                                              offset=off).astype(np.int64)
             off += width
-        n_snap = int(self._cols["fill_in"].sum())
-        if off + 8 * n_snap != len(index):
-            raise ContainerFormatError("snapshot blob size mismatch")
-        self._snaps = np.frombuffer(index, dtype="<i8", count=n_snap,
-                                    offset=off).astype(np.int64)
+        # snapshot deltas: per-chunk count, then slot/offset blobs (v2)
+        if off + 2 * n > len(index):
+            raise ContainerFormatError("snapshot delta counts truncated")
+        counts = np.frombuffer(index, dtype="<u2", count=n,
+                               offset=off).astype(np.int64)
+        off += 2 * n
+        n_delta = int(counts.sum())
+        if off + n_delta + 8 * n_delta != len(index):
+            raise ContainerFormatError("snapshot delta blob size mismatch")
+        d_slots = np.frombuffer(index, dtype=np.uint8, count=n_delta,
+                                offset=off).astype(np.int64)
+        d_offs = np.frombuffer(index, dtype="<i8", count=n_delta,
+                               offset=off + n_delta).astype(np.int64)
+        self._cols["snap_delta"] = counts
         self._snap_start = np.concatenate(
             [[0], np.cumsum(self._cols["fill_in"])]).astype(np.int64)
+        self._snaps = self._reassemble_snapshots(counts, d_slots, d_offs)
         self.channels = sorted(int(c)
                                for c in np.unique(self._cols["channel"]))
         if len(self.channels) != n_chan:
@@ -372,6 +471,36 @@ class Container:
             c: np.flatnonzero(self._cols["channel"] == c)
             for c in self.channels
         }
+
+    def _reassemble_snapshots(self, counts: np.ndarray, d_slots: np.ndarray,
+                              d_offs: np.ndarray) -> np.ndarray:
+        """Rebuild the full per-chunk snapshots from the delta form, once,
+        at open time: per channel, each chunk's entering snapshot is the
+        previous chunk's plus its ``(slot, offset)`` deltas (growth slots
+        appear as deltas against the -1 sentinel, which
+        ``_check_invariants`` then rejects if any slot was never set)."""
+        fill = self._cols["fill_in"]
+        snaps = np.full(int(fill.sum()), -1, dtype=np.int64)
+        dstart = np.concatenate([[0], np.cumsum(counts)]).astype(np.int64)
+        prev: Dict[int, np.ndarray] = {}
+        for k in range(self.n_chunks):
+            ch = int(self._cols["channel"][k])
+            f = int(fill[k])
+            cur = np.full(f, -1, dtype=np.int64)
+            p = prev.get(ch)
+            if p is not None:
+                if len(p) > f:
+                    raise ContainerFormatError(
+                        f"chunk {k}: fill counter shrank within channel {ch}")
+                cur[:len(p)] = p
+            sl = d_slots[dstart[k]:dstart[k + 1]]
+            if len(sl) and (f == 0 or int(sl.max()) >= f):
+                raise ContainerFormatError(
+                    f"chunk {k}: snapshot delta slot outside the fill range")
+            cur[sl] = d_offs[dstart[k]:dstart[k + 1]]
+            snaps[self._snap_start[k]:self._snap_start[k + 1]] = cur
+            prev[ch] = cur
+        return snaps
 
     def _check_invariants(self) -> None:
         cols = self._cols
@@ -453,7 +582,9 @@ class Container:
         """Summary used by ``scripts/store_tool.py inspect``."""
         out = {"chunks": self.n_chunks, "channels": {},
                "data_bytes": self.data_end - _FILE_HDR.size,
-               "index_bytes": len(self.data) - self.data_end - _FOOTER.size}
+               "index_bytes": len(self.data) - self.data_end - _FOOTER.size,
+               "snapshot_entries": int(self._cols["fill_in"].sum()),
+               "snapshot_delta_entries": int(self._cols["snap_delta"].sum())}
         for c in self.channels:
             ks = self.chunks_of(c)
             hdr = self.header_of(int(ks[0]))

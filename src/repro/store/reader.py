@@ -1,4 +1,4 @@
-"""Batched range decode over a packed container (DESIGN.md Sec. 7).
+"""Batched range decode over a packed container (DESIGN.md Secs. 7-8).
 
 ``decode_range(store, i, j)`` returns exactly
 ``decode_stream(channel_stream)[i*B : j*B]`` -- byte-identical -- while
@@ -10,18 +10,18 @@ touching only the segments that cover blocks ``[i, j)``:
      cacheable -- the serving layer LRUs it);  carried dictionary entries
      are materialized from the index's snapshot offsets as *virtual misses*
      in front of the window, so history is never replayed;
-  3. *gather + reconstruct*: the requested blocks' payload rows are gathered
-     in one fancy-indexing pass and rebuilt by the same
-     ``_reconstruct_blocks`` math as the full decoder.  Hit permutations
-     are keyed on the global block position (``_hit_perms``), which is what
-     makes the slice exact.
+  3. *plan + reconstruct*: the requested blocks' payload rows are gathered
+     in one fancy-indexing pass (``decode.gather_rows``) into per-request
+     ``PlanPart``\\ s, padded into ONE ``DecodePlan`` and rebuilt by the
+     unified engine (``repro.core.decode.reconstruct``) on the selected
+     backend.  Hit permutations are keyed on the global block position
+     (``decode.hit_perms``), which is what makes the slice exact.
 
-``decode_ranges`` is the batched entry point: many ``(channel, start,
-stop)`` requests are padded to one ``(R, nb_max, P)`` batch -- mirroring the
-masked ragged batches of ``encode_decisions_batched`` on the write side --
-and rebuilt in ONE padded reconstruct call, with one shared gather.
-``decode_channels`` decodes whole channels (tail included) through the same
-batch path.
+This module owns the *container-specific* plumbing only (seek, window
+assembly, snapshot materialization, byte gather); all reconstruction math
+lives in ``repro.core.decode``.  ``plan_parts`` is the half-open seam the
+serving layer uses to merge parts from MANY containers into one device
+dispatch per flush (``repro.serve.compress.DecompressionService``).
 """
 from __future__ import annotations
 
@@ -29,7 +29,9 @@ from typing import Callable, Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core import decode as decode_mod
 from repro.core import stream as stream_mod
+from repro.core.decode import PlanPart
 from repro.core.stream import StreamFormatError, StreamHeader
 
 from .container import Container
@@ -37,6 +39,7 @@ from .container import Container
 __all__ = [
     "ParsedChunk",
     "parse_chunk",
+    "plan_parts",
     "decode_range",
     "decode_ranges",
     "decode_channels",
@@ -132,44 +135,22 @@ def _parse_window(store: Container, chunks: np.ndarray, gb0: int,
     # hit-source resolution is identical to the full decoder's.
     h_ext = np.concatenate([np.zeros(fill0, bool), h])
     s_ext = np.concatenate([np.arange(fill0, dtype=np.int32), s])
-    src = stream_mod._decode_sources(h_ext, s_ext)
+    src = decode_mod.decode_sources(h_ext, s_ext)
     return _Window(hdr, gb0, fill0, np.concatenate([snap, pay]), src, h, bo)
 
 
-def _gather_rows(u8: np.ndarray, dt: np.dtype, offs: np.ndarray,
-                 width: int) -> np.ndarray:
-    if width == 0 or len(offs) == 0:
-        return np.zeros((len(offs), width), dtype=dt)
-    return u8[offs[:, None] + np.arange(width * dt.itemsize)].view(dt)
+def plan_parts(store: Container, requests: Sequence[Tuple[int, int, int]],
+               parse: ParseFn = parse_chunk
+               ) -> Tuple[StreamHeader, List[PlanPart]]:
+    """Seek + parse + gather for many ``(channel, start, stop)`` requests.
 
-
-def decode_range(store: Container, start_block: int, stop_block: int,
-                 channel: int = 0, seed: int = 0,
-                 parse: ParseFn = parse_chunk) -> np.ndarray:
-    """Decode blocks ``[start_block, stop_block)`` of one channel.
-
-    Byte-identical to the same slice of a full ``decode_stream`` over the
-    channel's reassembled stream; work is proportional to the requested
-    range (only covering segments are walked -- see the
-    ``segment_walk_count`` assertions in tests/test_store.py)."""
-    return decode_ranges(store, [(channel, start_block, stop_block)],
-                         seed=seed, parse=parse)[0]
-
-
-def decode_ranges(store: Container, requests: Sequence[Tuple[int, int, int]],
-                  seed: int = 0, parse: ParseFn = parse_chunk
-                  ) -> List[np.ndarray]:
-    """Batched range decode: ``requests`` is ``[(channel, start, stop), ...]``.
-
-    All requests share one payload gather and ONE padded reconstruct call:
-    ranges are stacked on a leading request axis and padded to the longest
-    request, exactly like the write side's ragged coalesced batches (pad
-    rows are dead weight the reconstruct math ignores -- all-miss, zero
-    payload).  Returns one 1-D array per request, in request order."""
-    if not len(requests):
-        return []
-    # per-batch memo: requests whose windows share a chunk walk it once
-    # (the serving layer's LRU composes on top of this for cross-call reuse)
+    Returns the (shared) stream header and one source-resolved ``PlanPart``
+    per request.  All requests share ONE payload/base gather over the raw
+    container bytes; requests whose windows share a chunk walk it once
+    (per-call memo -- the serving layer's LRU composes on top for
+    cross-call reuse).  Heterogeneous codec parameters across requests
+    raise: split such requests into separate calls (the serving layer
+    groups by parameter key before calling)."""
     memo: Dict[int, ParsedChunk] = {}
 
     def parse_once(st, k):
@@ -193,14 +174,9 @@ def decode_ranges(store: Container, requests: Sequence[Tuple[int, int, int]],
                 "; split heterogeneous requests into separate decode_ranges "
                 "calls")
     dt = np.dtype(hdr.dtype)
-    B = hdr.block_size
     std = hdr.mode == stream_mod.MODE_STD
-    P = B if std else B - 1
+    P = hdr.block_size if std else hdr.block_size - 1
     u8 = np.frombuffer(store.data, dtype=np.uint8)
-
-    R = len(requests)
-    lens = [stop - start for _, start, stop in requests]
-    nbm = max(lens)
 
     # one shared gather: every request's in-range payload offsets (and
     # bases), concatenated, hit the raw bytes in a single fancy-index pass
@@ -211,36 +187,60 @@ def decode_ranges(store: Container, requests: Sequence[Tuple[int, int, int]],
         po_parts.append(w.src_pay_offs[w.src[sl]])
         if not std:
             bo_parts.append(w.base_offs[lo:stop - w.gb0])
-    rows_flat = _gather_rows(u8, dt, np.concatenate(po_parts), P)
-    bases_flat = (None if std else
-                  _gather_rows(u8, dt, np.concatenate(bo_parts), 1).ravel())
+    rows_flat = decode_mod.gather_rows(u8, dt, np.concatenate(po_parts), P)
+    bases_flat = (None if std else decode_mod.gather_rows(
+        u8, dt, np.concatenate(bo_parts), 1).ravel())
 
-    # pad to (R, nbm, ...) and rebuild everything in one call
-    rows = np.zeros((R, nbm, P), dtype=dt)
-    bases = None if std else np.zeros((R, nbm), dtype=dt)
-    is_hit = np.zeros((R, nbm), dtype=bool)
-    block_idx = np.zeros((R, nbm), dtype=np.int64)
-    pos = 0
-    for r, (w, (channel, start, stop), n) in enumerate(
-            zip(windows, requests, lens)):
-        rows[r, :n] = rows_flat[pos:pos + n]
-        if not std:
-            bases[r, :n] = bases_flat[pos:pos + n]
-        lo = start - w.gb0
-        is_hit[r, :n] = w.is_hit[lo:lo + n]
-        block_idx[r, :n] = np.arange(start, stop)
+    parts, pos = [], 0
+    for w, (channel, start, stop) in zip(windows, requests):
+        n = stop - start
+        parts.append(PlanPart(
+            rows=rows_flat[pos:pos + n],
+            bases=None if std else bases_flat[pos:pos + n],
+            is_hit=w.is_hit[start - w.gb0:start - w.gb0 + n],
+            block_idx=np.arange(start, stop, dtype=np.int64)))
         pos += n
-    out = stream_mod._reconstruct_blocks(
-        hdr, rows.reshape(R * nbm, P),
-        None if std else bases.reshape(R * nbm),
-        is_hit.reshape(R * nbm), block_idx.reshape(R * nbm), seed,
-    ).reshape(R, nbm, B)
-    return [out[r, :n].ravel() for r, n in enumerate(lens)]
+    return hdr, parts
+
+
+def decode_range(store: Container, start_block: int, stop_block: int,
+                 channel: int = 0, seed: int = 0,
+                 parse: ParseFn = parse_chunk,
+                 backend: str = "numpy") -> np.ndarray:
+    """Decode blocks ``[start_block, stop_block)`` of one channel.
+
+    Byte-identical to the same slice of a full ``decode_stream`` over the
+    channel's reassembled stream (on EVERY backend); work is proportional
+    to the requested range (only covering segments are walked -- see the
+    ``segment_walk_count`` assertions in tests/test_store.py)."""
+    return decode_ranges(store, [(channel, start_block, stop_block)],
+                         seed=seed, parse=parse, backend=backend)[0]
+
+
+def decode_ranges(store: Container, requests: Sequence[Tuple[int, int, int]],
+                  seed: int = 0, parse: ParseFn = parse_chunk,
+                  backend: str = "numpy") -> List[np.ndarray]:
+    """Batched range decode: ``requests`` is ``[(channel, start, stop), ...]``.
+
+    All requests share one payload gather and ONE reconstruct dispatch:
+    ``plan_parts`` resolves each request to a ``PlanPart``,
+    ``decode.pad_parts`` stacks them on a leading request axis padded to
+    the longest request (exactly like the write side's ragged coalesced
+    batches), and ``decode.reconstruct`` rebuilds everything on the chosen
+    backend.  Returns one 1-D array per request, in request order."""
+    if not len(requests):
+        return []
+    hdr, parts = plan_parts(store, requests, parse=parse)
+    plan, nbm = decode_mod.pad_parts(hdr.mode, hdr.block_size, hdr.dtype,
+                                     hdr.value_range, parts, seed=seed)
+    out = decode_mod.reconstruct(plan, backend=backend).reshape(
+        len(parts), nbm, hdr.block_size)
+    return [out[r, :len(p.is_hit)].ravel() for r, p in enumerate(parts)]
 
 
 def decode_channels(store: Container, channels: Optional[Sequence[int]] = None,
-                    seed: int = 0, parse: ParseFn = parse_chunk
-                    ) -> Dict[int, np.ndarray]:
+                    seed: int = 0, parse: ParseFn = parse_chunk,
+                    backend: str = "numpy") -> Dict[int, np.ndarray]:
     """Full decode of the selected channels (default: all), tails included,
     through one batched ``decode_ranges`` call.  Equals ``decode_stream``
     over each channel's reassembled stream."""
@@ -254,7 +254,8 @@ def decode_channels(store: Container, channels: Optional[Sequence[int]] = None,
         else:
             blank[c] = np.zeros(0, dtype=store.header_of(
                 int(store.chunks_of(c)[0])).dtype)
-    bodies = decode_ranges(store, requests, seed=seed, parse=parse)
+    bodies = decode_ranges(store, requests, seed=seed, parse=parse,
+                           backend=backend)
     out = dict(blank)
     for (c, _, _), body in zip(requests, bodies):
         out[c] = body

@@ -287,6 +287,150 @@ def test_session_and_service_container_output():
     assert nb == len(x) // 16
 
 
+# --------------------------------------------------------- mmap-backed open
+def test_mmap_open_equals_in_memory(tmp_path):
+    """``Container.open(path, mmap=True)`` must behave identically to the
+    bytes-backed open -- and hand out zero-copy memoryview chunks."""
+    blob = _session_stream("std_D32")
+    path = os.path.join(tmp_path, "m.idlmc")
+    pack(blob, path=path)
+    y = decode_stream(blob)
+    with Container.open(path, mmap=True) as store:
+        assert store._mmap is not None
+        cv = store.chunk_bytes(0)
+        assert isinstance(cv, memoryview)
+        assert store.stream_bytes(0) == blob
+        nb = store.total_blocks(0)
+        for i, j in [(0, nb), (5, 9), (nb - 1, nb)]:
+            np.testing.assert_array_equal(decode_range(store, i, j),
+                                          y[i * 16:j * 16])
+        np.testing.assert_array_equal(decode_channels(store)[0], y)
+        # identity token: same file generation as a bytes-backed open
+        assert store.cache_token == Container.open(path).cache_token
+        del cv  # exported view must be dropped before close()
+    assert store._mmap is None  # context manager closed the map
+    store2 = Container.open(path)  # plain open still works after close
+    assert store2.total_blocks(0) == nb
+
+
+def test_mmap_reopen_changes_generation(tmp_path):
+    """Appending to a file is a new generation: parsed-chunk caches keyed
+    on (path, generation) must not serve stale walks."""
+    blob = _session_stream("residual_D32_vr")
+    segs, _, _, _ = stream_mod._walk_all(memoryview(blob))
+    seg_bytes = [blob[s.start:s.end] for s in segs]
+    path = os.path.join(tmp_path, "g.idlmc")
+    w = ContainerWriter(path)
+    for sb in seg_bytes[:-1]:
+        w.append(sb)
+    w.finalize()
+    tok1 = Container.open(path).cache_token
+    w2 = ContainerWriter.reopen(path)
+    w2.append(seg_bytes[-1])
+    w2.finalize()
+    tok2 = Container.open(path).cache_token
+    assert tok1 != tok2 and tok1[0] == tok2[0]
+
+
+def test_store_tool_bigcheck_smoke(tmp_path):
+    """The >RAM-budget synthetic-archive exercise end to end, size-capped
+    for CI (`make store-check` runs the bigger sweep)."""
+    import importlib
+    import sys
+    scripts = os.path.join(os.path.dirname(__file__), "..", "scripts")
+    sys.path.insert(0, scripts)
+    try:
+        store_tool = importlib.import_module("store_tool")
+        out = os.path.join(tmp_path, "big.idlmc")
+        rc = store_tool.main(["bigcheck", "--mb", "1", "--channel-blocks",
+                              "256", "--mmap", "--out", out])
+        assert rc == 0
+        assert os.path.getsize(out) > 1e6
+        rc = store_tool.main(["inspect", out, "--mmap"])
+        assert rc == 0
+    finally:
+        sys.path.remove(scripts)
+
+
+# ----------------------------------------------- snapshot deltas (index v2)
+def test_snapshot_delta_index_shrinks():
+    """High-D channel cut into many tiny segments: the delta-form index
+    must store far fewer snapshot entries than one full snapshot per chunk
+    (the ISSUE 4 regression bound), while staying range-exact."""
+    B, D, warm, cruise = 8, 48, 48, 200
+    rng = np.random.default_rng(7)
+    # warm-up fills all D slots (distinct levels), then a long all-hit
+    # cruise: every cruise chunk enters with a full 48-deep dictionary
+    x = np.concatenate([
+        (np.arange(warm) * 50.0).repeat(B) + rng.normal(0, 0.1, warm * B),
+        (rng.integers(0, D, size=cruise) * 50.0).repeat(B)
+        + rng.normal(0, 0.1, cruise * B),
+    ])
+    codec = IdealemCodec(mode="std", block_size=B, num_dict=D, alpha=0.05,
+                         rel_tol=0.5, backend="numpy")
+    s = codec.session()
+    segs = [s.feed(x[lo:lo + B]) for lo in range(0, len(x), B)]  # 1-block segs
+    segs.append(s.finish())
+    blob = b"".join(segs)
+    store = Container(pack(blob))
+    assert store.n_chunks > 200
+    info = store.describe()
+    full, delta = info["snapshot_entries"], info["snapshot_delta_entries"]
+    assert full > D * cruise // 2  # the v1 full-snapshot form pays this
+    # a 1-block segment changes at most one slot, so deltas ~ chunk count
+    assert delta <= store.n_chunks
+    assert delta < full / 20
+    y = decode_stream(blob)
+    nb = store.total_blocks(0)
+    for i, j in [(0, nb), (nb // 2, nb // 2 + 1), (nb - 1, nb), (3, 17)]:
+        np.testing.assert_array_equal(decode_range(store, i, j),
+                                      y[i * B:j * B])
+
+
+def test_snapshot_delta_rejects_bad_slot():
+    """A forged delta slot outside the chunk's fill range must fail at
+    open time, not corrupt the reassembled snapshots."""
+    import struct
+    import zlib
+    good = pack(_session_stream("std_D32"))
+    store = Container(good)
+    foot = struct.Struct("<8sQII")
+    magic, idx_off, idx_len, _ = foot.unpack_from(good, len(good) - foot.size)
+    index = bytearray(good[idx_off:idx_off + idx_len])
+    n_delta = int(store._cols["snap_delta"].sum())
+    assert n_delta > 0
+    # slots blob sits between the columns and the 8-byte offsets blob
+    slot0_off = idx_len - 8 * n_delta - n_delta
+    index[slot0_off] = 200  # slot 200 >> any fill counter in this stream
+    forged = (good[:idx_off] + bytes(index)
+              + foot.pack(magic, idx_off, idx_len, zlib.crc32(bytes(index))))
+    with pytest.raises(ContainerFormatError, match="delta slot"):
+        Container(forged)
+
+
+# --------------------------------------------------- parse-cache identity
+def test_parse_cache_shared_across_container_instances(tmp_path):
+    """Two attaches of the same file -- different Container instances --
+    must share parsed-chunk cache entries (keyed on (path, generation),
+    not object identity), and detach of one must not evict the other's."""
+    blob = _session_stream("std_D32", feed=4 * 16)
+    path = os.path.join(tmp_path, "c.idlmc")
+    pack(blob, path=path)
+    svc = DecompressionService(cache_blocks=10 ** 9)
+    svc.attach("a", Container.open(path))
+    svc.attach("b", Container.open(path))  # distinct instance, same file
+    svc.read("a", 17, 19)
+    misses0 = svc.stats["cache_misses"]
+    svc.read("b", 17, 19)  # same chunks via the other attach: cache hits
+    assert svc.stats["cache_misses"] == misses0
+    assert svc.stats["cache_hits"] >= 1
+    svc.detach("a")  # shared-token entries survive while "b" lives
+    svc.read("b", 17, 19)
+    assert svc.stats["cache_misses"] == misses0
+    svc.detach("b")
+    assert svc._cached_blocks == 0  # last holder gone: entries evicted
+
+
 # ------------------------------------------------------- serving read path
 def test_decompression_service_reads_and_batches():
     blob = _session_stream("std_D32")
