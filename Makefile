@@ -2,8 +2,9 @@
 PY ?= python
 export PYTHONPATH := src
 
-.PHONY: test test-core bench bench-quick bench-stream bench-shard \
-	bench-store bench-decode shard-check store-check example-stream
+.PHONY: test test-core bench bench-quick bench-gate bench-stream \
+	bench-shard bench-store bench-decode shard-check store-check \
+	store-check-quick lint example-stream
 
 # Tier-1 verification (ROADMAP.md): the full suite, fail-fast.
 test:
@@ -35,6 +36,16 @@ bench-decode:
 bench-quick:
 	$(PY) -m benchmarks.run --quick
 
+# The PR perf gate, exactly as CI runs it: quick profile -> JSON ->
+# compare against the committed CPU baseline (scripts/bench_gate.py).
+bench-gate:
+	$(PY) -m benchmarks.run --quick --json BENCH_quick.json
+	$(PY) scripts/bench_gate.py BENCH_quick.json \
+	    benchmarks/baselines/BENCH_quick.json
+
+lint:
+	ruff check .
+
 # Sharded-encode byte-identity self-check on forced host devices.
 shard-check:
 	REPRO_SHARD_DEVICES=4 $(PY) -m repro.launch.shard_check
@@ -46,6 +57,13 @@ store-check:
 	$(PY) scripts/store_tool.py selfcheck tests/golden/*.idlm
 	$(PY) scripts/store_tool.py selfcheck tests/golden/*.idlm --mmap
 	$(PY) scripts/store_tool.py bigcheck --mb 48 --mmap
+
+# PR-level smoke (CI tier1): the golden-corpus selfcheck plus a small
+# mmap bigcheck, so container-format regressions fail fast instead of
+# waiting for the nightly store-check.
+store-check-quick:
+	$(PY) scripts/store_tool.py selfcheck tests/golden/*.idlm
+	$(PY) scripts/store_tool.py bigcheck --mb 8 --mmap
 
 example-stream:
 	$(PY) examples/stream_compress.py --channels 8 --samples 16384

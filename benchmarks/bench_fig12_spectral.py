@@ -13,7 +13,7 @@ import time
 import numpy as np
 
 from repro.configs import idealem_paper as papercfg
-from repro.core import IdealemCodec, amplitude_spectrum, spectral_band_error
+from repro.core import amplitude_spectrum, spectral_band_error
 from repro.data import synthetic
 
 from .common import ang_channels, csv_row, mag_channels

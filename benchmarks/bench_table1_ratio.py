@@ -8,7 +8,6 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
 
 from repro.baselines import IsabelaLikeCodec, SzLikeCodec, ZfpLikeCodec
 from repro.configs import idealem_paper as papercfg

@@ -2,7 +2,6 @@
 the paper's LBNL data (Table I uses 4 MAG + 4 ANG channels from two uPMUs)."""
 from __future__ import annotations
 
-import numpy as np
 
 from repro.data import synthetic
 

@@ -1,0 +1,141 @@
+"""CLI over the decode-backend autotuner (repro.core.decode, DESIGN.md
+Sec. 9): probe the measured-best backend per (mode, dtype, size-bucket)
+and validate a persisted ``decode_autotune.json`` cache.
+
+  probe      [--out decode_autotune.json] [--modes std,res,delta]
+             [--dtypes f8] [--buckets 64,1024,16384] [--block-size 32]
+             time numpy vs jax vs pallas for every combination and
+             persist the versioned choice table
+  selfcheck  cache.json
+             the nightly round-trip: a persisted cache must (1) strictly
+             reload with every entry intact, (2) survive a save/load
+             round trip bit-identically, and (3) be REJECTED -- strict
+             load raises, lenient load discards and leaves the table cold
+             -- when corrupted or carrying a stale version field
+
+Exit status: 0 clean, 1 failed check, 2 usage.
+"""
+import argparse
+import json
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import decode as decode_mod  # noqa: E402
+
+MODES = {"std": decode_mod.MODE_STD, "res": decode_mod.MODE_RESIDUAL,
+         "delta": decode_mod.MODE_DELTA}
+
+
+def cmd_probe(args) -> int:
+    decode_mod.reset_autotune()
+    buckets = [int(b) for b in args.buckets.split(",")]
+    for mode_name in args.modes.split(","):
+        mode = MODES[mode_name]
+        for dt in args.dtypes.split(","):
+            for nb in buckets:
+                decode_mod.resolve_backend("auto", mode, dt, nb,
+                                           block_size=args.block_size)
+    decode_mod.save_autotune(args.out)
+    for key, backend in decode_mod.autotune_choices().items():
+        print(f"  {key} -> {backend}")
+    stats = decode_mod.decode_stats()
+    print(f"probed {stats['autotune_probes']} combination(s) -> {args.out}")
+    return 0
+
+
+def _expect_raise(path, what) -> int:
+    """Strict load must raise; lenient load must discard (0 entries)."""
+    try:
+        decode_mod.load_autotune(path, strict=True)
+    except decode_mod.AutotuneCacheError as e:
+        print(f"  {what}: strict load rejected as expected ({e})")
+    else:
+        print(f"FAIL {what}: strict load accepted an invalid cache")
+        return 1
+    decode_mod.reset_autotune()
+    n = decode_mod.load_autotune(path, strict=False)
+    if n != 0 or decode_mod.autotune_choices():
+        print(f"FAIL {what}: lenient load kept {n} entries from an "
+              f"invalid cache")
+        return 1
+    print(f"  {what}: lenient load discarded it (cold table, will re-probe)")
+    return 0
+
+
+def cmd_selfcheck(args) -> int:
+    # 1. the persisted cache strictly reloads
+    decode_mod.reset_autotune()
+    n = decode_mod.load_autotune(args.cache, strict=True)
+    if n == 0:
+        print(f"FAIL {args.cache}: no entries")
+        return 1
+    choices = decode_mod.autotune_choices()
+    print(f"  loaded {n} entrie(s): {choices}")
+
+    with tempfile.TemporaryDirectory() as td:
+        # 2. save -> load round trip preserves every choice
+        rt = os.path.join(td, "roundtrip.json")
+        decode_mod.save_autotune(rt)
+        decode_mod.reset_autotune()
+        if decode_mod.load_autotune(rt, strict=True) != n \
+                or decode_mod.autotune_choices() != choices:
+            print("FAIL round trip changed the choice table")
+            return 1
+        print("  round trip: identical choice table")
+
+        with open(args.cache, "r", encoding="utf-8") as f:
+            doc = json.load(f)
+
+        # 3a. stale version field -> rejected, re-probe path
+        stale = os.path.join(td, "stale.json")
+        with open(stale, "w", encoding="utf-8") as f:
+            json.dump({**doc, "version": doc["version"] + 1}, f)
+        if _expect_raise(stale, "stale version"):
+            return 1
+
+        # 3b. corrupted bytes -> rejected, re-probe path
+        corrupt = os.path.join(td, "corrupt.json")
+        with open(args.cache, "rb") as f:
+            blob = f.read()
+        with open(corrupt, "wb") as f:
+            f.write(blob[: max(1, len(blob) // 2)] + b"\xff{garbage")
+        if _expect_raise(corrupt, "corrupted file"):
+            return 1
+
+        # 3c. structurally wrong entries -> rejected
+        malformed = os.path.join(td, "malformed.json")
+        with open(malformed, "w", encoding="utf-8") as f:
+            json.dump({"version": doc["version"],
+                       "entries": {"k": {"backend": "not-a-backend"}}}, f)
+        if _expect_raise(malformed, "malformed entry"):
+            return 1
+
+    print(f"selfcheck OK: {args.cache}")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="autotune_tool.py")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    p = sub.add_parser("probe", help="measure + persist backend choices")
+    p.add_argument("--out", default="decode_autotune.json")
+    p.add_argument("--modes", default="std,res,delta")
+    p.add_argument("--dtypes", default="f8")
+    p.add_argument("--buckets", default="64,1024,16384")
+    p.add_argument("--block-size", type=int, default=32)
+    p.set_defaults(fn=cmd_probe)
+
+    p = sub.add_parser("selfcheck", help="validate a persisted cache")
+    p.add_argument("cache")
+    p.set_defaults(fn=cmd_selfcheck)
+
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,167 @@
+"""CI perf gate: compare a ``benchmarks/run.py --json`` result against a
+committed baseline and fail when any bench regresses beyond tolerance.
+
+  bench_gate.py CURRENT.json BASELINE.json [--tolerance 0.25]
+                [--override NAME=TOL ...] [--absolute] [--allow-missing]
+
+Two comparison modes:
+
+* **normalized** (default): each bench's ``current/baseline`` time ratio
+  is compared against the MEDIAN ratio across all shared benches.  A
+  uniformly slower machine (a cold CI runner vs the laptop that produced
+  the baseline) shifts every ratio equally and trips nothing; a single
+  bench whose ratio exceeds ``median * (1 + tol)`` is a real relative
+  regression and fails the gate.  Needs a handful of benches to be
+  meaningful -- below ``--min-normalize`` shared rows the gate falls back
+  to absolute comparison (warned).
+* **absolute** (``--absolute``): fail when ``current > baseline * (1 +
+  tol)``.  Right for trajectories measured on pinned hardware (the
+  nightly archive), wrong across heterogeneous runners.
+
+Tolerance resolution, most specific wins: ``--override NAME=TOL``
+(longest matching name prefix), then the baseline document's optional
+``"tolerances": {prefix: tol}`` map, then ``--tolerance`` (default 0.25
+-- the noise floor of shared CI runners).
+
+Benches present in the baseline but missing from the current run fail the
+gate (a silently deleted bench must not pass; ``--allow-missing`` for
+intentional removals); new benches are reported and pass.
+
+Exit status: 0 clean, 1 regression/missing, 2 usage or unreadable input.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import sys
+from typing import Dict, Optional, Tuple
+
+
+def load_results(path: str) -> Tuple[Dict[str, float], dict]:
+    """Read a run.py --json document; returns (name -> us_per_call, doc)."""
+    with open(path, "r", encoding="utf-8") as f:
+        doc = json.load(f)
+    if not isinstance(doc, dict) or not isinstance(doc.get("results"), dict):
+        raise ValueError(f"{path}: not a benchmarks/run.py --json document")
+    out = {}
+    for name, ent in doc["results"].items():
+        out[name] = float(ent["us_per_call"])
+    return out, doc
+
+
+def pick_tolerance(name: str, default: float,
+                   overrides: Dict[str, float]) -> float:
+    """Longest-prefix tolerance override for one bench name."""
+    best: Optional[Tuple[int, float]] = None
+    for prefix, tol in overrides.items():
+        if name.startswith(prefix) and (best is None or len(prefix) > best[0]):
+            best = (len(prefix), tol)
+    return best[1] if best is not None else default
+
+
+def gate(current: Dict[str, float], baseline: Dict[str, float],
+         tolerance: float = 0.25,
+         overrides: Optional[Dict[str, float]] = None,
+         absolute: bool = False, allow_missing: bool = False,
+         min_normalize: int = 4) -> Tuple[bool, list]:
+    """Returns (ok, report_lines)."""
+    overrides = overrides or {}
+    shared = sorted(set(current) & set(baseline))
+    missing = sorted(set(baseline) - set(current))
+    new = sorted(set(current) - set(baseline))
+    lines = []
+    ok = True
+
+    mode = "absolute" if absolute else "normalized"
+    norm = 1.0
+    if not absolute:
+        if len(shared) < min_normalize:
+            lines.append(f"WARN only {len(shared)} shared benches: "
+                         f"falling back to absolute comparison")
+            mode = "absolute"
+        else:
+            norm = statistics.median(current[n] / baseline[n]
+                                     for n in shared)
+            lines.append(f"normalizing by median ratio {norm:.3f} "
+                         f"over {len(shared)} benches")
+
+    for name in shared:
+        ratio = current[name] / baseline[name]
+        rel = ratio / norm if mode == "normalized" else ratio
+        tol = pick_tolerance(name, tolerance, overrides)
+        verdict = "ok"
+        if rel > 1.0 + tol:
+            verdict = "REGRESSION"
+            ok = False
+        lines.append(
+            f"{verdict:>10}  {name}: {current[name]:.1f}us vs "
+            f"{baseline[name]:.1f}us  (x{ratio:.2f}"
+            + (f", x{rel:.2f} normalized" if mode == "normalized" else "")
+            + f", tol {tol:.0%})")
+    for name in missing:
+        if allow_missing:
+            lines.append(f"   missing  {name} (allowed)")
+        else:
+            lines.append(f"   MISSING  {name}: in baseline, not in current "
+                         f"run")
+            ok = False
+    for name in new:
+        lines.append(f"       new  {name}: {current[name]:.1f}us "
+                     f"(no baseline yet)")
+    return ok, lines
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="bench_gate.py",
+        description="fail when a benchmark regresses vs the baseline")
+    ap.add_argument("current", help="run.py --json output of this build")
+    ap.add_argument("baseline", help="committed baseline JSON")
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="default noise tolerance (fraction, default 0.25)")
+    ap.add_argument("--override", action="append", default=[],
+                    metavar="NAME=TOL",
+                    help="per-bench tolerance, longest name-prefix wins "
+                         "(repeatable)")
+    ap.add_argument("--absolute", action="store_true",
+                    help="compare raw times instead of median-normalized "
+                         "ratios")
+    ap.add_argument("--allow-missing", action="store_true",
+                    help="do not fail on benches absent from the current run")
+    ap.add_argument("--min-normalize", type=int, default=4,
+                    help="min shared benches for normalized mode (else "
+                         "absolute)")
+    args = ap.parse_args(argv)
+
+    overrides = {}
+    for spec in args.override:
+        name, _, tol = spec.rpartition("=")
+        if not name:
+            ap.error(f"--override must be NAME=TOL, got {spec!r}")
+        overrides[name] = float(tol)
+
+    try:
+        current, _ = load_results(args.current)
+        baseline, base_doc = load_results(args.baseline)
+    except (OSError, ValueError, KeyError) as e:
+        print(f"bench_gate: {e}", file=sys.stderr)
+        return 2
+    # the baseline may embed per-bench tolerances; CLI overrides win
+    embedded = base_doc.get("tolerances", {})
+    if isinstance(embedded, dict):
+        overrides = {**{k: float(v) for k, v in embedded.items()},
+                     **overrides}
+
+    ok, lines = gate(current, baseline, tolerance=args.tolerance,
+                     overrides=overrides, absolute=args.absolute,
+                     allow_missing=args.allow_missing,
+                     min_normalize=args.min_normalize)
+    for line in lines:
+        print(line)
+    print("bench_gate:", "PASS" if ok else "FAIL")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -34,9 +34,13 @@ handful of compiled shapes instead of recompiling per request length.
 """
 from __future__ import annotations
 
+import json
 import logging
+import os
+import threading
+import time
 from dataclasses import dataclass
-from typing import List, NamedTuple, Optional, Sequence, Tuple
+from typing import NamedTuple, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -45,14 +49,17 @@ from .transforms import np_wrap_range
 __all__ = [
     "MODE_STD", "MODE_RESIDUAL", "MODE_DELTA", "BACKENDS",
     "DecodePlan", "PlanPart", "plan_from_parsed", "pad_parts",
-    "reconstruct", "decode_sources", "hit_perms", "gather_rows",
-    "decode_stats", "reset_decode_stats",
+    "reconstruct", "resolve_backend", "decode_sources", "hit_perms",
+    "gather_rows", "decode_stats", "reset_decode_stats",
+    "AUTOTUNE_VERSION", "AutotuneCacheError", "load_autotune",
+    "save_autotune", "reset_autotune", "autotune_choices", "autotune_cached",
 ]
 
 MODE_STD, MODE_RESIDUAL, MODE_DELTA = 0, 1, 2
 
-#: Recognised ``backend=`` values (plus ``"auto"``: device when the
-#: exactness probe passes on this host, else numpy).
+#: Recognised ``backend=`` values (plus ``"auto"``: the measured-best
+#: backend for the plan's (mode, dtype, size bucket) -- see the autotuner
+#: below).
 BACKENDS = ("numpy", "jax", "pallas")
 
 logger = logging.getLogger("repro.core.decode")
@@ -60,18 +67,32 @@ logger = logging.getLogger("repro.core.decode")
 # Per-process accounting of backend routing.  ``fallbacks`` counts calls
 # that *asked* for a device backend but ran on the host because the probe
 # failed (or the device path raised); tests pin this so a silent fallback
-# cannot masquerade as device coverage.
-_stats = {"host_calls": 0, "device_calls": 0, "fallbacks": 0}
+# cannot masquerade as device coverage.  ``autotune_probes``/
+# ``autotune_hits`` count measured first-use probes vs cached ``"auto"``
+# resolutions.
+_stats = {"host_calls": 0, "device_calls": 0, "fallbacks": 0,
+          "autotune_probes": 0, "autotune_hits": 0}
+# a pipelined service increments from its worker thread concurrently with
+# the caller's reads/probes; dict += is not atomic even under the GIL
+_stats_lock = threading.Lock()
 _exact_cache: dict = {}
 
 
+def _bump(key: str, n: int = 1) -> None:
+    with _stats_lock:
+        _stats[key] += n
+
+
 def decode_stats() -> dict:
-    return dict(_stats)
+    with _stats_lock:
+        snap = dict(_stats)
+    return {**snap, "autotune_choices": autotune_choices()}
 
 
 def reset_decode_stats() -> None:
-    for k in _stats:
-        _stats[k] = 0
+    with _stats_lock:
+        for k in _stats:
+            _stats[k] = 0
 
 
 # ------------------------------------------------------------------ the plan
@@ -354,13 +375,15 @@ def _run_device(plan: DecodePlan, backend: str) -> np.ndarray:
 
 # --------------------------------------------- exactness probe + dispatch
 
-def _probe_plan(mode: int, dtype, value_range, block_size: int) -> DecodePlan:
+def _probe_plan(mode: int, dtype, value_range, block_size: int,
+                nb: int = 16, n_rows: int = 5) -> DecodePlan:
     """Small deterministic plan with mantissa-rich values: hits, misses,
-    shared sources and (delta) long accumulation chains all present."""
+    shared sources and (delta) long accumulation chains all present.
+    The defaults are the exactness probe's; the autotuner reuses this with
+    ``nb`` at the size-bucket it is timing."""
     dt = np.dtype(dtype)
     B = block_size
     P = B if mode == MODE_STD else B - 1
-    n_rows, nb = 5, 16
     bits = _splitmix64(np.arange(n_rows * P, dtype=np.uint64) + np.uint64(7))
     vals = (bits.astype(np.float64) / 2.0 ** 64 - 0.5) * 8.0
     payloads = vals.reshape(n_rows, P).astype(dt)
@@ -405,23 +428,242 @@ def _device_exact(backend: str, plan: DecodePlan) -> bool:
     return ok
 
 
+# ------------------------------------------------------ measured autotuner
+#
+# ``backend="auto"`` used to be a synonym for "jax"; it is now *measured*:
+# the first time a (mode, dtype, size-bucket) combination is resolved, the
+# engine times the host path against every device backend that passes the
+# exactness probe on a bucket-sized probe plan, routes the combination to
+# the fastest, and remembers the choice.  Choices persist in a versioned
+# JSON cache (``decode_autotune.json`` by convention) when the
+# ``REPRO_DECODE_AUTOTUNE`` env var names a path: the file is loaded lazily
+# at first "auto" resolution and rewritten after each new probe.  A stale
+# ``version`` field or a corrupt file is discarded (logged) and re-probed
+# -- never trusted (DESIGN.md Sec. 9).
+
+AUTOTUNE_VERSION = 1
+_AUTOTUNE_ENV = "REPRO_DECODE_AUTOTUNE"
+_BUCKET_MIN, _BUCKET_MAX = 64, 16384
+
+_autotune_entries: dict = {}
+_autotune_loaded = False
+# resolve/probe/persist are caller-thread operations that race the
+# pipelined service's worker thread (and each other across services)
+_autotune_lock = threading.RLock()
+
+
+class AutotuneCacheError(ValueError):
+    """A persisted autotune cache failed validation (corrupt JSON, wrong
+    structure, or a stale ``version`` field)."""
+
+
+def _size_bucket(nb: int) -> int:
+    """Pow-2 size bucket of a dispatch, clamped so the probe table stays
+    small: everything below 64 blocks shares one bucket (dispatch overhead
+    dominates), everything above 16384 another (bandwidth dominates)."""
+    return min(max(_pow2(max(1, nb)), _BUCKET_MIN), _BUCKET_MAX)
+
+
+def _autotune_key(mode: int, dtype, nb: int) -> str:
+    return f"mode={mode}|dtype={np.dtype(dtype).str}|bucket={_size_bucket(nb)}"
+
+
+def _autotune_path() -> Optional[str]:
+    return os.environ.get(_AUTOTUNE_ENV) or None
+
+
+def _validate_autotune_doc(doc) -> dict:
+    if not isinstance(doc, dict):
+        raise AutotuneCacheError("autotune cache is not a JSON object")
+    if doc.get("version") != AUTOTUNE_VERSION:
+        raise AutotuneCacheError(
+            f"autotune cache version {doc.get('version')!r} != "
+            f"{AUTOTUNE_VERSION}: stale cache, re-probe")
+    entries = doc.get("entries")
+    if not isinstance(entries, dict):
+        raise AutotuneCacheError("autotune cache has no 'entries' object")
+    for key, ent in entries.items():
+        if (not isinstance(ent, dict)
+                or ent.get("backend") not in BACKENDS
+                or not isinstance(ent.get("times_us"), dict)):
+            raise AutotuneCacheError(f"malformed autotune entry {key!r}")
+    return entries
+
+
+def load_autotune(path: str, strict: bool = True) -> int:
+    """Load persisted ``"auto"`` choices; returns the entry count.
+
+    ``strict=True`` (the selfcheck contract) raises
+    :class:`AutotuneCacheError` on a corrupt or version-stale file;
+    ``strict=False`` (the serving path) logs, discards, and leaves the
+    cache cold so the combination is re-probed."""
+    global _autotune_loaded
+    with _autotune_lock:
+        _autotune_loaded = True
+        try:
+            with open(path, "r", encoding="utf-8") as f:
+                doc = json.load(f)
+            entries = _validate_autotune_doc(doc)
+        except AutotuneCacheError:
+            if strict:
+                raise
+            logger.warning("discarding invalid autotune cache %s "
+                           "(re-probing)", path)
+            return 0
+        except (OSError, ValueError) as e:
+            if strict:
+                raise AutotuneCacheError(f"unreadable autotune cache: {e}")
+            logger.warning("discarding unreadable autotune cache %s (%s)",
+                           path, e)
+            return 0
+        _autotune_entries.update(entries)
+        return len(entries)
+
+
+def save_autotune(path: str) -> None:
+    """Persist the in-memory choices as the versioned JSON cache (atomic
+    replace, so a racing reader never sees a half-written file)."""
+    with _autotune_lock:
+        doc = {"version": AUTOTUNE_VERSION, "entries": dict(_autotune_entries)}
+    tmp = f"{path}.tmp.{os.getpid()}"
+    with open(tmp, "w", encoding="utf-8") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+    os.replace(tmp, path)
+
+
+def reset_autotune() -> None:
+    """Forget every choice (and the lazy disk load): next ``"auto"``
+    resolution re-probes.  Test hook."""
+    global _autotune_loaded
+    with _autotune_lock:
+        _autotune_entries.clear()
+        _autotune_loaded = False
+
+
+def autotune_choices() -> dict:
+    """Current ``"auto"`` routing table: autotune key -> backend name."""
+    with _autotune_lock:
+        return {k: v["backend"]
+                for k, v in sorted(_autotune_entries.items())}
+
+
+def autotune_cached(mode: int, dtype, nb: int) -> bool:
+    """Whether ``"auto"`` for this (mode, dtype, size-bucket) would resolve
+    from cache (True) or have to run a timing probe (False).  The serving
+    layer uses this to quiesce its pipeline before a cold probe -- timing
+    backends while a reconstruct is in flight would poison the choice."""
+    global _autotune_loaded
+    with _autotune_lock:
+        if not _autotune_loaded:
+            _autotune_loaded = True
+            path = _autotune_path()
+            if path and os.path.exists(path):
+                load_autotune(path, strict=False)
+        return _autotune_key(mode, dtype, nb) in _autotune_entries
+
+
+def _probe_autotune(mode: int, dtype, value_range, block_size: int,
+                    bucket: int) -> dict:
+    """Time host vs candidate device backends on a bucket-sized probe plan
+    (pow-2 shapes, so the compiled shapes are the ones real traffic
+    reuses).  Only backends that pass the exactness probe are candidates;
+    ties and errors resolve toward the host path."""
+    plan = _probe_plan(mode, dtype, value_range, block_size,
+                       nb=bucket, n_rows=min(bucket, 64))
+
+    def best_of(fn, reps: int = 3) -> float:
+        fn()  # warmup: jit compile, caches
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            fn()
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    times = {"numpy": best_of(lambda: _reconstruct_numpy(plan))}
+    for b in BACKENDS[1:]:
+        if not _device_exact(b, plan):
+            continue
+        try:
+            times[b] = best_of(lambda: _run_device(plan, b))
+        except Exception as e:
+            logger.warning("autotune probe for backend %r failed (%s); "
+                           "excluding it", b, e)
+    # the host path wins ties: a device must be >5% faster on the probe to
+    # take the route (noise margin; a near-tie is not worth the dispatch)
+    backend = min(sorted(times), key=times.get)
+    if times[backend] > times["numpy"] * 0.95:
+        backend = "numpy"
+    return {"backend": backend,
+            "times_us": {k: round(v * 1e6, 3) for k, v in times.items()}}
+
+
+def resolve_backend(backend: str, mode: int, dtype, nb: int,
+                    value_range=None, block_size: int = 32) -> str:
+    """Concrete backend for one dispatch.
+
+    Explicit names pass through (validated); ``"auto"`` returns the
+    measured-best backend for ``(mode, dtype, size bucket)`` -- probing,
+    caching and (when ``REPRO_DECODE_AUTOTUNE`` is set) persisting on
+    first use.  ``nb`` must be the size of the DISPATCH being routed (the
+    serving layer passes its merged group's total blocks, not any single
+    request's) -- routing measured at the wrong operating point would
+    send large batches down a backend that only wins small ones."""
+    if backend != "auto":
+        if backend not in BACKENDS:
+            raise ValueError(f"unknown decode backend {backend!r}; "
+                             f"expected one of {BACKENDS + ('auto',)}")
+        return backend
+    global _autotune_loaded
+    with _autotune_lock:
+        if not _autotune_loaded:
+            _autotune_loaded = True
+            path = _autotune_path()
+            if path and os.path.exists(path):
+                load_autotune(path, strict=False)
+        key = _autotune_key(mode, dtype, nb)
+        ent = _autotune_entries.get(key)
+        if ent is not None:
+            _bump("autotune_hits")
+            return ent["backend"]
+        ent = _probe_autotune(mode, np.dtype(dtype), value_range, block_size,
+                              _size_bucket(nb))
+        _autotune_entries[key] = ent
+        _bump("autotune_probes")
+        logger.info("autotune: %s -> %s %s", key, ent["backend"],
+                    ent["times_us"])
+        path = _autotune_path()
+        if path:
+            try:
+                save_autotune(path)
+            except OSError as e:
+                # persistence is an optimization; the in-memory choice
+                # stands and the caller's dispatch must not fail over an
+                # unwritable cache path
+                logger.warning("could not persist autotune cache to %s "
+                               "(%s); continuing in-memory", path, e)
+        return ent["backend"]
+
+
 def reconstruct(plan: DecodePlan, backend: str = "numpy") -> np.ndarray:
     """Rebuild ``(nb, B)`` block values from a plan (paper Sec. V-A2/V-B2).
 
     ``backend`` is ``"numpy"`` (host reference), ``"jax"``/``"pallas"``
     (device; byte-identical, auto-falling back to host -- logged and
     counted in :func:`decode_stats` -- when the exactness probe fails on
-    the current device), or ``"auto"`` (device iff the probe passes).
+    the current device), or ``"auto"`` (the measured-best backend for the
+    plan's (mode, dtype, size bucket) -- :func:`resolve_backend`).
     Purely per-block math: callers may stack many ranges into one padded
     plan (:func:`pad_parts`) and slice the result apart.
     """
-    if backend == "auto":
-        backend = "jax"
-    elif backend not in BACKENDS:
-        raise ValueError(f"unknown decode backend {backend!r}; "
-                         f"expected one of {BACKENDS + ('auto',)}")
     if plan.nb == 0:
+        # validate the name, but never autotune-probe for an empty plan
+        if backend != "auto" and backend not in BACKENDS:
+            raise ValueError(f"unknown decode backend {backend!r}; "
+                             f"expected one of {BACKENDS + ('auto',)}")
         return np.zeros((0, plan.block_size), dtype=np.dtype(plan.dtype))
+    backend = resolve_backend(backend, plan.mode, plan.dtype, plan.nb,
+                              plan.value_range, plan.block_size)
     if backend != "numpy":
         if _device_exact(backend, plan):
             try:
@@ -435,8 +677,8 @@ def reconstruct(plan: DecodePlan, backend: str = "numpy") -> np.ndarray:
                     "serving this call from the host path",
                     backend, plan.nb, e)
             else:
-                _stats["device_calls"] += 1
+                _bump("device_calls")
                 return out
-        _stats["fallbacks"] += 1
-    _stats["host_calls"] += 1
+        _bump("fallbacks")
+    _bump("host_calls")
     return _reconstruct_numpy(plan)

@@ -26,7 +26,7 @@ of being recomputed outside the kernel.
 from __future__ import annotations
 
 import functools
-from typing import Callable, NamedTuple, Optional, Tuple
+from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp

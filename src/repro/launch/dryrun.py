@@ -29,7 +29,7 @@ import functools
 import json
 import re
 import time
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

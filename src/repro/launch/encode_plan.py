@@ -16,7 +16,7 @@ padded arrays, so ``repro.core`` stays free of launch-layer imports.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional, Sequence, Tuple
+from typing import NamedTuple, Optional, Sequence
 
 import jax
 import numpy as np

@@ -20,7 +20,6 @@ per-device program.
 """
 from __future__ import annotations
 
-import json
 import re
 from collections import defaultdict
 from typing import Dict, List, Optional, Tuple

@@ -15,7 +15,7 @@ would pad; for the baseline we prefer clean layouts and replicate instead).
 """
 from __future__ import annotations
 
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import numpy as np

@@ -19,21 +19,20 @@ Layer kinds:
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from .attention import (KVCache, attention, cross_attention, decode_attention,
-                        init_attention, init_kv_cache, rope)
+                        init_attention, init_kv_cache)
 from .common import ModelConfig, logical, split_keys
 from .layers import embed, init_embed, init_mlp, init_rmsnorm, mlp, rmsnorm, unembed
 from .moe import init_moe, moe_ffn
-from .rwkv import (RwkvCache, channel_mix_decode, channel_mix_forward,
+from .rwkv import (channel_mix_decode, channel_mix_forward,
                    init_channel_mix, init_rwkv_cache, init_time_mix,
                    time_mix_decode, time_mix_forward)
-from .ssm import SSMCache, init_ssm, init_ssm_cache, ssm_decode, ssm_forward
+from .ssm import init_ssm, init_ssm_cache, ssm_decode, ssm_forward
 
 LOSS_CHUNK = 1024
 

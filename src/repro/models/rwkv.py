@@ -11,7 +11,7 @@ form without giving up the matmul formulation.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

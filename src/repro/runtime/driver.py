@@ -19,7 +19,6 @@ import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional
 
-import jax
 import numpy as np
 
 from repro import checkpoint as ckpt

@@ -1,6 +1,10 @@
 from .engine import FlushPolicy, ServeEngine, prefill_step, serve_step
 from .compress import (CompressionService, DecompressionService,
                        StreamCoalescer)
+from .pipeline import (StageFuture, StagePipeline, SyncExecutor,
+                       ThreadStageExecutor)
 
 __all__ = ["FlushPolicy", "ServeEngine", "prefill_step", "serve_step",
-           "CompressionService", "DecompressionService", "StreamCoalescer"]
+           "CompressionService", "DecompressionService", "StreamCoalescer",
+           "StageFuture", "StagePipeline", "SyncExecutor",
+           "ThreadStageExecutor"]

@@ -36,7 +36,8 @@ from __future__ import annotations
 
 import time
 from collections import OrderedDict
-from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
+from typing import (Callable, Dict, List, NamedTuple, Optional, Sequence,
+                    Tuple, Union)
 
 import numpy as np
 
@@ -44,8 +45,32 @@ from repro.core import IdealemCodec
 from repro.core.session import IdealemSession, SessionStats
 
 from .engine import FlushPolicy
+from .pipeline import StagePipeline, SyncExecutor, ThreadStageExecutor
 
 __all__ = ["CompressionService", "StreamCoalescer", "DecompressionService"]
+
+
+class _PlannedStore(NamedTuple):
+    """One store's share of a flush batch after the *plan* stage: its
+    requests, their walked windows, and the shared codec-parameter key."""
+
+    store_id: str
+    pkey: tuple                    # (mode, block_size, dtype str, range)
+    requests: list                 # [(rid, channel, start, stop), ...]
+    ranges: list                   # [(channel, start, stop), ...]
+    header: object
+    windows: list
+
+
+class _Unit(NamedTuple):
+    """One reconstruct dispatch after the *gather* stage: a padded plan
+    plus how to slice each request back out at *emit*."""
+
+    backend: str                   # resolved concrete backend
+    block_size: int
+    items: list                    # [(rid, n_blocks), ...] in plan order
+    plan: object                   # decode.DecodePlan
+    nbm: int                       # padded per-request block count
 
 
 def _fold_stats(agg: SessionStats, st: SessionStats) -> None:
@@ -414,13 +439,40 @@ class DecompressionService:
     walks instead of re-parsing.  Eviction is by total cached blocks so
     fat segments don't dodge the budget.  Decoded output is NOT cached
     (it is range-shaped and cheap to rebuild from parsed segments).
+
+    Flushes are *pipelined* (DESIGN.md Sec. 9): each flush is explicit
+    plan -> gather -> reconstruct -> emit stages, with the reconstruct
+    stage handed to a stage executor (``repro.serve.pipeline``).  With
+    ``FlushPolicy.pipeline_depth == 1`` (the default) the stages alternate
+    and a flush returns its own batch's answers, byte-identical to the
+    pre-pipeline service.  With depth 2 the service plans/gathers batch
+    N+1 on the host while a worker thread reconstructs batch N; a flush
+    then returns the answers of the batch that just *completed*, and
+    ``drain()`` (or ``close()``) collects whatever is still in flight.
+    Per-store quarantine survives every stage boundary: plan/gather
+    failures are recorded when the batch is cut, reconstruct failures when
+    its batch is emitted -- ``last_errors`` either way, and only the
+    failing group's requests.  ``executor`` is injectable (any object with
+    ``submit(fn, *args) -> future`` and ``shutdown()``), and ``trace`` --
+    a ``(stage, flush_seq)`` callable -- observes stage transitions, so
+    tests can force and assert orderings deterministically.
+
+    ``backend="auto"`` (the default) routes every dispatch to the
+    measured-best backend for its (mode, dtype, size-bucket)
+    (``repro.core.decode.resolve_backend``: first use probes numpy vs jax
+    vs pallas, the choice is cached and optionally persisted).
     """
 
     def __init__(self, policy: Optional[FlushPolicy] = None,
                  cache_blocks: int = 1 << 16,
                  clock: Optional[Callable[[], float]] = None,
-                 backend: str = "numpy"):
+                 backend: str = "auto",
+                 executor=None,
+                 trace: Optional[Callable[[str, int], None]] = None):
+        from repro.core import decode as decode_mod
         from repro.store import Container  # noqa: F401 (import check only)
+        if backend != "auto" and backend not in decode_mod.BACKENDS:
+            raise ValueError(f"unknown decode backend {backend!r}")
         self.policy = policy or FlushPolicy()
         self.backend = backend
         self._cache_blocks = cache_blocks
@@ -433,9 +485,20 @@ class DecompressionService:
         # FIFO order makes the head the batch's oldest for the deadline
         self._pending: List[Tuple[str, str, int, int, int, float]] = []
         self._pending_blocks = 0
+        if executor is None:
+            executor = (ThreadStageExecutor() if self.policy.pipeline_depth > 1
+                        else SyncExecutor())
+        self._pipe = StagePipeline(executor, self.policy.pipeline_depth)
+        self._trace = trace if trace is not None else (lambda stage, seq: None)
+        self._flush_seq = 0
+        self._closed = False
+        # answers emitted outside a normal collection point (a pipeline
+        # quiesce before a cold autotune probe), delivered with the next
+        # flush/drain/poll return
+        self._early_out: Dict[str, np.ndarray] = {}
         self.stats = {"requests": 0, "blocks_out": 0, "flushes": 0,
                       "failed_requests": 0, "cache_hits": 0,
-                      "cache_misses": 0, "dispatches": 0}
+                      "cache_misses": 0, "dispatches": 0, "inflight_peak": 0}
         self.last_errors: Dict[str, Exception] = {}
 
     # ------------------------------------------------------------- lifecycle
@@ -509,15 +572,19 @@ class DecompressionService:
     def submit(self, request_id: str, store_id: str, start_block: int,
                stop_block: int, channel: int = 0
                ) -> Optional[Dict[str, np.ndarray]]:
-        """Stage a range request; returns the whole batch's answers (keyed
-        by request id) when the flush policy trips, else ``None``."""
+        """Stage a range request; when the flush policy trips, returns the
+        flush's answers (keyed by request id) -- at ``pipeline_depth`` 1
+        that is this very batch; at depth > 1 it is whatever batch(es)
+        just COMPLETED, so correlate by request id, not by call.  Returns
+        ``None`` while the policy holds."""
+        self._check_open()
         store = self._store(store_id)
         total = store.total_blocks(channel)
         if not (0 <= start_block < stop_block <= total):
             raise IndexError(
                 f"block range [{start_block}, {stop_block}) outside "
                 f"[0, {total}) of {store_id!r} channel {channel}")
-        if any(r[0] == request_id for r in self._pending):
+        if request_id in self._live_request_ids():
             raise KeyError(f"request {request_id!r} already pending")
         self._pending.append(
             (request_id, store_id, channel, start_block, stop_block,
@@ -529,39 +596,135 @@ class DecompressionService:
         return None
 
     def poll(self) -> Optional[Dict[str, np.ndarray]]:
-        """Deadline tick (``FlushPolicy.max_age_s``), like the coalescer's."""
+        """Deadline tick (``FlushPolicy.max_age_s``), like the coalescer's.
+        Also delivers (without blocking) any pipelined batch that finished
+        reconstructing since the last call, so a submit/poll timer loop
+        never strands a completed batch's answers."""
         if self._pending and self.policy.should_flush(
                 len(self._pending), self._pending_blocks, self._age()):
             return self.flush()
-        return None
+        ready = {**self._take_early(), **self._collect_ready()}
+        return ready or None
 
     def flush(self) -> Dict[str, np.ndarray]:
-        """Answer every pending request through the unified decode engine.
+        """Cut the pending batch through the staged pipeline and return the
+        answers of every batch that COMPLETED (DESIGN.md Sec. 9).
 
-        Two stages (DESIGN.md Sec. 8).  *Plan*: per store, all of its
-        pending requests resolve to source-gathered ``PlanPart``\\ s in one
-        ``store.plan_parts`` call (seek + walk + ONE byte gather per
-        store); a store that fails here -- corrupt chunk, racing detach --
-        fails ALONE: its requests are reported in ``last_errors`` (request
-        id -> exception) and every other store's answers are still
-        returned.  *Reconstruct*: parts sharing codec parameters and seed
-        -- across stores -- are padded into ONE plan and rebuilt in a
-        single ``decode.reconstruct`` dispatch.  On the host backend,
-        requests are additionally split by power-of-two length buckets
-        (mirroring the write side's ``block_bucket``) so one long request
-        does not pad every short one; a device dispatch amortizes its own
-        padding, so device backends merge buckets -- a flush is typically
-        one device call (``stats["dispatches"]`` counts them).
+        The four stages: *plan* -- per store, seek + walk the covering
+        chunks (``store.plan_windows``); a store that fails here (corrupt
+        chunk, racing detach) fails ALONE: its requests are reported in
+        ``last_errors`` and every other store proceeds.  *gather* -- one
+        shared byte gather per store (``store.gather_parts``), then parts
+        sharing codec parameters and seed are merged ACROSS stores and
+        padded into one plan per compatible group (``decode.pad_parts``).
+        On a host-routed group, requests are additionally split by pow-2
+        length buckets (mirroring the write side's ``block_bucket``) so
+        one long request does not pad every short one; a device dispatch
+        amortizes its own padding, so device groups merge buckets -- but
+        not without limit: a merged group whose padded size exceeds both
+        the policy block budget and 4x its real work re-splits by length
+        bucket.  *reconstruct* -- one engine dispatch per group
+        (``stats["dispatches"]``), run by the stage executor: inline at
+        ``pipeline_depth`` 1, on the worker thread (overlapping the next
+        batch's plan/gather) at depth 2.  *emit* -- slice each request's
+        blocks back out, account stats, quarantine reconstruct failures.
+
+        With depth 1 the returned dict is this batch's answers -- the
+        alternating path.  With depth > 1 it is the answers of the OLDEST
+        in-flight batch(es); call :meth:`drain` for the rest.
 
         ``last_errors`` accumulates (detach records dropped requests there
         too); callers correlating answers by id should ``pop`` entries they
         have handled."""
-        from repro.core import decode as decode_mod
-        from repro.store import plan_parts
+        self._check_open()
         pending, self._pending = self._pending, []
         self._pending_blocks = 0
+        out: Dict[str, np.ndarray] = self._take_early()
         if not pending:
+            # nothing new to cut, but completed in-flight batches must not
+            # be stranded behind an explicit flush
+            out.update(self._collect_ready())
+            return out
+        self._flush_seq += 1
+        seq = self._flush_seq
+        units = self._stage_gather(seq, self._stage_plan(seq, pending))
+        completed = self._pipe.push((seq, units),
+                                    self._stage_reconstruct, seq, units)
+        self.stats["flushes"] += 1
+        self.stats["inflight_peak"] = max(
+            self.stats["inflight_peak"], self._pipe.inflight + len(completed))
+        for (seq_done, batch_units), outcomes, exc in completed:
+            out.update(self._stage_emit(seq_done, batch_units, outcomes, exc))
+        out.update(self._take_early())  # batches drained by a probe quiesce
+        return out
+
+    def drain(self) -> Dict[str, np.ndarray]:
+        """Collect every in-flight batch's answers (blocking).  With
+        ``pipeline_depth > 1`` a flush returns only completed batches;
+        call this to quiesce the pipeline (shutdown, end of a burst).  The
+        depth-1 pipeline never has anything in flight, so this is a no-op
+        there."""
+        out: Dict[str, np.ndarray] = self._take_early()
+        for (seq_done, batch_units), outcomes, exc in self._pipe.drain():
+            out.update(self._stage_emit(seq_done, batch_units, outcomes, exc))
+        return out
+
+    def close(self) -> Dict[str, np.ndarray]:
+        """Flush the pending batch, drain the pipeline, and shut the stage
+        executor down.  Returns every answer not yet handed out.  The
+        service is unusable afterwards: ``submit``/``flush`` raise (work
+        queued onto a dead executor would hang forever); repeated
+        ``close()`` calls are safe no-ops."""
+        if self._closed:
             return {}
+        out = self.flush()
+        out.update(self.drain())
+        self._pipe.executor.shutdown()
+        self._closed = True
+        return out
+
+    @property
+    def inflight(self) -> int:
+        """Reconstruct batches currently in flight (bounded by
+        ``FlushPolicy.pipeline_depth - 1`` between calls)."""
+        return self._pipe.inflight
+
+    def _check_open(self) -> None:
+        if self._closed:
+            raise RuntimeError("DecompressionService is closed")
+
+    def _collect_ready(self) -> Dict[str, np.ndarray]:
+        """Emit every in-flight batch that has already finished
+        reconstructing (non-blocking, oldest first)."""
+        out: Dict[str, np.ndarray] = {}
+        for (seq_done, batch_units), outcomes, exc in \
+                self._pipe.collect_ready():
+            out.update(self._stage_emit(seq_done, batch_units, outcomes, exc))
+        return out
+
+    def _take_early(self) -> Dict[str, np.ndarray]:
+        out, self._early_out = self._early_out, {}
+        return out
+
+    def _live_request_ids(self) -> set:
+        """Ids that may not be reused yet: staged requests plus every
+        request inside an in-flight batch (its answer or error has not
+        been handed out, so a duplicate would collide in the result
+        dict)."""
+        ids = {r[0] for r in self._pending}
+        for _seq, units in self._pipe.metas():
+            for u in units:
+                ids.update(rid for rid, _ in u.items)
+        return ids
+
+    # --------------------------------------------------------- flush stages
+    def _stage_plan(self, seq: int, pending) -> List["_PlannedStore"]:
+        """Host stage 1: group requests by (store, codec parameters) and
+        seek + walk each store's covering chunks.  Failing stores are
+        quarantined here -- recorded in ``last_errors`` when the batch is
+        cut, before any reconstruction of it runs."""
+        from repro.store import plan_windows
+        self._trace("plan", seq)
         by_store: Dict[tuple, List[Tuple[str, int, int, int]]] = {}
         headers: Dict[Tuple[str, int], object] = {}  # per-flush header memo
         for rid, sid, channel, start, stop, _ts in pending:
@@ -580,33 +743,76 @@ class DecompressionService:
             by_store.setdefault((sid,) + pkey, []).append(
                 (rid, channel, start, stop))
 
-        # stage 1: plan per store (parse + shared gather, host-side)
-        groups: Dict[tuple, List[Tuple[str, int, object]]] = {}
+        planned = []
         for (sid, *pkey), reqs in by_store.items():
+            ranges = [(c, i, j) for _, c, i, j in reqs]
             try:
-                hdr, parts = plan_parts(
-                    self._stores[sid], [(c, i, j) for _, c, i, j in reqs],
-                    parse=self._parse_for(sid))
+                hdr, windows = plan_windows(self._stores[sid], ranges,
+                                            parse=self._parse_for(sid))
             except Exception as e:  # quarantine this store's requests
                 for rid, _, _, _ in reqs:
                     self.last_errors[rid] = e
                 self.stats["failed_requests"] += len(reqs)
                 continue
-            for (rid, _, i, j), part in zip(reqs, parts):
-                bucket = (1 << (j - i - 1).bit_length()
-                          if self.backend == "numpy" else 0)
-                gkey = (tuple(pkey), self._seeds[sid], bucket)
-                groups.setdefault(gkey, []).append((rid, j - i, part))
+            planned.append(_PlannedStore(sid, tuple(pkey), reqs, ranges,
+                                         hdr, windows))
+        return planned
 
-        # stage 2: one padded reconstruct dispatch per compatible group.
-        # A device group merges length buckets, but not without limit: the
-        # padded batch is R * longest blocks, which the policy's
-        # max_batch_blocks (a bound on the SUM of requested blocks) does
-        # not cap -- one huge request next to many tiny ones would blow
-        # the padding up arbitrarily.  Groups whose padded size exceeds
-        # both the policy bound and 4x their real work are re-split by
-        # pow-2 length bucket before dispatch.
-        units: List[Tuple[tuple, List[Tuple[str, int, object]]]] = []
+    def _stage_gather(self, seq: int,
+                      planned: List["_PlannedStore"]) -> List["_Unit"]:
+        """Host stage 2: one shared byte gather per store, then group
+        compatible parts across stores, resolve each group's backend
+        (``"auto"`` = measured-best) and pad each group into ONE plan."""
+        from repro.core import decode as decode_mod
+        from repro.store import gather_parts
+        self._trace("gather", seq)
+        pregroups: Dict[tuple, List[Tuple[str, int, object]]] = {}
+        for ps in planned:
+            try:
+                parts = gather_parts(self._stores[ps.store_id], ps.header,
+                                     ps.windows, ps.ranges)
+            except Exception as e:  # quarantine this store's requests
+                for rid, _, _, _ in ps.requests:
+                    self.last_errors[rid] = e
+                self.stats["failed_requests"] += len(ps.requests)
+                continue
+            pre = (ps.pkey, self._seeds[ps.store_id])
+            for (rid, _, i, j), part in zip(ps.requests, parts):
+                pregroups.setdefault(pre, []).append((rid, j - i, part))
+
+        # resolve the backend per MERGED group at its true dispatch size
+        # (the sum of the group's requested blocks): a flush of many small
+        # requests dispatches as one large batch, and it is that batch --
+        # not any single request -- the autotuner must route
+        groups: Dict[tuple, List[Tuple[str, int, object]]] = {}
+        for (pkey, seed), items in pregroups.items():
+            mode, B, dt_str, vr = pkey
+            total = sum(n for _, n, _ in items)
+            if (self.backend == "auto" and self._pipe.inflight
+                    and not decode_mod.autotune_cached(mode, dt_str, total)):
+                # cold combination: quiesce the pipeline before the timing
+                # probe -- an in-flight reconstruct would contend with the
+                # measurements and poison the persisted choice.  The
+                # drained batches' answers are delivered with this flush.
+                for (sq, bu), oc, ex in self._pipe.drain():
+                    self._early_out.update(
+                        self._stage_emit(sq, bu, oc, ex))
+            eff = decode_mod.resolve_backend(self.backend, mode, dt_str,
+                                             total, vr, B)
+            if eff == "numpy":
+                # host path: split by pow-2 length buckets (padding
+                # control, mirroring the write side's block_bucket)
+                for it in items:
+                    groups.setdefault(
+                        (pkey, seed, decode_mod._pow2(it[1]), eff),
+                        []).append(it)
+            else:
+                groups[(pkey, seed, 0, eff)] = items
+
+        # a merged (device) group must not let one huge request pad many
+        # tiny ones: beyond both the policy block budget and 4x the real
+        # work, re-split by pow-2 length bucket before dispatch
+        split: List[Tuple[tuple, List[Tuple[str, int, object]]]] = []
         for gkey, items in groups.items():
             lens = [n for _, n, _ in items]
             padded = len(items) * max(lens)
@@ -614,30 +820,65 @@ class DecompressionService:
                     and padded > self.policy.max_batch_blocks):
                 subs: Dict[int, List[Tuple[str, int, object]]] = {}
                 for it in items:
-                    subs.setdefault(1 << (it[1] - 1).bit_length(),
+                    subs.setdefault(decode_mod._pow2(it[1]),
                                     []).append(it)
-                units.extend((gkey, sub) for sub in subs.values())
+                split.extend((gkey, sub) for sub in subs.values())
             else:
-                units.append((gkey, items))
-        out: Dict[str, np.ndarray] = {}
-        for ((mode, B, dt_str, vr), seed, _bucket), items in units:
-            parts = [part for _, _, part in items]
+                split.append((gkey, items))
+
+        units: List[_Unit] = []
+        for ((mode, B, dt_str, vr), seed, _bucket, eff), items in split:
             try:
-                plan, nbm = decode_mod.pad_parts(mode, B, np.dtype(dt_str),
-                                                 vr, parts, seed=seed)
-                body = decode_mod.reconstruct(plan, backend=self.backend)
+                plan, nbm = decode_mod.pad_parts(
+                    mode, B, np.dtype(dt_str), vr,
+                    [part for _, _, part in items], seed=seed)
             except Exception as e:
                 for rid, _, _ in items:
                     self.last_errors[rid] = e
                 self.stats["failed_requests"] += len(items)
                 continue
-            body = body.reshape(len(items), nbm, B)
+            units.append(_Unit(eff, B, [(rid, n) for rid, n, _ in items],
+                               plan, nbm))
+        return units
+
+    def _stage_reconstruct(self, seq: int, units: List["_Unit"]) -> list:
+        """Device stage: one engine dispatch per unit.  Runs under the
+        stage executor -- possibly on its worker thread, overlapping the
+        next batch's host stages -- so it must not touch shared service
+        state: failures are captured per unit and accounted at emit."""
+        self._trace("reconstruct", seq)
+        from repro.core import decode as decode_mod
+        outcomes = []
+        for u in units:
+            try:
+                body = decode_mod.reconstruct(u.plan, backend=u.backend)
+            except Exception as e:
+                outcomes.append((u, None, e))
+            else:
+                outcomes.append((u, body, None))
+        return outcomes
+
+    def _stage_emit(self, seq: int, units: List["_Unit"], outcomes,
+                    exc: Optional[BaseException]) -> Dict[str, np.ndarray]:
+        """Host stage 4: slice each request's blocks out of its unit's
+        padded body, account stats, and quarantine reconstruct failures.
+        Runs in the caller's thread when the batch is collected."""
+        self._trace("emit", seq)
+        out: Dict[str, np.ndarray] = {}
+        if exc is not None:  # the whole reconstruct stage died
+            outcomes = [(u, None, exc) for u in units]
+        for u, body, u_exc in outcomes or []:
+            if u_exc is not None:
+                for rid, _ in u.items:
+                    self.last_errors[rid] = u_exc
+                self.stats["failed_requests"] += len(u.items)
+                continue
+            body = body.reshape(len(u.items), u.nbm, u.block_size)
             self.stats["dispatches"] += 1
-            for r, (rid, n, _) in enumerate(items):
+            for r, (rid, n) in enumerate(u.items):
                 out[rid] = body[r, :n].ravel()
                 self.stats["blocks_out"] += n
-            self.stats["requests"] += len(items)
-        self.stats["flushes"] += 1
+            self.stats["requests"] += len(u.items)
         return out
 
     # ------------------------------------------------------------- internals

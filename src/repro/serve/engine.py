@@ -13,8 +13,8 @@ and cut one padded device batch when the policy trips.
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass, field
-from typing import Any, Callable, List, Optional
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -36,6 +36,13 @@ class FlushPolicy:
     has waited this long, however little has accumulated.  Any threshold
     trips a flush; callers may always flush earlier (shutdown).
 
+    ``pipeline_depth`` bounds how many flushed batches a *pipelined*
+    coalescer (``repro.serve.pipeline``) may hold in flight: 1 is the
+    alternating plan-then-reconstruct path (a flush returns its own
+    batch's answers); 2 is double-buffering (host planning of batch N+1
+    overlaps device reconstruction of batch N, and a flush returns the
+    PREVIOUS batch's answers -- ``drain()`` collects the rest).
+
     The policy is pure: coalescers measure the age with their own
     (injectable) clock and pass it in, so deadline behaviour is unit
     testable without real sleeps.
@@ -44,6 +51,11 @@ class FlushPolicy:
     max_batch_blocks: int = 4096
     max_batch_streams: int = 256
     max_age_s: Optional[float] = None
+    pipeline_depth: int = 1
+
+    def __post_init__(self):
+        if self.pipeline_depth < 1:
+            raise ValueError("pipeline_depth must be >= 1")
 
     def should_flush(self, n_streams: int, n_blocks: int,
                      age_s: Optional[float] = None) -> bool:

@@ -16,7 +16,8 @@ Sec. 7):
 from .container import (Container, ContainerFormatError, ContainerWriter,
                         pack)
 from .reader import (ParsedChunk, decode_channels, decode_range,
-                     decode_ranges, parse_chunk, plan_parts)
+                     decode_ranges, gather_parts, parse_chunk, plan_parts,
+                     plan_windows)
 
 __all__ = [
     "Container",
@@ -25,6 +26,8 @@ __all__ = [
     "pack",
     "ParsedChunk",
     "parse_chunk",
+    "plan_windows",
+    "gather_parts",
     "plan_parts",
     "decode_range",
     "decode_ranges",

@@ -39,6 +39,8 @@ from .container import Container
 __all__ = [
     "ParsedChunk",
     "parse_chunk",
+    "plan_windows",
+    "gather_parts",
     "plan_parts",
     "decode_range",
     "decode_ranges",
@@ -139,18 +141,21 @@ def _parse_window(store: Container, chunks: np.ndarray, gb0: int,
     return _Window(hdr, gb0, fill0, np.concatenate([snap, pay]), src, h, bo)
 
 
-def plan_parts(store: Container, requests: Sequence[Tuple[int, int, int]],
-               parse: ParseFn = parse_chunk
-               ) -> Tuple[StreamHeader, List[PlanPart]]:
-    """Seek + parse + gather for many ``(channel, start, stop)`` requests.
+def plan_windows(store: Container, requests: Sequence[Tuple[int, int, int]],
+                 parse: ParseFn = parse_chunk
+                 ) -> Tuple[StreamHeader, List[_Window]]:
+    """The *plan* stage of a batched range decode: seek + walk only.
 
-    Returns the (shared) stream header and one source-resolved ``PlanPart``
-    per request.  All requests share ONE payload/base gather over the raw
-    container bytes; requests whose windows share a chunk walk it once
-    (per-call memo -- the serving layer's LRU composes on top for
-    cross-call reuse).  Heterogeneous codec parameters across requests
-    raise: split such requests into separate calls (the serving layer
-    groups by parameter key before calling)."""
+    For many ``(channel, start, stop)`` requests, locate each request's
+    covering chunks via the footer index and walk their decision bytes
+    into ``_Window``\\ s (hit sources resolved, snapshot entries prepended
+    as virtual misses).  No value bytes are touched yet -- that is
+    :func:`gather_parts`, the stage a pipelined server may run later
+    (``repro.serve.pipeline``).  Requests whose windows share a chunk walk
+    it once (per-call memo; the serving layer's LRU composes on top).
+    Heterogeneous codec parameters across requests raise: split such
+    requests into separate calls (the serving layer groups by parameter
+    key before calling)."""
     memo: Dict[int, ParsedChunk] = {}
 
     def parse_once(st, k):
@@ -173,6 +178,15 @@ def plan_parts(store: Container, requests: Sequence[Tuple[int, int, int]],
                 "batched ranges must share mode/block_size/dtype/value_range"
                 "; split heterogeneous requests into separate decode_ranges "
                 "calls")
+    return hdr, windows
+
+
+def gather_parts(store: Container, hdr: StreamHeader,
+                 windows: Sequence[_Window],
+                 requests: Sequence[Tuple[int, int, int]]) -> List[PlanPart]:
+    """The *gather* stage: one shared fancy-index pass over the raw
+    container bytes resolving every planned window's in-range payload
+    (and base) offsets into source-resolved ``PlanPart``\\ s."""
     dt = np.dtype(hdr.dtype)
     std = hdr.mode == stream_mod.MODE_STD
     P = hdr.block_size if std else hdr.block_size - 1
@@ -200,7 +214,18 @@ def plan_parts(store: Container, requests: Sequence[Tuple[int, int, int]],
             is_hit=w.is_hit[start - w.gb0:start - w.gb0 + n],
             block_idx=np.arange(start, stop, dtype=np.int64)))
         pos += n
-    return hdr, parts
+    return parts
+
+
+def plan_parts(store: Container, requests: Sequence[Tuple[int, int, int]],
+               parse: ParseFn = parse_chunk
+               ) -> Tuple[StreamHeader, List[PlanPart]]:
+    """Seek + parse + gather for many ``(channel, start, stop)`` requests:
+    :func:`plan_windows` followed by :func:`gather_parts`.  Returns the
+    (shared) stream header and one source-resolved ``PlanPart`` per
+    request."""
+    hdr, windows = plan_windows(store, requests, parse=parse)
+    return hdr, gather_parts(store, hdr, windows, requests)
 
 
 def decode_range(store: Container, start_block: int, stop_block: int,

@@ -8,7 +8,6 @@ O(1) in the number of microbatches.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable, NamedTuple, Optional
 
 import jax

@@ -1,0 +1,140 @@
+"""CI perf gate (ISSUE 5): scripts/bench_gate.py must fail on an injected
+synthetic regression -- the acceptance criterion -- and absorb the noise
+sources it is deployed against (uniformly slower runners, per-bench
+jitter, renamed/removed benches)."""
+import importlib.util
+import json
+import os
+
+import pytest
+
+_SPEC = importlib.util.spec_from_file_location(
+    "bench_gate", os.path.join(os.path.dirname(__file__), "..", "scripts",
+                               "bench_gate.py"))
+bench_gate = importlib.util.module_from_spec(_SPEC)
+_SPEC.loader.exec_module(bench_gate)
+
+BASE = {"suiteA/row1": 100.0, "suiteA/row2": 250.0, "suiteB/row1": 40.0,
+        "suiteB/row2": 900.0, "suiteC/row1": 10.0}
+
+
+def _write(path, results, extra=None):
+    doc = {"version": 1, "quick": True, "failed": [],
+           "results": {k: {"us_per_call": v, "derived": ""}
+                       for k, v in results.items()}}
+    doc.update(extra or {})
+    path.write_text(json.dumps(doc))
+    return str(path)
+
+
+@pytest.fixture
+def files(tmp_path):
+    def make(current, baseline=BASE, extra=None):
+        return (_write(tmp_path / "current.json", current),
+                _write(tmp_path / "baseline.json", baseline, extra))
+    return make
+
+
+def test_identical_results_pass(files):
+    cur, base = files(dict(BASE))
+    assert bench_gate.main([cur, base]) == 0
+
+
+def test_injected_synthetic_regression_fails(files, capsys):
+    """The acceptance criterion: one bench artificially 2x slower must
+    exit non-zero (the other benches unchanged)."""
+    slow = {**BASE, "suiteA/row2": BASE["suiteA/row2"] * 2.0}
+    cur, base = files(slow)
+    assert bench_gate.main([cur, base]) == 1
+    out = capsys.readouterr().out
+    assert "REGRESSION" in out and "suiteA/row2" in out
+
+
+def test_uniformly_slower_machine_passes_normalized_fails_absolute(files):
+    """A cold CI runner that is 3x slower across the board is machine
+    noise, not a regression: normalized mode (the default) passes;
+    --absolute (pinned-hardware trajectories) fails."""
+    slow_all = {k: v * 3.0 for k, v in BASE.items()}
+    cur, base = files(slow_all)
+    assert bench_gate.main([cur, base]) == 0
+    assert bench_gate.main([cur, base, "--absolute"]) == 1
+
+
+def test_within_tolerance_passes(files):
+    cur, base = files({**BASE, "suiteB/row1": BASE["suiteB/row1"] * 1.2})
+    assert bench_gate.main([cur, base]) == 0  # 1.2x < default 1.25x
+
+
+def test_per_bench_override_loosens_one_suite(files):
+    slow = {**BASE, "suiteA/row2": BASE["suiteA/row2"] * 1.8}
+    cur, base = files(slow)
+    assert bench_gate.main([cur, base]) == 1
+    # longest-prefix override: the jittery suite gets 100%
+    assert bench_gate.main([cur, base, "--override", "suiteA/=1.0"]) == 0
+    # but the override must not loosen OTHER suites
+    slow2 = {**slow, "suiteB/row2": BASE["suiteB/row2"] * 1.8}
+    cur2, base2 = files(slow2)
+    assert bench_gate.main([cur2, base2, "--override", "suiteA/=1.0"]) == 1
+
+
+def test_baseline_embedded_tolerances(files):
+    slow = {**BASE, "suiteA/row2": BASE["suiteA/row2"] * 1.8}
+    cur, base = files(slow, extra={"tolerances": {"suiteA/": 1.0}})
+    assert bench_gate.main([cur, base]) == 0
+
+
+def test_missing_bench_fails_unless_allowed(files, capsys):
+    gone = {k: v for k, v in BASE.items() if k != "suiteC/row1"}
+    cur, base = files(gone)
+    assert bench_gate.main([cur, base]) == 1
+    assert "MISSING" in capsys.readouterr().out
+    assert bench_gate.main([cur, base, "--allow-missing"]) == 0
+
+
+def test_new_bench_passes_and_is_reported(files, capsys):
+    cur, base = files({**BASE, "suiteD/new": 5.0})
+    assert bench_gate.main([cur, base]) == 0
+    assert "suiteD/new" in capsys.readouterr().out
+
+
+def test_few_shared_benches_fall_back_to_absolute(files, capsys):
+    """Normalized mode is meaningless on 2 rows (the median IS the
+    regression): the gate must fall back to absolute and still catch it."""
+    cur, base = files({"suiteA/row1": 300.0, "suiteA/row2": 250.0},
+                      baseline={"suiteA/row1": 100.0, "suiteA/row2": 250.0})
+    assert bench_gate.main([cur, base]) == 1
+    assert "falling back to absolute" in capsys.readouterr().out
+
+
+def test_unreadable_input_is_usage_error(tmp_path, files):
+    cur, base = files(dict(BASE))
+    missing = str(tmp_path / "nope.json")
+    assert bench_gate.main([missing, base]) == 2
+    bad = tmp_path / "bad.json"
+    bad.write_text("{}")
+    assert bench_gate.main([cur, str(bad)]) == 2
+
+
+def test_run_py_baseline_refresh_preserves_tolerances(tmp_path):
+    """Regenerating a committed baseline in place must carry over the
+    hand-embedded per-bench tolerances, or the gate silently reverts to
+    the default and starts flaking."""
+    from benchmarks.run import carry_tolerances
+    path = tmp_path / "base.json"
+    path.write_text(json.dumps({"version": 1, "results": {},
+                                "tolerances": {"suiteA/": 2.0}}))
+    doc = carry_tolerances(str(path), {"version": 1, "results": {"x": {}}})
+    assert doc["tolerances"] == {"suiteA/": 2.0}
+    # fresh path (no existing file): no tolerances key invented
+    doc = carry_tolerances(str(tmp_path / "new.json"), {"version": 1})
+    assert "tolerances" not in doc
+
+
+def test_run_py_rows_to_results_parses_and_skips_garbage():
+    from benchmarks.run import rows_to_results
+    rows = ["a/b,12.5,blocks=3;x=1", "bad row without commas",
+            "c/d,7.0,note,with,commas"]
+    res = rows_to_results(rows)
+    assert res == {"a/b": {"us_per_call": 12.5, "derived": "blocks=3;x=1"},
+                   "c/d": {"us_per_call": 7.0,
+                           "derived": "note,with,commas"}}

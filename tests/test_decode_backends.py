@@ -293,7 +293,8 @@ def test_host_flush_buckets_device_flush_merges():
     nb = Container(packed).total_blocks(0)
     reqs = [("s1", 0, 1), ("s2", 0, nb)]  # 1 block vs nb blocks
 
-    host = DecompressionService(policy=FlushPolicy(max_batch_streams=2))
+    host = DecompressionService(policy=FlushPolicy(max_batch_streams=2),
+                                backend="numpy")
     host.attach("s", packed)
     for rid, i, j in reqs[:1]:
         host.submit(rid, "s", i, j)

@@ -3,7 +3,6 @@ import os
 import subprocess
 import sys
 
-import pytest
 
 SCRIPT = r"""
 import os

@@ -1,0 +1,540 @@
+"""Pipelined serving decode (ISSUE 5): stage ordering, byte identity of
+pipelined vs alternating flushes, quarantine across stage boundaries, and
+the measured backend autotuner.
+
+The load-bearing properties: (1) with ``pipeline_depth`` 2 the service
+really does run batch N+1's host stages while batch N's reconstruct is in
+flight -- proven with a deterministic lazy executor whose futures only
+execute when collected, so the recorded stage order is the pipeline's,
+not a thread scheduler's; (2) however deep the pipeline and whichever
+backend reconstructs, every answer is byte-identical to the alternating
+depth-1 flush (itself pinned byte-identical to ``decode_stream`` slices);
+(3) a store failing in ANY stage fails alone, in ``last_errors``, without
+poisoning batches ahead of or behind it in the pipeline.
+"""
+import json
+import time
+
+import pytest
+
+from conftest import GOLDEN_CASES, GOLDEN_BLOCK, golden_codec_kwargs, \
+    golden_signal
+from repro.core import IdealemCodec, StreamFormatError
+from repro.core import decode as decode_mod
+from repro.core import stream as stream_mod
+from repro.core.stream import decode_stream
+from repro.serve import (DecompressionService, FlushPolicy, StageFuture,
+                         StagePipeline, SyncExecutor, ThreadStageExecutor)
+from repro.store import Container, pack
+
+BACKENDS = ["numpy", "jax", "pallas"]
+FEED = 100
+
+
+def _session_stream(name, feed=FEED):
+    codec = IdealemCodec(**golden_codec_kwargs(name))
+    x = golden_signal(name)
+    s = codec.session()
+    segs = [s.feed(x[lo:lo + feed]) for lo in range(0, len(x), feed)]
+    segs.append(s.finish())
+    return b"".join(segs)
+
+
+_PREPPED = {}
+
+
+def _prepped(name):
+    if name not in _PREPPED:
+        blob = _session_stream(name)
+        _PREPPED[name] = (pack(blob), decode_stream(blob))
+    return _PREPPED[name]
+
+
+# ----------------------------------------------- deterministic fake executor
+class LazyFuture:
+    """Runs its stage only when collected -- 'in flight' is a visible,
+    test-controlled state instead of a thread race."""
+
+    def __init__(self, fn, args, log, tag):
+        self._fn, self._args, self._log, self._tag = fn, args, log, tag
+
+    def result(self):
+        self._log.append(("execute", self._tag))
+        return self._fn(*self._args)
+
+
+class LazyExecutor:
+    def __init__(self, log):
+        self.log = log
+        self._n = 0
+
+    def submit(self, fn, *args):
+        self._n += 1
+        self.log.append(("submit", self._n))
+        return LazyFuture(fn, args, self.log, self._n)
+
+    def shutdown(self):
+        self.log.append(("shutdown", None))
+
+
+# ------------------------------------------------------------ stage ordering
+def test_plan_of_next_batch_runs_while_reconstruct_in_flight():
+    """The pipeline invariant itself: with depth 2, batch 2's plan+gather
+    stages run BEFORE batch 1's reconstruct executes (batch 1 is in
+    flight, lazily run only when batch 2's flush collects it)."""
+    packed, y = _prepped("std_D32")
+    log = []
+    svc = DecompressionService(
+        policy=FlushPolicy(max_batch_streams=2, pipeline_depth=2),
+        backend="numpy", executor=LazyExecutor(log),
+        trace=lambda stage, seq: log.append((stage, seq)))
+    svc.attach("s", packed)
+
+    assert svc.submit("a", "s", 0, 2) is None
+    r1 = svc.submit("b", "s", 2, 4)        # trips flush 1
+    assert r1 == {} and svc.inflight == 1  # batch 1 parked, not answered
+    assert svc.submit("c", "s", 4, 6) is None
+    r2 = svc.submit("d", "s", 6, 8)        # trips flush 2, collects batch 1
+    assert set(r2) == {"a", "b"}
+    assert set(svc.drain()) == {"c", "d"}
+    assert svc.inflight == 0
+
+    i = log.index
+    # batch 2's host stages precede batch 1's reconstruct execution
+    assert i(("plan", 2)) < i(("execute", 1))
+    assert i(("gather", 2)) < i(("execute", 1))
+    # and each batch walks plan -> gather -> reconstruct -> emit in order
+    for seq in (1, 2):
+        assert (i(("plan", seq)) < i(("gather", seq))
+                < i(("reconstruct", seq)) < i(("emit", seq)))
+    assert svc.stats["inflight_peak"] == 2
+
+
+def test_depth1_is_the_alternating_path():
+    """pipeline_depth 1 (the default policy): a flush answers its own
+    batch synchronously and nothing is ever left in flight."""
+    packed, y = _prepped("std_D32")
+    log = []
+    svc = DecompressionService(
+        policy=FlushPolicy(max_batch_streams=2), backend="numpy",
+        trace=lambda stage, seq: log.append((stage, seq)))
+    svc.attach("s", packed)
+    assert svc.submit("a", "s", 0, 2) is None
+    out = svc.submit("b", "s", 2, 4)
+    assert set(out) == {"a", "b"} and svc.inflight == 0
+    assert log == [("plan", 1), ("gather", 1), ("reconstruct", 1),
+                   ("emit", 1)]
+    assert svc.drain() == {}
+    B = GOLDEN_BLOCK
+    assert out["a"].tobytes() == y[0:2 * B].tobytes()
+
+
+# -------------------------------------------------- pipelined == alternating
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("name", sorted(GOLDEN_CASES))
+def test_pipelined_flushes_byte_identical(name, backend):
+    """Every golden case x backend: a depth-3 pipelined service (real
+    worker thread) answers every request byte-identically to the
+    alternating depth-1 service and to the sequential decode's slices."""
+    packed, y = _prepped(name)
+    nb = Container(packed).total_blocks(0)
+    B = GOLDEN_BLOCK
+    reqs = [(i, min(i + 3, nb)) for i in range(0, nb, 3)] + [(0, nb)]
+
+    def run(depth):
+        svc = DecompressionService(
+            policy=FlushPolicy(max_batch_streams=3, pipeline_depth=depth),
+            backend=backend)
+        svc.attach("s", packed)
+        out = {}
+        for k, (i, j) in enumerate(reqs):
+            got = svc.submit(f"r{k}", "s", i, j)
+            if got:
+                out.update(got)
+        out.update(svc.close())
+        assert not svc.last_errors
+        return out
+
+    alt, pip = run(1), run(3)
+    assert set(alt) == set(pip) == {f"r{k}" for k in range(len(reqs))}
+    for k, (i, j) in enumerate(reqs):
+        want = y[i * B:j * B].tobytes()
+        assert alt[f"r{k}"].tobytes() == want, (name, backend, k)
+        assert pip[f"r{k}"].tobytes() == want, (name, backend, k)
+
+
+# ------------------------------------------------- quarantine across stages
+def _corrupt_copy(packed: bytes) -> bytes:
+    """Corrupt the first decision byte of a mid-stream chunk body (0xFF =
+    bogus overwrite prefix => the walk overruns the indexed chunk length);
+    attach-time validation still passes (footer CRC covers the index)."""
+    store = Container(packed)
+    off = (int(store._cols["offset"][store.n_chunks - 2])
+           + stream_mod._HDR.size)
+    bad = bytearray(packed)
+    bad[off] = 0xFF
+    return bytes(bad)
+
+
+def test_plan_failure_quarantines_store_mid_pipeline():
+    """A store whose PLAN stage raises while another batch is in flight
+    fails alone and immediately (last_errors at flush time); neither the
+    in-flight batch nor healthy stores of the same batch are poisoned."""
+    packed, y = _prepped("std_D32")
+    nb = Container(packed).total_blocks(0)
+    B = GOLDEN_BLOCK
+    log = []
+    svc = DecompressionService(
+        policy=FlushPolicy(max_batch_streams=2, pipeline_depth=2),
+        backend="numpy", executor=LazyExecutor(log))
+    svc.attach("good", packed)
+    svc.attach("bad", _corrupt_copy(packed))
+
+    assert svc.submit("g1", "good", 0, 2) is None
+    assert svc.submit("g2", "good", 2, 4) == {}   # batch 1 in flight
+    assert svc.submit("rb", "bad", 0, nb) is None  # walks the corrupt chunk
+    r2 = svc.submit("rg", "good", 3, 7)            # trips flush 2
+    # the bad store was quarantined when batch 2 was CUT -- batch 1 had
+    # not reconstructed yet
+    assert isinstance(svc.last_errors["rb"], StreamFormatError)
+    assert set(r2) == {"g1", "g2"}
+    rest = svc.close()
+    assert set(rest) == {"rg"}
+    assert rest["rg"].tobytes() == y[3 * B:7 * B].tobytes()
+    assert svc.stats["failed_requests"] == 1
+
+
+def test_reconstruct_failure_quarantines_unit(monkeypatch):
+    """A reconstruct-stage failure surfaces at emit -- only the failing
+    unit's requests, with every other unit of the batch still answered."""
+    std_packed, y_std = _prepped("std_D32")
+    delta_packed, y_delta = _prepped("delta_D32")
+    B = GOLDEN_BLOCK
+    real = decode_mod.reconstruct
+
+    def boom(plan, backend="numpy"):
+        if plan.mode == decode_mod.MODE_DELTA:
+            raise RuntimeError("device lost")
+        return real(plan, backend=backend)
+
+    monkeypatch.setattr(decode_mod, "reconstruct", boom)
+    log = []
+    svc = DecompressionService(
+        policy=FlushPolicy(max_batch_streams=2, pipeline_depth=2),
+        backend="numpy", executor=LazyExecutor(log))
+    svc.attach("std", std_packed)
+    svc.attach("delta", delta_packed)
+    assert svc.submit("rs", "std", 0, 4) is None
+    assert svc.submit("rd", "delta", 0, 4) == {}  # one flush, two units
+    out = svc.close()
+    assert set(out) == {"rs"}
+    assert out["rs"].tobytes() == y_std[: 4 * B].tobytes()
+    assert isinstance(svc.last_errors["rd"], RuntimeError)
+    assert svc.stats["failed_requests"] == 1
+    assert svc.stats["dispatches"] == 1  # only the healthy unit dispatched
+
+
+def test_dead_executor_fails_whole_batch():
+    """If the stage executor itself dies, every request of the batch is
+    reported in last_errors -- never silently dropped."""
+
+    class ExplodingExecutor:
+        def submit(self, fn, *args):
+            fut = StageFuture()
+            fut.set_exception(RuntimeError("executor died"))
+            return fut
+
+        def shutdown(self):
+            pass
+
+    packed, _ = _prepped("std_D32")
+    svc = DecompressionService(policy=FlushPolicy(max_batch_streams=2),
+                               backend="numpy",
+                               executor=ExplodingExecutor())
+    svc.attach("s", packed)
+    svc.submit("a", "s", 0, 2)
+    out = svc.submit("b", "s", 2, 4)
+    assert out == {}
+    assert isinstance(svc.last_errors["a"], RuntimeError)
+    assert isinstance(svc.last_errors["b"], RuntimeError)
+    assert svc.stats["failed_requests"] == 2
+
+
+def test_completed_batches_not_stranded_without_new_traffic():
+    """Once traffic stops, a parked batch whose reconstruct has finished
+    must come out of poll() / an empty flush() -- not only drain()."""
+    packed, y = _prepped("std_D32")
+    B = GOLDEN_BLOCK
+    svc = DecompressionService(
+        policy=FlushPolicy(max_batch_streams=2, pipeline_depth=2),
+        backend="numpy")
+    svc.attach("s", packed)
+    svc.submit("a", "s", 0, 2)
+    assert svc.submit("b", "s", 2, 4) == {}   # batch parked in flight
+    # the worker thread finishes promptly; poll (the timer hook) must
+    # deliver without a new flush being cut
+    deadline = time.monotonic() + 5.0
+    out = None
+    while out is None and time.monotonic() < deadline:
+        out = svc.poll()
+    assert out is not None and set(out) == {"a", "b"}
+    assert out["a"].tobytes() == y[: 2 * B].tobytes()
+    assert svc.flush() == {} and svc.poll() is None  # nothing left
+
+    # same, via an explicit empty flush
+    svc.submit("c", "s", 4, 6)
+    assert svc.submit("d", "s", 6, 8) == {}
+    deadline = time.monotonic() + 5.0
+    out = {}
+    while not out and time.monotonic() < deadline:
+        out = svc.flush()
+    assert set(out) == {"c", "d"}
+    svc.close()
+
+
+def test_closed_service_rejects_new_work():
+    """close() shuts the executor down; later submits must raise instead
+    of queueing onto a dead worker (which would hang forever) -- but a
+    second close() is a safe no-op."""
+    packed, _ = _prepped("std_D32")
+    svc = DecompressionService(
+        policy=FlushPolicy(max_batch_streams=2, pipeline_depth=2),
+        backend="numpy")
+    svc.attach("s", packed)
+    svc.submit("a", "s", 0, 2)
+    out = svc.close()
+    assert set(out) == {"a"}
+    assert svc.close() == {}  # idempotent
+    with pytest.raises(RuntimeError):
+        svc.submit("b", "s", 0, 2)
+    with pytest.raises(RuntimeError):
+        svc.flush()
+
+
+def test_duplicate_id_rejected_while_batch_in_flight():
+    """A request id stays reserved while its batch is in flight: reusing
+    it would silently collide in the answer dict at emit."""
+    packed, _ = _prepped("std_D32")
+    svc = DecompressionService(
+        policy=FlushPolicy(max_batch_streams=2, pipeline_depth=2),
+        backend="numpy", executor=LazyExecutor([]))
+    svc.attach("s", packed)
+    svc.submit("a", "s", 0, 2)
+    assert svc.submit("b", "s", 2, 4) == {}  # batch with 'a','b' in flight
+    with pytest.raises(KeyError):
+        svc.submit("a", "s", 4, 6)
+    out = svc.drain()
+    assert set(out) == {"a", "b"}
+    svc.submit("a", "s", 4, 6)               # delivered: id free again
+
+
+def test_cold_autotune_probe_quiesces_pipeline(monkeypatch):
+    """With backend="auto" at depth 2, a COLD (mode, dtype, bucket)
+    combination must drain the in-flight batch before the timing probe
+    runs (an overlapping reconstruct would skew the measurements), and
+    the drained answers ride out with the same flush."""
+    packed, y = _prepped("std_D32")
+    B = GOLDEN_BLOCK
+    decode_mod.reset_autotune()
+    log = []
+    real_probe = decode_mod._probe_autotune
+
+    def spy_probe(*args, **kw):
+        log.append(("probe",))
+        return real_probe(*args, **kw)
+
+    monkeypatch.setattr(decode_mod, "_probe_autotune", spy_probe)
+    svc = DecompressionService(
+        policy=FlushPolicy(max_batch_streams=2, pipeline_depth=2),
+        backend="auto", executor=LazyExecutor(log))
+    svc.attach("s", packed)
+    svc.submit("a", "s", 0, 2)
+    r1 = svc.submit("b", "s", 2, 4)   # flush 1: cold probe, no in-flight yet
+    assert ("probe",) in log
+    n_probes = log.count(("probe",))
+    assert r1 == {}                   # batch 1 parked
+    decode_mod.reset_autotune()       # force the NEXT flush cold again
+    svc.submit("c", "s", 4, 6)
+    r2 = svc.submit("d", "s", 6, 8)   # flush 2: cold + batch 1 in flight
+    # the in-flight batch was executed (drained) BEFORE the new probe ran
+    i_exec1 = log.index(("execute", 1))
+    i_probe2 = len(log) - 1 - log[::-1].index(("probe",))
+    assert log.count(("probe",)) == n_probes + 1
+    assert i_exec1 < i_probe2
+    # and its answers were not swallowed: they ride out with flush 2
+    assert set(r2) == {"a", "b"}
+    out = svc.close()
+    assert set(out) == {"c", "d"}
+    for rid, i, j in [("a", 0, 2), ("b", 2, 4)]:
+        assert r2[rid].tobytes() == y[i * B:j * B].tobytes()
+    for rid, i, j in [("c", 4, 6), ("d", 6, 8)]:
+        assert out[rid].tobytes() == y[i * B:j * B].tobytes()
+
+
+def test_auto_resolves_at_merged_dispatch_size(monkeypatch):
+    """The autotuner must be consulted at the MERGED group's total block
+    count (the real dispatch), not at per-request sizes."""
+    packed, _ = _prepped("std_D32")
+    seen = []
+    real = decode_mod.resolve_backend
+
+    def spy(backend, mode, dtype, nb, value_range=None, block_size=32):
+        if backend == "auto":
+            seen.append(nb)
+        return real("numpy", mode, dtype, nb, value_range, block_size)
+
+    monkeypatch.setattr(decode_mod, "resolve_backend", spy)
+    svc = DecompressionService(policy=FlushPolicy(max_batch_streams=4))
+    svc.attach("s", packed)
+    for k, (i, j) in enumerate([(0, 2), (4, 6), (8, 10)]):
+        svc.submit(f"r{k}", "s", i, j)
+    out = svc.submit("r3", "s", 12, 14)
+    assert len(out) == 4
+    assert seen == [8]  # one resolution, at 4 requests x 2 blocks
+
+
+# ------------------------------------------------------- pipeline primitives
+def test_stage_pipeline_window_and_error_delivery():
+    # lazy (never "done") futures: the depth window is what forces
+    # collection, so the bound is observable
+    pipe = StagePipeline(LazyExecutor([]), depth=2)
+    assert pipe.push("m1", lambda: 1) == []        # within the window
+    assert pipe.inflight == 1
+    done = pipe.push("m2", lambda: 2)              # bumps m1 out
+    assert done == [("m1", 1, None)]
+    (meta, value, exc), = pipe.drain()
+    assert (meta, value) == ("m2", 2) and exc is None
+
+    def boom():
+        raise ValueError("stage died")
+
+    pipe.push("m3", boom)
+    (meta, value, exc), = pipe.drain()
+    assert meta == "m3" and value is None
+    assert isinstance(exc, ValueError)
+    with pytest.raises(ValueError):
+        StagePipeline(SyncExecutor(), depth=0)
+    with pytest.raises(ValueError):
+        FlushPolicy(pipeline_depth=0)
+
+
+def test_stage_pipeline_sync_executor_delivers_immediately():
+    """A completed batch never waits for the window: SyncExecutor futures
+    are done at push time, so even depth 2 returns them right away."""
+    pipe = StagePipeline(SyncExecutor(), depth=2)
+    assert pipe.push("m1", lambda: 1) == [("m1", 1, None)]
+    assert pipe.inflight == 0
+
+
+def test_thread_executor_runs_off_thread():
+    import threading
+    ex = ThreadStageExecutor()
+    try:
+        ident = ex.submit(lambda: threading.get_ident()).result()
+        assert ident != threading.get_ident()
+        with pytest.raises(RuntimeError):
+            ex.submit(lambda: (_ for _ in ()).throw(
+                RuntimeError("worker"))).result()
+        assert ex.submit(lambda a, b: a + b, 2, 3).result() == 5
+    finally:
+        ex.shutdown()
+
+
+# ------------------------------------------------------- measured autotuner
+@pytest.fixture
+def autotune_file(tmp_path, monkeypatch):
+    path = tmp_path / "decode_autotune.json"
+    monkeypatch.setenv("REPRO_DECODE_AUTOTUNE", str(path))
+    decode_mod.reset_autotune()
+    decode_mod.reset_decode_stats()
+    yield path
+    decode_mod.reset_autotune()
+
+
+def test_autotune_cold_probe_then_warm_hit(autotune_file):
+    b1 = decode_mod.resolve_backend("auto", decode_mod.MODE_STD, "f8", 10)
+    st = decode_mod.decode_stats()
+    assert st["autotune_probes"] == 1 and st["autotune_hits"] == 0
+    assert b1 in decode_mod.BACKENDS
+    # the probe persisted a versioned cache
+    doc = json.loads(autotune_file.read_text())
+    assert doc["version"] == decode_mod.AUTOTUNE_VERSION
+    assert len(doc["entries"]) == 1
+    # same bucket: warm hit, no new probe; same choice
+    b2 = decode_mod.resolve_backend("auto", decode_mod.MODE_STD, "f8", 33)
+    st = decode_mod.decode_stats()
+    assert (b2, st["autotune_probes"], st["autotune_hits"]) == (b1, 1, 1)
+    # a different bucket probes again
+    decode_mod.resolve_backend("auto", decode_mod.MODE_STD, "f8", 900)
+    assert decode_mod.decode_stats()["autotune_probes"] == 2
+    assert len(decode_mod.autotune_choices()) == 2
+    assert decode_mod.decode_stats()["autotune_choices"] \
+        == decode_mod.autotune_choices()
+
+
+def test_autotune_persisted_choice_honored_without_probing(autotune_file):
+    """A persisted cache IS the routing table: backend="auto" follows it
+    even when the probe would have chosen differently."""
+    key = decode_mod._autotune_key(decode_mod.MODE_STD, "f8", 10)
+    autotune_file.write_text(json.dumps({
+        "version": decode_mod.AUTOTUNE_VERSION,
+        "entries": {key: {"backend": "pallas", "times_us": {}}}}))
+    got = decode_mod.resolve_backend("auto", decode_mod.MODE_STD, "f8", 10)
+    st = decode_mod.decode_stats()
+    assert (got, st["autotune_probes"], st["autotune_hits"]) \
+        == ("pallas", 0, 1)
+
+
+def test_autotune_version_mismatch_reprobes(autotune_file):
+    key = decode_mod._autotune_key(decode_mod.MODE_STD, "f8", 10)
+    autotune_file.write_text(json.dumps({
+        "version": decode_mod.AUTOTUNE_VERSION + 1,
+        "entries": {key: {"backend": "pallas", "times_us": {}}}}))
+    with pytest.raises(decode_mod.AutotuneCacheError):
+        decode_mod.load_autotune(str(autotune_file), strict=True)
+    decode_mod.reset_autotune()
+    got = decode_mod.resolve_backend("auto", decode_mod.MODE_STD, "f8", 10)
+    st = decode_mod.decode_stats()
+    assert st["autotune_probes"] == 1 and st["autotune_hits"] == 0
+    assert got in decode_mod.BACKENDS
+    # the re-probe rewrote the cache at the CURRENT version
+    doc = json.loads(autotune_file.read_text())
+    assert doc["version"] == decode_mod.AUTOTUNE_VERSION
+
+
+def test_autotune_unwritable_cache_path_is_non_fatal(tmp_path, monkeypatch):
+    """Persistence is an optimization: an unwritable cache path must not
+    fail the resolution (and through it the serving flush)."""
+    monkeypatch.setenv("REPRO_DECODE_AUTOTUNE",
+                       str(tmp_path / "no" / "such" / "dir" / "at.json"))
+    decode_mod.reset_autotune()
+    decode_mod.reset_decode_stats()
+    got = decode_mod.resolve_backend("auto", decode_mod.MODE_STD, "f8", 10)
+    assert got in decode_mod.BACKENDS
+    assert decode_mod.decode_stats()["autotune_probes"] == 1
+    decode_mod.reset_autotune()
+
+
+def test_autotune_corrupt_cache_reprobes(autotune_file):
+    autotune_file.write_bytes(b"\xffnot json at all")
+    with pytest.raises(decode_mod.AutotuneCacheError):
+        decode_mod.load_autotune(str(autotune_file), strict=True)
+    decode_mod.reset_autotune()
+    decode_mod.resolve_backend("auto", decode_mod.MODE_DELTA, "f8", 10)
+    assert decode_mod.decode_stats()["autotune_probes"] == 1
+
+
+def test_reconstruct_auto_routes_through_autotune(autotune_file):
+    """reconstruct(backend="auto") resolves per plan and stays
+    byte-identical to the host path whatever the measured choice."""
+    plan = decode_mod._probe_plan(decode_mod.MODE_DELTA, "f8", None, 16)
+    want = decode_mod.reconstruct(plan, backend="numpy")
+    got = decode_mod.reconstruct(plan, backend="auto")
+    assert got.tobytes() == want.tobytes()
+    assert decode_mod.decode_stats()["autotune_probes"] == 1
+
+
+def test_service_default_backend_is_auto():
+    assert DecompressionService().backend == "auto"
+    with pytest.raises(ValueError):
+        DecompressionService(backend="gpu")

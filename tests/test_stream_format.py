@@ -11,7 +11,6 @@ from repro.core.stream import (
     _assemble_stream_py,
     _parse_stream_py,
     assemble_stream,
-    decode_stream,
     parse_stream,
 )
 
