@@ -3,8 +3,8 @@ PY ?= python
 export PYTHONPATH := src
 
 .PHONY: test test-core bench bench-quick bench-gate bench-stream \
-	bench-shard bench-store bench-decode shard-check store-check \
-	store-check-quick lint example-stream
+	bench-shard bench-store bench-decode bench-encode shard-check \
+	store-check store-check-quick lint example-stream
 
 # Tier-1 verification (ROADMAP.md): the full suite, fail-fast.
 test:
@@ -31,6 +31,11 @@ bench-store:
 # Host vs device reconstruct through the unified decode engine.
 bench-decode:
 	$(PY) -m benchmarks.bench_decode_backends
+
+# Fused single-dispatch encode step vs the composed matcher pipeline
+# (fails below the 1.3x acceptance bar).
+bench-encode:
+	$(PY) -m benchmarks.bench_encode_fused
 
 # CI smoke profile: small workloads, fast host/codec benches only.
 bench-quick:

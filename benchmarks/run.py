@@ -23,8 +23,8 @@ import os
 import sys
 import traceback
 
-QUICK_MODULES = ("stream_io", "store_decode",
-                 "decode_backends")  # fast host/codec smoke set
+QUICK_MODULES = ("stream_io", "store_decode", "decode_backends",
+                 "encode_fused")  # fast host/codec smoke set
 
 RESULTS_VERSION = 1
 
@@ -85,6 +85,7 @@ def main(argv=None) -> None:
         ("shard_encode", "bench_shard_encode"),
         ("store_decode", "bench_store_decode"),
         ("decode_backends", "bench_decode_backends"),
+        ("encode_fused", "bench_encode_fused"),
         ("roofline", "roofline"),
     ]
     if args.quick:

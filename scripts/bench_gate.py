@@ -46,7 +46,9 @@ def load_results(path: str) -> Tuple[Dict[str, float], dict]:
         raise ValueError(f"{path}: not a benchmarks/run.py --json document")
     out = {}
     for name, ent in doc["results"].items():
-        out[name] = float(ent["us_per_call"])
+        us = float(ent["us_per_call"])
+        if us > 0.0:  # zero-time rows are derived-only reports, not gates
+            out[name] = us
     return out, doc
 
 

@@ -440,54 +440,33 @@ def _device_exact(backend: str, plan: DecodePlan) -> bool:
 # at first "auto" resolution and rewritten after each new probe.  A stale
 # ``version`` field or a corrupt file is discarded (logged) and re-probed
 # -- never trusted (DESIGN.md Sec. 9).
+#
+# The cache table itself (locking, lazy env load, validation, atomic
+# persist) is the shared ``repro.core.tuning.MeasuredTuner`` -- the encode
+# side's ``matcher="auto"`` runs on the same machinery (DESIGN.md Sec. 10);
+# this module keeps only the decode-shaped parts: the probe plan, the
+# exactness gating and the key format.
+
+from .tuning import AutotuneCacheError, MeasuredTuner, best_of, pow2_bucket
 
 AUTOTUNE_VERSION = 1
-_AUTOTUNE_ENV = "REPRO_DECODE_AUTOTUNE"
 _BUCKET_MIN, _BUCKET_MAX = 64, 16384
 
-_autotune_entries: dict = {}
-_autotune_loaded = False
-# resolve/probe/persist are caller-thread operations that race the
-# pipelined service's worker thread (and each other across services)
-_autotune_lock = threading.RLock()
-
-
-class AutotuneCacheError(ValueError):
-    """A persisted autotune cache failed validation (corrupt JSON, wrong
-    structure, or a stale ``version`` field)."""
+_TUNER = MeasuredTuner(
+    version=AUTOTUNE_VERSION, env_var="REPRO_DECODE_AUTOTUNE",
+    validate_entry=lambda ent: ent.get("backend") in BACKENDS,
+    log=logger)
 
 
 def _size_bucket(nb: int) -> int:
     """Pow-2 size bucket of a dispatch, clamped so the probe table stays
     small: everything below 64 blocks shares one bucket (dispatch overhead
     dominates), everything above 16384 another (bandwidth dominates)."""
-    return min(max(_pow2(max(1, nb)), _BUCKET_MIN), _BUCKET_MAX)
+    return pow2_bucket(nb, _BUCKET_MIN, _BUCKET_MAX)
 
 
 def _autotune_key(mode: int, dtype, nb: int) -> str:
     return f"mode={mode}|dtype={np.dtype(dtype).str}|bucket={_size_bucket(nb)}"
-
-
-def _autotune_path() -> Optional[str]:
-    return os.environ.get(_AUTOTUNE_ENV) or None
-
-
-def _validate_autotune_doc(doc) -> dict:
-    if not isinstance(doc, dict):
-        raise AutotuneCacheError("autotune cache is not a JSON object")
-    if doc.get("version") != AUTOTUNE_VERSION:
-        raise AutotuneCacheError(
-            f"autotune cache version {doc.get('version')!r} != "
-            f"{AUTOTUNE_VERSION}: stale cache, re-probe")
-    entries = doc.get("entries")
-    if not isinstance(entries, dict):
-        raise AutotuneCacheError("autotune cache has no 'entries' object")
-    for key, ent in entries.items():
-        if (not isinstance(ent, dict)
-                or ent.get("backend") not in BACKENDS
-                or not isinstance(ent.get("times_us"), dict)):
-            raise AutotuneCacheError(f"malformed autotune entry {key!r}")
-    return entries
 
 
 def load_autotune(path: str, strict: bool = True) -> int:
@@ -497,54 +476,24 @@ def load_autotune(path: str, strict: bool = True) -> int:
     :class:`AutotuneCacheError` on a corrupt or version-stale file;
     ``strict=False`` (the serving path) logs, discards, and leaves the
     cache cold so the combination is re-probed."""
-    global _autotune_loaded
-    with _autotune_lock:
-        _autotune_loaded = True
-        try:
-            with open(path, "r", encoding="utf-8") as f:
-                doc = json.load(f)
-            entries = _validate_autotune_doc(doc)
-        except AutotuneCacheError:
-            if strict:
-                raise
-            logger.warning("discarding invalid autotune cache %s "
-                           "(re-probing)", path)
-            return 0
-        except (OSError, ValueError) as e:
-            if strict:
-                raise AutotuneCacheError(f"unreadable autotune cache: {e}")
-            logger.warning("discarding unreadable autotune cache %s (%s)",
-                           path, e)
-            return 0
-        _autotune_entries.update(entries)
-        return len(entries)
+    return _TUNER.load(path, strict=strict)
 
 
 def save_autotune(path: str) -> None:
     """Persist the in-memory choices as the versioned JSON cache (atomic
     replace, so a racing reader never sees a half-written file)."""
-    with _autotune_lock:
-        doc = {"version": AUTOTUNE_VERSION, "entries": dict(_autotune_entries)}
-    tmp = f"{path}.tmp.{os.getpid()}"
-    with open(tmp, "w", encoding="utf-8") as f:
-        json.dump(doc, f, indent=1, sort_keys=True)
-    os.replace(tmp, path)
+    _TUNER.save(path)
 
 
 def reset_autotune() -> None:
     """Forget every choice (and the lazy disk load): next ``"auto"``
     resolution re-probes.  Test hook."""
-    global _autotune_loaded
-    with _autotune_lock:
-        _autotune_entries.clear()
-        _autotune_loaded = False
+    _TUNER.reset()
 
 
 def autotune_choices() -> dict:
     """Current ``"auto"`` routing table: autotune key -> backend name."""
-    with _autotune_lock:
-        return {k: v["backend"]
-                for k, v in sorted(_autotune_entries.items())}
+    return _TUNER.choices("backend")
 
 
 def autotune_cached(mode: int, dtype, nb: int) -> bool:
@@ -552,14 +501,7 @@ def autotune_cached(mode: int, dtype, nb: int) -> bool:
     from cache (True) or have to run a timing probe (False).  The serving
     layer uses this to quiesce its pipeline before a cold probe -- timing
     backends while a reconstruct is in flight would poison the choice."""
-    global _autotune_loaded
-    with _autotune_lock:
-        if not _autotune_loaded:
-            _autotune_loaded = True
-            path = _autotune_path()
-            if path and os.path.exists(path):
-                load_autotune(path, strict=False)
-        return _autotune_key(mode, dtype, nb) in _autotune_entries
+    return _TUNER.cached(_autotune_key(mode, dtype, nb))
 
 
 def _probe_autotune(mode: int, dtype, value_range, block_size: int,
@@ -570,15 +512,6 @@ def _probe_autotune(mode: int, dtype, value_range, block_size: int,
     ties and errors resolve toward the host path."""
     plan = _probe_plan(mode, dtype, value_range, block_size,
                        nb=bucket, n_rows=min(bucket, 64))
-
-    def best_of(fn, reps: int = 3) -> float:
-        fn()  # warmup: jit compile, caches
-        best = float("inf")
-        for _ in range(reps):
-            t0 = time.perf_counter()
-            fn()
-            best = min(best, time.perf_counter() - t0)
-        return best
 
     times = {"numpy": best_of(lambda: _reconstruct_numpy(plan))}
     for b in BACKENDS[1:]:
@@ -614,34 +547,18 @@ def resolve_backend(backend: str, mode: int, dtype, nb: int,
             raise ValueError(f"unknown decode backend {backend!r}; "
                              f"expected one of {BACKENDS + ('auto',)}")
         return backend
-    global _autotune_loaded
-    with _autotune_lock:
-        if not _autotune_loaded:
-            _autotune_loaded = True
-            path = _autotune_path()
-            if path and os.path.exists(path):
-                load_autotune(path, strict=False)
-        key = _autotune_key(mode, dtype, nb)
-        ent = _autotune_entries.get(key)
+    key = _autotune_key(mode, dtype, nb)
+    with _TUNER.lock:
+        ent = _TUNER.lookup(key)
         if ent is not None:
             _bump("autotune_hits")
             return ent["backend"]
-        ent = _probe_autotune(mode, np.dtype(dtype), value_range, block_size,
-                              _size_bucket(nb))
-        _autotune_entries[key] = ent
+        ent = _TUNER.record(key, _probe_autotune(
+            mode, np.dtype(dtype), value_range, block_size,
+            _size_bucket(nb)))
         _bump("autotune_probes")
         logger.info("autotune: %s -> %s %s", key, ent["backend"],
                     ent["times_us"])
-        path = _autotune_path()
-        if path:
-            try:
-                save_autotune(path)
-            except OSError as e:
-                # persistence is an optimization; the in-memory choice
-                # stands and the caller's dispatch must not fail over an
-                # unwritable cache path
-                logger.warning("could not persist autotune cache to %s "
-                               "(%s); continuing in-memory", path, e)
         return ent["backend"]
 
 

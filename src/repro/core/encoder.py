@@ -22,26 +22,49 @@ dmin, dmax, rel_tol) -> (ks (D,), mm (D,))``.  The default is the pure-jnp
 oracle below; ``repro.kernels.ops.dict_match`` is the Pallas kernel with
 the same signature, whose fused min/max gate is consumed directly instead
 of being recomputed outside the kernel.
+
+Beyond callables, ``matcher=`` accepts names (DESIGN.md Sec. 10):
+``"reference"`` (jnp oracle), ``"ops"`` (pallas matcher + jnp step),
+``"fused"`` (the single-dispatch ``kernels.encode_step`` kernel that also
+applies the threshold, arg-min and FIFO overwrite), and ``"auto"`` (the
+measured pick per (D, n, dtype) via the shared ``core.tuning`` machinery,
+persisted under ``REPRO_ENCODE_AUTOTUNE``).
 """
 from __future__ import annotations
 
 import functools
-from typing import Callable, NamedTuple, Optional
+import logging
+from typing import Callable, NamedTuple, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
 from .ks import ks_statistic_many
+from .tuning import MeasuredTuner, best_of
 
 __all__ = [
     "DictState",
     "EncoderParams",
     "init_state",
     "matcher_reference",
+    "resolve_matcher",
     "encode_decisions",
     "encode_decisions_batched",
     "encode_decisions_sharded",
+    "encode_decisions_dsharded",
+    "MATCHERS",
+    "load_encode_autotune",
+    "save_encode_autotune",
+    "reset_encode_autotune",
+    "encode_autotune_choices",
+    "encode_autotune_cached",
 ]
+
+logger = logging.getLogger("repro.core.encoder")
+
+# "no entry passed" marker for cross-shard/cross-tile arg-min reductions;
+# any real dictionary index (< 2^8) is far below it.
+_SENTINEL = 2 ** 30
 
 
 
@@ -145,6 +168,64 @@ def _step(matcher, params: EncoderParams, state: DictState, block_valid):
     return new_state, (is_hit, slot, overwrite)
 
 
+# ------------------------------------------------------- fused kernel step
+def _is_fused(matcher) -> bool:
+    """The fused matcher travels through the jit machinery as the hashable
+    static value ``("fused", tile_d)`` rather than a callable."""
+    return isinstance(matcher, tuple) and len(matcher) == 2 \
+        and matcher[0] == "fused"
+
+
+def _pad_state_d(state: DictState, pad: int) -> DictState:
+    """Pad the dictionary axis with ``valid=False`` rows (tile alignment for
+    the fused kernel, shard alignment for D-sharding).  Pad rows never pass
+    the gate and are never inserted (FIFO slot uses the logical D)."""
+    if pad == 0:
+        return state
+    return DictState(
+        sorted_blocks=jnp.pad(state.sorted_blocks, ((0, pad), (0, 0))),
+        dmin=jnp.pad(state.dmin, (0, pad)),
+        dmax=jnp.pad(state.dmax, (0, pad)),
+        valid=jnp.pad(state.valid, (0, pad)),
+        count=state.count,
+    )
+
+
+def _slice_state_d(state: DictState, num_dict: int) -> DictState:
+    """Inverse of ``_pad_state_d``: back to the logical-D resumable carry."""
+    if state.sorted_blocks.shape[0] == num_dict:
+        return state
+    return DictState(
+        sorted_blocks=state.sorted_blocks[:num_dict],
+        dmin=state.dmin[:num_dict],
+        dmax=state.dmax[:num_dict],
+        valid=state.valid[:num_dict],
+        count=state.count,
+    )
+
+
+def _step_fused(tile_d: int, params: EncoderParams, num_dict: int,
+                state: DictState, block_valid):
+    """Fused-kernel scan step: one pallas dispatch computes gate + masked KS
+    + arg-min + FIFO overwrite and returns the updated (padded) carry.
+    Decision-identical to ``_step`` with the ``ops`` matcher (bitwise: same
+    kernel arithmetic) and to ``matcher_reference`` (same decisions)."""
+    from repro.kernels.encode_step import (DEC_COUNT, DEC_HIT, DEC_OVER,
+                                           DEC_SLOT, encode_step_pallas)
+    from repro.kernels.ops import _INTERPRET
+
+    block, valid = block_valid
+    xs = jnp.sort(block)
+    new_sorted, ndmin, ndmax, nvalid, dec = encode_step_pallas(
+        xs, state.sorted_blocks, state.dmin, state.dmax, state.valid,
+        state.count, valid, d_crit=params.d_crit, rel_tol=params.rel_tol,
+        use_minmax=params.use_minmax, use_ks=params.use_ks,
+        num_dict=num_dict, tile_d=tile_d, interpret=_INTERPRET)
+    new_state = DictState(new_sorted, ndmin, ndmax, nvalid, dec[DEC_COUNT])
+    return new_state, (dec[DEC_HIT].astype(bool), dec[DEC_SLOT],
+                       dec[DEC_OVER].astype(bool))
+
+
 @functools.lru_cache(maxsize=None)
 def _encode_scan():
     """Build the jitted scan lazily so importing this module never touches
@@ -167,12 +248,153 @@ def _encode_scan():
             d_crit=d_crit, rel_tol=rel_tol, use_minmax=use_minmax,
             use_ks=use_ks,
         )
-        step = functools.partial(_step, matcher, params)
-        new_state, (is_hit, slot, overwrite) = jax.lax.scan(step, state,
-                                                            (blocks, valid))
+        if _is_fused(matcher):
+            tile_d = matcher[1]
+            num_dict = state.sorted_blocks.shape[0]
+            pstate = _pad_state_d(state, (-num_dict) % tile_d)
+            step = functools.partial(_step_fused, tile_d, params, num_dict)
+            new_state, (is_hit, slot, overwrite) = jax.lax.scan(
+                step, pstate, (blocks, valid))
+            new_state = _slice_state_d(new_state, num_dict)
+        else:
+            step = functools.partial(_step, matcher, params)
+            new_state, (is_hit, slot, overwrite) = jax.lax.scan(
+                step, state, (blocks, valid))
         return (is_hit, slot, overwrite), new_state
 
     return scan
+
+
+# ------------------------------------------- measured matcher autotuning
+#
+# ``matcher="auto"`` mirrors decode's ``backend="auto"`` (DESIGN.md Sec. 9):
+# first use of a (D, n, dtype) combination times the reference, ops and
+# fused paths (sweeping the fused kernel's tile_d) on a probe scan, routes
+# the combination to the fastest, and persists the choice in the same
+# versioned cache scheme under ``REPRO_ENCODE_AUTOTUNE``.
+
+MATCHERS = ("reference", "ops", "fused")
+ENCODE_AUTOTUNE_VERSION = 1
+_FUSED_TILE_SWEEP = (8, 32, 128)
+_PROBE_BLOCKS = 8
+
+_TUNER = MeasuredTuner(
+    version=ENCODE_AUTOTUNE_VERSION, env_var="REPRO_ENCODE_AUTOTUNE",
+    validate_entry=lambda ent: ent.get("matcher") in MATCHERS,
+    log=logger)
+
+
+def _matcher_key(num_dict: int, n: int, dtype) -> str:
+    import numpy as np
+
+    return f"D={int(num_dict)}|n={int(n)}|dtype={np.dtype(dtype).str}"
+
+
+def load_encode_autotune(path: str, strict: bool = True) -> int:
+    """Load persisted matcher choices (see ``core.tuning``); entry count."""
+    return _TUNER.load(path, strict=strict)
+
+
+def save_encode_autotune(path: str) -> None:
+    """Persist the in-memory matcher choices (atomic replace)."""
+    _TUNER.save(path)
+
+
+def reset_encode_autotune() -> None:
+    """Forget every matcher choice; next ``"auto"`` re-probes.  Test hook."""
+    _TUNER.reset()
+
+
+def encode_autotune_choices() -> dict:
+    """Current ``matcher="auto"`` routing table: key -> matcher name."""
+    return _TUNER.choices("matcher")
+
+
+def encode_autotune_cached(num_dict: int, n: int, dtype) -> bool:
+    """Whether ``matcher="auto"`` for (D, n, dtype) resolves from cache."""
+    return _TUNER.cached(_matcher_key(num_dict, n, dtype))
+
+
+def _named_matcher(name: str, tile_d: Optional[int] = None):
+    if name == "reference":
+        return matcher_reference
+    if name == "ops":
+        from repro.kernels.ops import dict_match
+
+        return dict_match
+    if name == "fused":
+        if tile_d is None:
+            from repro.kernels.dict_match import TILE_D
+
+            tile_d = TILE_D
+        return ("fused", int(tile_d))
+    raise ValueError(f"unknown matcher name {name!r}; "
+                     f"expected one of {MATCHERS + ('auto',)}")
+
+
+def _probe_matcher(num_dict: int, n: int, dtype) -> dict:
+    """Time each matcher on a short probe scan at the real (D, n, dtype)
+    operating point.  A candidate that fails to run (e.g. a tile size too
+    large for device memory) is excluded, not fatal."""
+    import numpy as np
+
+    rng = np.random.default_rng(0)
+    # mixture source: the dictionary fills, then hits and misses both occur,
+    # so the fused kernel's gate-skip sees representative traffic
+    blocks = jnp.asarray(np.concatenate([
+        rng.normal(m, s, size=(_PROBE_BLOCKS // 2, n))
+        for m, s in [(0.0, 1.0), (5.0, 0.5)]]), dtype)
+    kw = dict(num_dict=num_dict, d_crit=0.35, rel_tol=0.5)
+
+    def run(m):
+        jax.block_until_ready(encode_decisions(blocks, matcher=m, **kw))
+
+    times = {"reference": best_of(lambda: run(matcher_reference))}
+    candidates = [("ops", _named_matcher("ops"))]
+    candidates += [(f"fused/{td}", ("fused", td)) for td in _FUSED_TILE_SWEEP]
+    for label, m in candidates:
+        try:
+            times[label] = best_of(lambda m=m: run(m))
+        except Exception as e:
+            logger.warning("matcher probe %r failed (%s); excluding it",
+                           label, e)
+    winner = min(sorted(times), key=times.get)
+    if winner.startswith("fused/"):
+        name, tile_d = "fused", int(winner.split("/")[1])
+    else:
+        name, tile_d = winner, None
+    return {"matcher": name, "tile_d": tile_d,
+            "times_us": {k: round(v * 1e6, 3) for k, v in times.items()}}
+
+
+def resolve_matcher(matcher, *, num_dict: int, n: int, dtype):
+    """Concrete matcher for an encode call.
+
+    ``None`` -> the jnp oracle; callables and already-resolved fused tuples
+    pass through (so vmapped/sharded inner calls re-resolve as no-ops);
+    names pick the implementation; ``"auto"`` serves the measured choice
+    for (D, n, dtype), probing (and persisting) on first use.  Resolve
+    *before* entering jit/vmap tracing -- a timing probe under a tracer
+    would measure tracing, not execution.
+    """
+    if matcher is None:
+        return matcher_reference
+    if callable(matcher) or _is_fused(matcher):
+        return matcher
+    if matcher in MATCHERS:
+        return _named_matcher(matcher)
+    if matcher == "auto":
+        key = _matcher_key(num_dict, n, dtype)
+        with _TUNER.lock:
+            hit = _TUNER.cached(key)
+            ent = _TUNER.resolve(
+                key, lambda: _probe_matcher(int(num_dict), int(n), dtype))
+            if not hit:
+                logger.info("encode autotune: %s -> %s %s", key,
+                            ent["matcher"], ent["times_us"])
+        return _named_matcher(ent["matcher"], ent.get("tile_d"))
+    raise ValueError(f"unknown matcher {matcher!r}; expected a callable "
+                     f"or one of {MATCHERS + ('auto',)}")
 
 
 def encode_decisions(
@@ -183,7 +405,7 @@ def encode_decisions(
     rel_tol: float = 0.1,
     use_minmax: bool = True,
     use_ks: bool = True,
-    matcher: Optional[Callable] = None,
+    matcher: Optional[Union[Callable, str, Tuple]] = None,
     state: Optional[DictState] = None,
     valid: Optional[jax.Array] = None,
 ):
@@ -204,10 +426,12 @@ def encode_decisions(
 
     ``matcher(xs_sorted, dict_sorted, dmin, dmax, rel_tol) -> (ks, mm)``
     defaults to the pure-jnp oracle; pass ``repro.kernels.ops.dict_match``
-    for the Pallas kernel (its fused min/max gate is used directly).
+    for the Pallas kernel (its fused min/max gate is used directly), or a
+    name -- ``"reference"``/``"ops"``/``"fused"``/``"auto"`` -- resolved by
+    :func:`resolve_matcher`.
     """
-    if matcher is None:
-        matcher = matcher_reference
+    matcher = resolve_matcher(matcher, num_dict=num_dict,
+                              n=blocks.shape[-1], dtype=blocks.dtype)
     return_state = state is not None
     if state is None:
         state = init_state(num_dict, blocks.shape[-1], dtype=blocks.dtype)
@@ -237,6 +461,11 @@ def encode_decisions_batched(
     the leading channel axis.  ``valid`` (C, nb) masks padded blocks of
     ragged channels (coalesced serving batches).
     """
+    # resolve names here, outside the vmap trace (a cold "auto" probe must
+    # run eagerly); the inner per-channel resolution is then a no-op
+    kw["matcher"] = resolve_matcher(
+        kw.get("matcher"), num_dict=num_dict, n=blocks_cn.shape[-1],
+        dtype=blocks_cn.dtype)
     return_state = state is not None
     if state is None:
         state = init_state(
@@ -298,12 +527,19 @@ def _sharded_scan(mesh, axis_name: str):
              matcher):
         params = EncoderParams(d_crit=d_crit, rel_tol=rel_tol,
                                use_minmax=use_minmax, use_ks=use_ks)
-        step = functools.partial(_step, matcher, params)
+        num_dict = state.sorted_blocks.shape[-2]
+        if _is_fused(matcher):
+            tile_d = matcher[1]
+            step = functools.partial(_step_fused, tile_d, params, num_dict)
+        else:
+            step = functools.partial(_step, matcher, params)
 
         def shard(s, b, v):
             def one(s1, b1, v1):
+                if _is_fused(matcher):
+                    s1 = _pad_state_d(s1, (-num_dict) % matcher[1])
                 new_s, out = jax.lax.scan(step, s1, (b1, v1))
-                return out, new_s
+                return out, _slice_state_d(new_s, num_dict)
 
             return jax.vmap(one)(s, b, v)
 
@@ -329,7 +565,7 @@ def encode_decisions_sharded(
     rel_tol: float = 0.1,
     use_minmax: bool = True,
     use_ks: bool = True,
-    matcher: Optional[Callable] = None,
+    matcher: Optional[Union[Callable, str, Tuple]] = None,
     state: Optional[DictState] = None,
     valid: Optional[jax.Array] = None,
 ):
@@ -343,8 +579,8 @@ def encode_decisions_sharded(
     Decisions (and therefore stream bytes) are bit-identical to the
     single-device batched encode of the same channels.
     """
-    if matcher is None:
-        matcher = matcher_reference
+    matcher = resolve_matcher(matcher, num_dict=num_dict,
+                              n=blocks_cn.shape[-1], dtype=blocks_cn.dtype)
     C = blocks_cn.shape[0]
     if C % mesh.shape[axis_name] != 0:
         raise ValueError(
@@ -357,6 +593,195 @@ def encode_decisions_sharded(
     if valid is None:
         valid = jnp.ones(blocks_cn.shape[:2], dtype=bool)
     out, new_state = _sharded_scan(mesh, axis_name)(
+        state, blocks_cn, valid, d_crit=float(d_crit),
+        rel_tol=float(rel_tol), use_minmax=use_minmax, use_ks=use_ks,
+        matcher=matcher,
+    )
+    return (out, new_state) if return_state else out
+
+
+# ------------------------------------------------- D-axis (dictionary) sharding
+def _step_dshard(matcher, params: EncoderParams, num_dict: int,
+                 dict_axis: str, state: DictState, block_valid):
+    """One scan step over a *dictionary shard*: this device holds a
+    contiguous slice of the (padded) dictionary rows, matches the candidate
+    against them, and the lowest passing *global* index is all-reduced over
+    the ``dict_axis`` mesh axis with ``pmin`` -- the reduction is exactly
+    ``argmax(ok)`` of the unsharded scan, so decisions are identical.
+
+    The FIFO insert slot ``count % num_dict`` is a global index; only the
+    shard that owns it writes (the others pass their carry through).
+    ``count`` is replicated across dictionary shards and advances in
+    lockstep."""
+    block, valid = block_valid
+    shard_d = state.sorted_blocks.shape[0]
+    off = jax.lax.axis_index(dict_axis).astype(jnp.int32) * shard_d
+    xs = jnp.sort(block)
+    xmin, xmax = xs[0], xs[-1]
+
+    ks, mm = matcher(xs, state.sorted_blocks, state.dmin, state.dmax,
+                     params.rel_tol)
+    ones = jnp.ones((shard_d,), dtype=bool)
+    mm_ok = mm if params.use_minmax else ones
+    ks_ok = (ks <= params.d_crit) if params.use_ks else ones
+    ok = state.valid & mm_ok & ks_ok
+
+    ids = off + jnp.arange(shard_d, dtype=jnp.int32)
+    local_first = jnp.min(jnp.where(ok, ids, _SENTINEL))
+    best = jax.lax.pmin(local_first, dict_axis)
+    is_hit = (best < _SENTINEL) & valid
+
+    ins = jnp.mod(state.count, num_dict)  # global FIFO slot (logical D)
+    do_ins = (~is_hit) & valid
+    overwrite = do_ins & (state.count >= num_dict)
+    slot = jnp.where(is_hit, best, ins).astype(jnp.int32)
+    slot = jnp.where(valid, slot, 0)
+
+    lins = ins - off
+    in_shard = (lins >= 0) & (lins < shard_d)
+    lclip = jnp.clip(lins, 0, shard_d - 1)
+    do_here = do_ins & in_shard
+    new_sorted = jax.lax.dynamic_update_slice(
+        state.sorted_blocks, xs[None, :], (lclip, 0))
+    upd = jnp.arange(shard_d) == lclip
+    new_state = DictState(
+        sorted_blocks=jnp.where(do_here, new_sorted, state.sorted_blocks),
+        dmin=jnp.where(do_here & upd, xmin, state.dmin),
+        dmax=jnp.where(do_here & upd, xmax, state.dmax),
+        valid=jnp.where(do_here & upd, True, state.valid),
+        count=state.count + do_ins.astype(jnp.int32),
+    )
+    return new_state, (is_hit, slot, overwrite)
+
+
+def state_dshard_partition_spec(ch_axis: str, dict_axis: str):
+    """``DictState``-shaped PartitionSpec pytree for a (channels, dict)
+    2-D mesh: channels on the leading axis, dictionary rows on the second;
+    ``count`` is replicated across dictionary shards."""
+    from jax.sharding import PartitionSpec as P
+
+    return DictState(
+        sorted_blocks=P(ch_axis, dict_axis, None),
+        dmin=P(ch_axis, dict_axis),
+        dmax=P(ch_axis, dict_axis),
+        valid=P(ch_axis, dict_axis),
+        count=P(ch_axis),
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _dsharded_scan(mesh, ch_axis: str, dict_axis: str):
+    """shard_map'd scan over a 2-D (channels, dict) mesh: channels split as
+    in ``_sharded_scan``, and within each channel group the dictionary rows
+    of every channel are split over the ``dict_axis`` devices, with the
+    per-step best-match arg-min all-reduced across them.  A 1-sized channel
+    axis gives pure D-sharding of fat channels."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    donate = (0,) if jax.default_backend() in ("tpu", "gpu") else ()
+    st_spec = state_dshard_partition_spec(ch_axis, dict_axis)
+    blk_spec = P(ch_axis, None, None)
+    msk_spec = P(ch_axis, None)
+    # decisions come out identical on every dict shard (post-pmin); declare
+    # them replicated over dict_axis (check_rep=False skips verification,
+    # as for the channel-sharded scan's pallas matcher)
+    out_spec = (P(ch_axis, None),) * 3
+
+    @functools.partial(
+        jax.jit,
+        static_argnames=("d_crit", "rel_tol", "use_minmax", "use_ks",
+                         "matcher"),
+        donate_argnums=donate,
+    )
+    def scan(state, blocks, valid, *, d_crit, rel_tol, use_minmax, use_ks,
+             matcher):
+        params = EncoderParams(d_crit=d_crit, rel_tol=rel_tol,
+                               use_minmax=use_minmax, use_ks=use_ks)
+        num_dict = state.sorted_blocks.shape[1]
+        shards = mesh.shape[dict_axis]
+        pad = (-num_dict) % shards
+        pstate = DictState(
+            sorted_blocks=jnp.pad(state.sorted_blocks,
+                                  ((0, 0), (0, pad), (0, 0))),
+            dmin=jnp.pad(state.dmin, ((0, 0), (0, pad))),
+            dmax=jnp.pad(state.dmax, ((0, 0), (0, pad))),
+            valid=jnp.pad(state.valid, ((0, 0), (0, pad))),
+            count=state.count,
+        )
+        step = functools.partial(_step_dshard, matcher, params, num_dict,
+                                 dict_axis)
+
+        def shard(s, b, v):
+            def one(s1, b1, v1):
+                new_s, out = jax.lax.scan(step, s1, (b1, v1))
+                return out, new_s
+
+            return jax.vmap(one)(s, b, v)
+
+        out, new_p = shard_map(
+            shard, mesh=mesh,
+            in_specs=(st_spec, blk_spec, msk_spec),
+            out_specs=(out_spec, st_spec),
+            check_rep=False,
+        )(pstate, blocks, valid)
+        new_state = DictState(
+            sorted_blocks=new_p.sorted_blocks[:, :num_dict],
+            dmin=new_p.dmin[:, :num_dict],
+            dmax=new_p.dmax[:, :num_dict],
+            valid=new_p.valid[:, :num_dict],
+            count=new_p.count,
+        )
+        return out, new_state
+
+    return scan
+
+
+def encode_decisions_dsharded(
+    blocks_cn: jax.Array,
+    *,
+    mesh,
+    ch_axis: str,
+    dict_axis: str,
+    num_dict: int,
+    d_crit: float,
+    rel_tol: float = 0.1,
+    use_minmax: bool = True,
+    use_ks: bool = True,
+    matcher: Optional[Union[Callable, str, Tuple]] = None,
+    state: Optional[DictState] = None,
+    valid: Optional[jax.Array] = None,
+):
+    """Dictionary-sharded encoder: blocks (C, nb, n) over a 2-D
+    ``mesh`` (ch_axis, dict_axis).  Channels split over ``ch_axis`` exactly
+    like :func:`encode_decisions_sharded`; *within* each channel the
+    dictionary rows are split over ``dict_axis`` and the per-step best
+    match is all-reduced, so one fat channel can use several devices.
+    Decisions are bit-identical to the single-device batched encode.
+
+    The fused single-dispatch matcher cannot run here -- its in-kernel FIFO
+    overwrite would have to precede the cross-shard arg-min reduction -- so
+    ``"fused"``/``"auto"``-fused resolutions fall back to the ``ops``
+    pallas matcher.
+    """
+    matcher = resolve_matcher(matcher, num_dict=num_dict,
+                              n=blocks_cn.shape[-1], dtype=blocks_cn.dtype)
+    if _is_fused(matcher):
+        from repro.kernels.ops import dict_match
+
+        matcher = dict_match
+    C = blocks_cn.shape[0]
+    if C % mesh.shape[ch_axis] != 0:
+        raise ValueError(
+            f"channels={C} not divisible by mesh axis "
+            f"{ch_axis}={mesh.shape[ch_axis]}; pad via EncodePlan")
+    return_state = state is not None
+    if state is None:
+        state = init_state(num_dict, blocks_cn.shape[-1],
+                           dtype=blocks_cn.dtype, channels=C)
+    if valid is None:
+        valid = jnp.ones(blocks_cn.shape[:2], dtype=bool)
+    out, new_state = _dsharded_scan(mesh, ch_axis, dict_axis)(
         state, blocks_cn, valid, d_crit=float(d_crit),
         rel_tol=float(rel_tol), use_minmax=use_minmax, use_ks=use_ks,
         matcher=matcher,

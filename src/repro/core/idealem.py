@@ -47,6 +47,10 @@ class IdealemCodec:
     max_count: int = 255
     value_range: Optional[Tuple[float, float]] = None
     backend: str = "jax"  # "jax" | "numpy" | "pallas" (encode scan)
+    # encode matcher for device backends: None keeps the backend default
+    # (jax -> reference oracle, pallas -> fused kernel); or one of
+    # "reference" | "ops" | "fused" | "auto" (measured, see core.tuning)
+    matcher: Optional[str] = None
     decode_seed: int = 0
     decode_backend: str = "numpy"  # reconstruction backend (core.decode)
     d_crit: float = field(init=False)
@@ -54,6 +58,11 @@ class IdealemCodec:
     def __post_init__(self):
         if self.mode not in _MODES:
             raise ValueError(f"mode must be one of {list(_MODES)}")
+        if self.matcher is not None and self.matcher not in (
+                "reference", "ops", "fused", "auto"):
+            raise ValueError(
+                "matcher must be None or one of "
+                "('reference', 'ops', 'fused', 'auto')")
         if not (1 <= self.num_dict <= 255):
             raise ValueError("num_dict must be in [1, 255]")
         if not (1 <= self.max_count <= 255):

@@ -157,10 +157,16 @@ class IdealemSession:
         import jax
         import jax.numpy as jnp
         from .encoder import (encode_decisions_batched,
+                              encode_decisions_dsharded,
                               encode_decisions_sharded, init_state)
+        matcher = getattr(cdc, "matcher", None)
         if cdc.backend == "pallas":
-            from repro.kernels.ops import dict_match
-            kw["matcher"] = dict_match
+            # default to the fused single-dispatch kernel (bitwise-identical
+            # decisions to the composed ops matcher); an explicit codec
+            # matcher ("ops", "auto", ...) overrides
+            kw["matcher"] = matcher or "fused"
+        elif matcher:
+            kw["matcher"] = matcher
         if self.plan is not None:
             # scale-out path: channel axis sharded over the plan's mesh;
             # pad rows are masked out of the scan and sliced off below.
@@ -177,9 +183,15 @@ class IdealemSession:
                 st = init_state(cdc.num_dict, pj.shape[-1],
                                 dtype=jnp.float32, channels=Cp)
                 self._dev_state = jax.device_put(st, plan.state_sharding())
-            (h, s, o), self._dev_state = encode_decisions_sharded(
-                pj, mesh=plan.mesh, axis_name=plan.axis_name,
-                state=self._dev_state, valid=jnp.asarray(valid), **kw)
+            if getattr(plan, "dict_shards", 1) > 1:
+                (h, s, o), self._dev_state = encode_decisions_dsharded(
+                    pj, mesh=plan.mesh, ch_axis=plan.axis_name,
+                    dict_axis=plan.dict_axis, state=self._dev_state,
+                    valid=jnp.asarray(valid), **kw)
+            else:
+                (h, s, o), self._dev_state = encode_decisions_sharded(
+                    pj, mesh=plan.mesh, axis_name=plan.axis_name,
+                    state=self._dev_state, valid=jnp.asarray(valid), **kw)
         else:
             pj = jnp.asarray(payload_cn, dtype=jnp.float32)
             if self._dev_state is None:

@@ -26,13 +26,35 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-TILE_D = 8
+TILE_D = 8  # default dictionary-tile height; sweepable via ``tile_d=``
 
-__all__ = ["dict_match_pallas", "TILE_D"]
+__all__ = ["KernelShapeError", "dict_match_pallas", "TILE_D"]
+
+
+class KernelShapeError(ValueError):
+    """An operand shape violates a kernel's tiling contract.
+
+    Raised instead of a bare assert so a bad launch plan fails with the
+    actual dimensions and the required padding in the message."""
+
+
+def check_tile_divisible(num_d: int, tile_d: int, kernel: str) -> None:
+    """D must be a tile multiple; the wrappers in ``ops.py`` (and the fused
+    encoder's pad-at-scan-entry) guarantee it -- anything else is a caller
+    bug worth a precise message."""
+    if tile_d < 1:
+        raise KernelShapeError(f"{kernel}: tile_d={tile_d} must be >= 1")
+    if num_d % tile_d:
+        pad = (-num_d) % tile_d
+        raise KernelShapeError(
+            f"{kernel}: D={num_d} is not a multiple of tile_d={tile_d}; "
+            f"pad the dictionary with {pad} more row(s) to "
+            f"{num_d + pad} (ops.dict_match pads automatically)")
 
 
 def _dict_match_kernel(xs_ref, dict_ref, dmin_ref, dmax_ref, rtol_ref,
                        ks_ref, mm_ref):
+    # tile height comes from the BlockSpec: dict_ref is (tile_d, n)
     n = xs_ref.shape[0]
     xs = xs_ref[:]                       # (n,) sorted candidate
     ds = dict_ref[:, :]                  # (TILE_D, n) dictionary tile
@@ -65,29 +87,31 @@ def _dict_match_kernel(xs_ref, dict_ref, dmin_ref, dmax_ref, rtol_ref,
     mm_ref[:] = mm
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("interpret", "tile_d"))
 def dict_match_pallas(xs_sorted, dict_blocks, dmin, dmax, rel_tol,
-                      interpret: bool = True):
+                      interpret: bool = True, tile_d: int = TILE_D):
     """xs_sorted (n,), dict_blocks (D, n) [any order], dmin/dmax (D,),
     rel_tol scalar -> (ks (D,) f32, mm (D,) bool).  D must be a multiple of
-    TILE_D (use ops.dict_match for arbitrary D)."""
+    ``tile_d`` (use ops.dict_match for arbitrary D); ``tile_d`` trades VMEM
+    footprint of the (tile_d, n, n) comparison against grid length, and is
+    swept by the encode autotuner."""
     num_d, n = dict_blocks.shape
-    assert num_d % TILE_D == 0, "pad D to a TILE_D multiple (see ops.py)"
-    grid = (num_d // TILE_D,)
+    check_tile_divisible(num_d, tile_d, "dict_match_pallas")
+    grid = (num_d // tile_d,)
     rtol_arr = jnp.asarray([rel_tol], dtype=jnp.float32)
     ks, mm = pl.pallas_call(
         _dict_match_kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((n,), lambda i: (0,)),           # candidate: reused
-            pl.BlockSpec((TILE_D, n), lambda i: (i, 0)),  # dict tile
-            pl.BlockSpec((TILE_D,), lambda i: (i,)),
-            pl.BlockSpec((TILE_D,), lambda i: (i,)),
+            pl.BlockSpec((tile_d, n), lambda i: (i, 0)),  # dict tile
+            pl.BlockSpec((tile_d,), lambda i: (i,)),
+            pl.BlockSpec((tile_d,), lambda i: (i,)),
             pl.BlockSpec((1,), lambda i: (0,)),
         ],
         out_specs=[
-            pl.BlockSpec((TILE_D,), lambda i: (i,)),
-            pl.BlockSpec((TILE_D,), lambda i: (i,)),
+            pl.BlockSpec((tile_d,), lambda i: (i,)),
+            pl.BlockSpec((tile_d,), lambda i: (i,)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((num_d,), jnp.float32),

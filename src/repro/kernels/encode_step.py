@@ -1,0 +1,210 @@
+"""Pallas TPU kernel: one fused IDEALEM encode step (DESIGN.md Sec. 10).
+
+``dict_match`` fused the two similarity checks (KS + min/max gate) into one
+kernel, but the encoder's scan step remained a *composition*: the matcher
+dispatch, the ``ks <= d_crit`` threshold, the arg-min over D and the FIFO
+dictionary overwrite each ran as separate XLA ops with the full (D,) ks/mm
+vectors materialized between them.  This kernel is the whole per-block step
+in a single dispatch:
+
+  1. min/max gate first (eq. 3), per dictionary tile -- and the gate result
+     *masks the KS work*: a tile where no valid entry passes the gate skips
+     its (tile_d, n, n) rank computation entirely (the paper's acceleration,
+     now at the kernel level via ``@pl.when``).
+  2. two-sample KS distance (eq. 1) on surviving tiles, with arithmetic
+     identical to ``dict_match``.  Decisions match the composed pallas path
+     for any threshold strictly between KS jump points (KS values are
+     multiples of 1/n; XLA fusion choices such as FMA contraction can move
+     a computed value by one ulp, so a d_crit placed *exactly* on k/n is
+     undefined territory -- ``critical_distance`` thresholds never are).
+  3. running arg-min of the lowest passing global index, accumulated across
+     tiles in the ``dec`` output block (grid programs execute sequentially
+     on TPU, so a revisited output block is a cross-program accumulator).
+  4. the FIFO slot overwrite on miss, applied by the last program in the
+     same dispatch -- the updated dictionary carry leaves the kernel ready
+     for the next scan step.
+
+Dictionary tiles stream through VMEM via a tiled BlockSpec, so the pallas
+pipeline double-buffers them against compute; the carry-out buffers use a
+constant index map and stay VMEM-resident across the whole grid.
+
+D must be padded to a ``tile_d`` multiple with ``valid=False`` rows (the
+encoder pads once at scan entry); padded rows never pass the gate and are
+never inserted because the FIFO slot is ``count % num_dict`` with the
+*logical* D.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .dict_match import TILE_D, check_tile_divisible
+
+__all__ = ["encode_step_pallas", "SENTINEL",
+           "DEC_BEST", "DEC_HIT", "DEC_SLOT", "DEC_OVER", "DEC_COUNT"]
+
+# "no entry passed" marker for the running arg-min; any real global index
+# (< 2^8 dictionary rows) is far below it.
+SENTINEL = 2 ** 30
+
+# layout of the (8,) int32 decision block (rows 5..7 are padding)
+DEC_BEST, DEC_HIT, DEC_SLOT, DEC_OVER, DEC_COUNT = range(5)
+
+
+def _encode_step_kernel(d_crit, rel_tol, use_minmax, use_ks, num_dict,
+                        tile_d,
+                        xs_ref, meta_ref, dict_ref, dmin_ref, dmax_ref,
+                        valid_ref,
+                        new_dict_ref, new_dmin_ref, new_dmax_ref,
+                        new_valid_ref, dec_ref):
+    i = pl.program_id(0)
+    nprog = pl.num_programs(0)
+    n = xs_ref.shape[0]
+    off = i * tile_d
+
+    xs = xs_ref[:].astype(jnp.float32)       # (n,) sorted candidate
+    ds = dict_ref[:, :].astype(jnp.float32)  # (tile_d, n) dictionary tile
+    dmin = dmin_ref[:].astype(jnp.float32)
+    dmax = dmax_ref[:].astype(jnp.float32)
+    dvalid = valid_ref[:]
+    inv_n = 1.0 / n
+
+    @pl.when(i == 0)
+    def _init():
+        dec_ref[...] = jnp.zeros((8,), jnp.int32)
+        dec_ref[DEC_BEST] = jnp.int32(SENTINEL)
+
+    # Carry-out starts as a copy of the carry-in; the last program below
+    # overwrites (at most) the one FIFO row.
+    new_dict_ref[pl.ds(off, tile_d), :] = dict_ref[:, :]
+    new_dmin_ref[pl.ds(off, tile_d)] = dmin_ref[:]
+    new_dmax_ref[pl.ds(off, tile_d)] = dmax_ref[:]
+    new_valid_ref[pl.ds(off, tile_d)] = dvalid
+
+    # --- min/max gate first (eq. 3): arithmetic identical to dict_match ---
+    if use_minmax:
+        r = jnp.float32(rel_tol)
+        xmin, xmax = xs[0], xs[n - 1]
+        t = (dmax - dmin) * r
+        mm = ((xmin >= dmin - t) & (xmin <= dmin + t)
+              & (xmax >= dmax - t) & (xmax <= dmax + t))
+        gate = dvalid & mm
+    else:
+        gate = dvalid
+
+    ids = off + jax.lax.iota(jnp.int32, tile_d)
+
+    if use_ks:
+        # KS rank work only when some valid entry survived the gate: the
+        # O(tile_d * n^2) comparisons are skipped for cold tiles (and for
+        # every tile while the dictionary is still empty).
+        @pl.when(jnp.any(gate))
+        def _ks_tile():
+            # identical arithmetic to _dict_match_kernel (decision parity
+            # with the composed pallas path; see module docstring)
+            cmp_d_le_x = (ds[:, :, None] <= xs[None, None, :]
+                          ).astype(jnp.float32)
+            cnt_d = jnp.sum(cmp_d_le_x, axis=1)                 # (tile_d, n)
+            f_x_at_x = (jax.lax.iota(jnp.float32, n) + 1.0) * inv_n
+            d1 = jnp.max(jnp.abs(f_x_at_x[None, :] - cnt_d * inv_n), axis=1)
+
+            cmp_x_le_d = (xs[None, None, :] <= ds[:, :, None]
+                          ).astype(jnp.float32)
+            cnt_x = jnp.sum(cmp_x_le_d, axis=2)                 # (tile_d, n)
+            rank_d = jnp.sum((ds[:, None, :] <= ds[:, :, None]
+                              ).astype(jnp.float32), axis=2)
+            d2 = jnp.max(jnp.abs(cnt_x * inv_n - rank_d * inv_n), axis=1)
+            ks = jnp.maximum(d1, d2)
+
+            ok = gate & (ks <= jnp.float32(d_crit))
+            lf = jnp.min(jnp.where(ok, ids, SENTINEL))
+            dec_ref[DEC_BEST] = jnp.minimum(dec_ref[DEC_BEST], lf)
+    else:
+        lf = jnp.min(jnp.where(gate, ids, SENTINEL))
+        dec_ref[DEC_BEST] = jnp.minimum(dec_ref[DEC_BEST], lf)
+
+    # --- last program: finalize the decision and apply the FIFO insert ---
+    @pl.when(i == nprog - 1)
+    def _finalize():
+        count = meta_ref[0]
+        bvalid = meta_ref[1] != 0
+        best = dec_ref[DEC_BEST]
+        is_hit = (best < SENTINEL) & bvalid
+        ins = jnp.mod(count, num_dict)  # logical D: pad rows never targeted
+        do_ins = (~is_hit) & bvalid
+        overwrite = do_ins & (count >= num_dict)
+        slot = jnp.where(is_hit, best, ins).astype(jnp.int32)
+        dec_ref[DEC_HIT] = is_hit.astype(jnp.int32)
+        dec_ref[DEC_SLOT] = jnp.where(bvalid, slot, 0)
+        dec_ref[DEC_OVER] = overwrite.astype(jnp.int32)
+        dec_ref[DEC_COUNT] = count + do_ins.astype(jnp.int32)
+
+        @pl.when(do_ins)
+        def _insert():
+            new_dict_ref[pl.ds(ins, 1), :] = xs_ref[:][None, :]
+            new_dmin_ref[pl.ds(ins, 1)] = xs_ref[pl.ds(0, 1)]
+            new_dmax_ref[pl.ds(ins, 1)] = xs_ref[pl.ds(n - 1, 1)]
+            new_valid_ref[pl.ds(ins, 1)] = jnp.ones((1,), jnp.bool_)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "d_crit", "rel_tol", "use_minmax", "use_ks", "num_dict", "tile_d",
+    "interpret"))
+def encode_step_pallas(xs_sorted, sorted_blocks, dmin, dmax, valid, count,
+                       block_valid, *, d_crit: float, rel_tol: float,
+                       num_dict: int, use_minmax: bool = True,
+                       use_ks: bool = True, tile_d: int = TILE_D,
+                       interpret: bool = True):
+    """One fused encode step.
+
+    ``xs_sorted`` (n,) sorted candidate; ``sorted_blocks`` (Dp, n) /
+    ``dmin``/``dmax``/``valid`` (Dp,) the *padded* dictionary carry (Dp a
+    ``tile_d`` multiple, pad rows ``valid=False``); ``count`` () int32 FIFO
+    position; ``block_valid`` () bool ragged-padding mask.  ``num_dict`` is
+    the logical D.
+
+    Returns ``(new_sorted, new_dmin, new_dmax, new_valid, dec)`` where
+    ``dec`` is (8,) int32 laid out by the ``DEC_*`` constants: the winning
+    global index (or SENTINEL), is_hit, slot, overwrite, updated count.
+    """
+    num_dp, n = sorted_blocks.shape
+    check_tile_divisible(num_dp, tile_d, "encode_step_pallas")
+    if not 1 <= num_dict <= num_dp:
+        raise ValueError(f"num_dict={num_dict} outside [1, Dp={num_dp}]")
+    grid = (num_dp // tile_d,)
+    meta = jnp.stack([jnp.asarray(count, jnp.int32),
+                      jnp.asarray(block_valid).astype(jnp.int32)])
+    kernel = functools.partial(
+        _encode_step_kernel, float(d_crit), float(rel_tol), bool(use_minmax),
+        bool(use_ks), int(num_dict), int(tile_d))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n,), lambda i: (0,)),           # candidate: reused
+            pl.BlockSpec((2,), lambda i: (0,)),           # [count, valid]
+            pl.BlockSpec((tile_d, n), lambda i: (i, 0)),  # streamed dict tile
+            pl.BlockSpec((tile_d,), lambda i: (i,)),
+            pl.BlockSpec((tile_d,), lambda i: (i,)),
+            pl.BlockSpec((tile_d,), lambda i: (i,)),
+        ],
+        out_specs=[
+            # constant index maps: carry-out lives in VMEM across the grid
+            pl.BlockSpec((num_dp, n), lambda i: (0, 0)),
+            pl.BlockSpec((num_dp,), lambda i: (0,)),
+            pl.BlockSpec((num_dp,), lambda i: (0,)),
+            pl.BlockSpec((num_dp,), lambda i: (0,)),
+            pl.BlockSpec((8,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((num_dp, n), sorted_blocks.dtype),
+            jax.ShapeDtypeStruct((num_dp,), dmin.dtype),
+            jax.ShapeDtypeStruct((num_dp,), dmax.dtype),
+            jax.ShapeDtypeStruct((num_dp,), jnp.bool_),
+            jax.ShapeDtypeStruct((8,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(xs_sorted, meta, sorted_blocks, dmin, dmax, valid)

@@ -24,17 +24,18 @@ __all__ = ["dict_match", "dict_match_ks", "dict_match_reference"]
 _INTERPRET = jax.default_backend() != "tpu"
 
 
-@functools.partial(jax.jit, static_argnames=("rel_tol",))
-def dict_match(xs_sorted, dict_blocks, dmin, dmax, rel_tol: float = 0.1):
+@functools.partial(jax.jit, static_argnames=("rel_tol", "tile_d"))
+def dict_match(xs_sorted, dict_blocks, dmin, dmax, rel_tol: float = 0.1,
+               tile_d: int = TILE_D):
     """Pad-to-tile wrapper; returns (ks (D,), mm (D,))."""
     num_d, n = dict_blocks.shape
-    pad = (-num_d) % TILE_D
+    pad = (-num_d) % tile_d
     if pad:
         dict_blocks = jnp.pad(dict_blocks, ((0, pad), (0, 0)))
         dmin = jnp.pad(dmin, (0, pad))
         dmax = jnp.pad(dmax, (0, pad))
     ks, mm = dict_match_pallas(xs_sorted, dict_blocks, dmin, dmax, rel_tol,
-                               interpret=_INTERPRET)
+                               interpret=_INTERPRET, tile_d=tile_d)
     return ks[:num_d], mm[:num_d]
 
 

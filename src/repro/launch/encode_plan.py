@@ -30,7 +30,14 @@ _QUANTUM_BYTES = 1 << 20
 
 
 class EncodePlan(NamedTuple):
-    """Placement decision for one batched encode configuration."""
+    """Placement decision for one batched encode configuration.
+
+    ``dict_shards > 1`` selects dictionary (D-axis) sharding on a 2-D
+    (channels, dict) mesh: within each channel group the dictionary rows
+    are split over ``dict_shards`` devices and the per-step best match is
+    all-reduced (DESIGN.md Sec. 10), so one fat channel can use several
+    devices.  The default keeps the 1-D channel-only mesh.
+    """
 
     mesh: Mesh
     axis_name: str
@@ -38,13 +45,16 @@ class EncodePlan(NamedTuple):
     padded_channels: int   # C rounded up to a devices multiple
     shard_channels: int    # channels resident per device
     block_quantum: int     # suggested blocks per channel per feed step
+    dict_axis: str = "dict"
+    dict_shards: int = 1   # devices sharing each channel's dictionary rows
 
     @property
     def num_devices(self) -> int:
         return self.mesh.shape[self.axis_name]
 
     def channel_sharding(self, trailing_dims: int = 0) -> NamedSharding:
-        """Sharding for an array with a leading channel axis."""
+        """Sharding for an array with a leading channel axis (on a 2-D
+        mesh the array is replicated across dictionary shards)."""
         return NamedSharding(
             self.mesh, P(self.axis_name, *([None] * trailing_dims)))
 
@@ -53,7 +63,12 @@ class EncodePlan(NamedTuple):
         (sessions and the serve coalescer device_put with this, keeping
         ``repro.core`` free of launch imports).  The field layout comes
         from ``encoder.state_partition_spec`` -- the one source of truth
-        the shard_map in_specs also use."""
+        the shard_map in_specs also use.
+
+        With ``dict_shards > 1`` the resumable carry keeps its *logical* D
+        (not necessarily a shard multiple), so only the channel axis is
+        placed here; the D-sharded scan pads and reshards the dictionary
+        rows internally."""
         from repro.core.encoder import state_partition_spec
 
         specs = state_partition_spec(self.axis_name)
@@ -66,6 +81,7 @@ class EncodePlan(NamedTuple):
             "padded_channels": self.padded_channels,
             "shard_channels": self.shard_channels,
             "block_quantum": self.block_quantum,
+            "dict_shards": self.dict_shards,
         }
 
 
@@ -76,18 +92,39 @@ def make_encode_plan(
     itemsize: int = 4,
     devices: Optional[Sequence] = None,
     axis_name: str = "channels",
+    dict_axis: str = "dict",
+    dict_shards: int = 1,
 ) -> EncodePlan:
     """Pick mesh shape, channel padding and per-shard batch quantum.
 
     ``devices`` defaults to all local devices; pass a subset to pin the
     encode to specific chips.  ``itemsize`` is the on-device payload dtype
     (the encoder computes in float32 by default).
+
+    ``dict_shards > 1`` asks for D-axis sharding: the device list is
+    reshaped into a (channel groups, dict_shards) 2-D mesh, so plans can
+    choose channel-sharding (default), D-sharding (``channels=1``), or
+    both from one mesh shape.
     """
     if channels < 1:
         raise ValueError("channels must be >= 1")
+    if dict_shards < 1:
+        raise ValueError("dict_shards must be >= 1")
     devs = list(devices) if devices is not None else jax.devices()
-    nd = max(1, min(len(devs), channels))
-    mesh = Mesh(np.array(devs[:nd]), (axis_name,))
+    if dict_shards > 1:
+        if len(devs) < dict_shards:
+            raise ValueError(
+                f"dict_shards={dict_shards} needs at least that many "
+                f"devices, have {len(devs)}")
+        ch_devs = max(1, min(len(devs) // dict_shards, channels))
+        mesh = Mesh(
+            np.array(devs[:ch_devs * dict_shards]).reshape(
+                ch_devs, dict_shards),
+            (axis_name, dict_axis))
+        nd = ch_devs
+    else:
+        nd = max(1, min(len(devs), channels))
+        mesh = Mesh(np.array(devs[:nd]), (axis_name,))
     padded = -(-channels // nd) * nd
     shard_channels = padded // nd
     quantum = max(1, _QUANTUM_BYTES // (shard_channels * block_size * itemsize))
@@ -98,6 +135,8 @@ def make_encode_plan(
         padded_channels=padded,
         shard_channels=shard_channels,
         block_quantum=quantum,
+        dict_axis=dict_axis,
+        dict_shards=dict_shards,
     )
 
 

@@ -57,7 +57,9 @@ def _session_blobs(codec, chans, plan) -> List[bytes]:
 
 
 def run_check(backend: str = "jax", channels: int = 5,
-              samples: int = 16 * 80 + 7) -> dict:
+              samples: int = 16 * 80 + 7, dict_shards: int = 0) -> dict:
+    """``dict_shards=0`` shards the dictionary over all devices (D-axis
+    case) in addition to the channel-sharded cases; ``1`` disables it."""
     import jax
 
     from repro.core import IdealemCodec
@@ -69,6 +71,8 @@ def run_check(backend: str = "jax", channels: int = 5,
     if want and n_dev != want:
         return {"status": "wrong_device_count", "devices": n_dev,
                 "expected": want}
+    if dict_shards == 0:
+        dict_shards = n_dev
     checked = []
     for mode, num_dict, vr in CASES:
         codec = IdealemCodec(mode=mode, block_size=16, num_dict=num_dict,
@@ -85,6 +89,19 @@ def run_check(backend: str = "jax", channels: int = 5,
         if single != sharded:
             return {"status": "mismatch", "where": "session",
                     "mode": mode, "num_dict": num_dict}
+
+        # D-sharded session bytes == single-device session bytes: the
+        # dictionary rows of every channel split over the dict mesh axis,
+        # per-step best match all-reduced (one channel group: the fat-
+        # channel scale-out the channel-sharded path cannot provide)
+        if dict_shards > 1:
+            dplan = make_encode_plan(channels, block_size=16,
+                                     dict_shards=dict_shards)
+            assert dplan.dict_shards == dict_shards, dplan.summary()
+            dsharded = _session_blobs(codec, chans, plan=dplan)
+            if single != dsharded:
+                return {"status": "mismatch", "where": "session_dshard",
+                        "mode": mode, "num_dict": num_dict}
 
         # coalesced ragged streams decode like one-shot per-stream encode
         cplan = make_encode_plan(-(-channels // n_dev) * n_dev, block_size=16)
@@ -124,8 +141,11 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--backend", default="jax",
                     choices=["jax", "pallas"])
+    ap.add_argument("--dict-shards", type=int, default=0,
+                    help="dictionary shards for the D-axis case "
+                         "(0 = all devices, 1 = skip)")
     args = ap.parse_args()
-    rec = run_check(backend=args.backend)
+    rec = run_check(backend=args.backend, dict_shards=args.dict_shards)
     print(json.dumps(rec))
     if rec["status"] != "ok":
         raise SystemExit(1)

@@ -355,6 +355,7 @@ class StreamCoalescer:
     def _flush(self, stream_ids: List[str]) -> Dict[str, bytes]:
         import jax.numpy as jnp
         from repro.core.encoder import (encode_decisions_batched,
+                                        encode_decisions_dsharded,
                                         encode_decisions_sharded)
         prepared = {}
         B = self._codec.block_size
@@ -393,14 +394,24 @@ class StreamCoalescer:
             rel_tol=float(cdc.rel_tol), use_minmax=cdc.use_minmax,
             use_ks=cdc.use_ks,
         )
+        matcher = getattr(cdc, "matcher", None)
         if cdc.backend == "pallas":
-            from repro.kernels.ops import dict_match
-            kw["matcher"] = dict_match
+            # fused single-dispatch kernel by default (decisions bitwise
+            # equal to the composed ops matcher); codec matcher overrides
+            kw["matcher"] = matcher or "fused"
+        elif matcher:
+            kw["matcher"] = matcher
         bj, vj = jnp.asarray(batch), jnp.asarray(valid)
         if self.plan is not None:
-            (h, s, o), self._state = encode_decisions_sharded(
-                bj, mesh=self.plan.mesh, axis_name=self.plan.axis_name,
-                state=self._state, valid=vj, **kw)
+            if getattr(self.plan, "dict_shards", 1) > 1:
+                (h, s, o), self._state = encode_decisions_dsharded(
+                    bj, mesh=self.plan.mesh, ch_axis=self.plan.axis_name,
+                    dict_axis=self.plan.dict_axis, state=self._state,
+                    valid=vj, **kw)
+            else:
+                (h, s, o), self._state = encode_decisions_sharded(
+                    bj, mesh=self.plan.mesh, axis_name=self.plan.axis_name,
+                    state=self._state, valid=vj, **kw)
         else:
             (h, s, o), self._state = encode_decisions_batched(
                 bj, state=self._state, valid=vj, **kw)

@@ -75,6 +75,32 @@ def test_sharded_single_device_matches_batched():
         np.testing.assert_array_equal(np.asarray(ref[i]), np.asarray(out[i]))
 
 
+def test_dsharded_single_device_matches_batched():
+    """D-axis sharding (dictionary rows split over the mesh, per-step best
+    match all-reduced) on a degenerate 1x1 mesh: decision-identical to the
+    batched scan, including with the fused matcher (which downgrades to
+    the composed kernel under D-sharding)."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import Mesh
+    from repro.core.encoder import (encode_decisions_batched,
+                                    encode_decisions_dsharded)
+
+    rng = np.random.default_rng(1)
+    bc = jnp.asarray(rng.normal(size=(3, 40, 16)), jnp.float32)
+    kw = dict(num_dict=7, d_crit=0.45, rel_tol=0.5)
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                ("channels", "dict"))
+    ref = encode_decisions_batched(bc, **kw)
+    for matcher in (None, "fused"):
+        out = encode_decisions_dsharded(bc, mesh=mesh, ch_axis="channels",
+                                        dict_axis="dict",
+                                        matcher=matcher, **kw)
+        for i in range(3):
+            np.testing.assert_array_equal(np.asarray(ref[i]),
+                                          np.asarray(out[i]))
+
+
 def test_encode_plan_shapes():
     from repro.launch.encode_plan import make_encode_plan, pad_channels
 
