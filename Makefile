@@ -3,8 +3,8 @@ PY ?= python
 export PYTHONPATH := src
 
 .PHONY: test test-core bench bench-quick bench-gate bench-stream \
-	bench-shard bench-store bench-decode bench-encode shard-check \
-	store-check store-check-quick lint example-stream
+	bench-shard bench-store bench-decode bench-encode bench-frontier \
+	shard-check store-check store-check-quick lint example-stream
 
 # Tier-1 verification (ROADMAP.md): the full suite, fail-fast.
 test:
@@ -36,6 +36,10 @@ bench-decode:
 # (fails below the 1.3x acceptance bar).
 bench-encode:
 	$(PY) -m benchmarks.bench_encode_fused
+
+# Rate-distortion frontier: error-bounded IDEALEM vs the baseline codecs.
+bench-frontier:
+	$(PY) -m benchmarks.bench_frontier
 
 # CI smoke profile: small workloads, fast host/codec benches only.
 bench-quick:

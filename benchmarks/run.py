@@ -24,7 +24,7 @@ import sys
 import traceback
 
 QUICK_MODULES = ("stream_io", "store_decode", "decode_backends",
-                 "encode_fused")  # fast host/codec smoke set
+                 "encode_fused", "frontier")  # fast host/codec smoke set
 
 RESULTS_VERSION = 1
 
@@ -86,6 +86,7 @@ def main(argv=None) -> None:
         ("store_decode", "bench_store_decode"),
         ("decode_backends", "bench_decode_backends"),
         ("encode_fused", "bench_encode_fused"),
+        ("frontier", "bench_frontier"),
         ("roofline", "roofline"),
     ]
     if args.quick:

@@ -1,0 +1,104 @@
+"""Nightly KS cross-check: our KS statistic / p-value vs scipy oracles
+over a dense grid (far beyond the unit-test pins).
+
+Sweeps:
+  * p-values against ``scipy.special.kolmogorov`` across (n, d) including
+    the small-lambda region, where the asymptotic series used to collapse
+    to 0 (the sum of its first 40 terms is ~0 for lambda < 0.1) -- there
+    the implementations must return exactly 1.0;
+  * two-sample statistics against ``scipy.stats.ks_2samp`` on random
+    pairs, plus end-to-end p-values via ``method="asymp"`` for identical
+    samples (d == 0 must accept with p == 1.0 at every n).
+
+Exits nonzero on any mismatch.  Usage:
+
+  PYTHONPATH=src python scripts/ks_crosscheck.py [--trials 200]
+"""
+import argparse
+import sys
+
+import numpy as np
+import scipy.special
+import scipy.stats
+
+from repro.core.ks import critical_distance, ks_pvalue, ks_statistic
+from repro.core.npref import ks_pvalue_np, ks_statistic_np
+
+_SMALL_LAM = 0.1  # must match repro.core.ks._SMALL_LAM
+
+
+def check_pvalue_grid() -> int:
+    bad = 0
+    ns = [2, 4, 8, 16, 32, 64, 128, 255, 1024]
+    for n in ns:
+        en = np.sqrt(n / 2.0)  # sqrt(n1*n2/(n1+n2)) for n1 == n2 == n
+        for d in np.concatenate([[0.0], np.geomspace(1e-8, 1.0, 120)]):
+            lam = en * d
+            ours = ks_pvalue_np(d, n, n)
+            ours_jax = float(ks_pvalue(d, n, n))
+            if lam < _SMALL_LAM:
+                ok = ours == 1.0 and ours_jax == 1.0
+                ref = 1.0
+            else:
+                ref = float(scipy.special.kolmogorov(lam))
+                ok = (abs(ours - ref) <= 1e-9
+                      and abs(ours_jax - ref) <= 1e-6)
+            if not ok:
+                bad += 1
+                print(f"FAIL pvalue n={n} d={d:.3e} lam={lam:.3e} "
+                      f"np={ours!r} jax={ours_jax!r} ref={ref!r}")
+    print(f"pvalue grid: {len(ns) * 121} points, {bad} failures")
+    return bad
+
+
+def check_statistic_random(trials: int, seed: int = 0) -> int:
+    bad = 0
+    rng = np.random.default_rng(seed)
+    for t in range(trials):
+        n1, n2 = int(rng.integers(4, 256)), int(rng.integers(4, 256))
+        x = rng.normal(size=n1)
+        y = rng.normal(rng.normal(0, 0.5), float(rng.uniform(0.5, 2)),
+                       size=n2)
+        ref = scipy.stats.ks_2samp(x, y).statistic
+        if abs(ks_statistic_np(x, y) - ref) > 1e-12:
+            bad += 1
+            print(f"FAIL statistic trial={t} n1={n1} n2={n2}")
+        if abs(float(ks_statistic(x, y)) - ref) > 1e-6:
+            bad += 1
+            print(f"FAIL statistic(jax) trial={t} n1={n1} n2={n2}")
+    print(f"statistic random: {trials} trials, {bad} failures")
+    return bad
+
+
+def check_identical_accept() -> int:
+    bad = 0
+    rng = np.random.default_rng(1)
+    for n in [4, 8, 16, 32, 64, 128, 255]:
+        x = rng.normal(size=n)
+        ref = scipy.stats.ks_2samp(x, x, method="asymp").pvalue
+        p = ks_pvalue_np(ks_statistic_np(x, x), n, n)
+        if not (p == 1.0 and abs(p - ref) <= 1e-12):
+            bad += 1
+            print(f"FAIL identical n={n} p={p!r} ref={ref!r}")
+        # the decision boundary stays invertible around every alpha
+        for alpha in [0.01, 0.05, 0.1, 0.2]:
+            dc = critical_distance(alpha, n, n)
+            if abs(ks_pvalue_np(dc, n, n) - alpha) > 1e-6:
+                bad += 1
+                print(f"FAIL critical_distance n={n} alpha={alpha}")
+    print(f"identical/critical: {bad} failures")
+    return bad
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--trials", type=int, default=200)
+    args = ap.parse_args(argv)
+    bad = (check_pvalue_grid() + check_statistic_random(args.trials)
+           + check_identical_accept())
+    print("ks_crosscheck:", "PASS" if bad == 0 else f"FAIL ({bad})")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,44 @@
+"""Entropy-coder shim for the baseline codecs.
+
+The baselines use zstd as their stand-in entropy stage (Huffman/range coder
+in the real SZ/ISABELA/zfp pipelines).  ``zstandard`` is an optional wheel,
+though, and the frontier benchmark must run everywhere the repo's own codec
+runs -- so this shim prefers zstd and falls back to stdlib zlib.  A 1-byte
+tag records which coder produced the payload, so blobs decode correctly on
+any host regardless of which coder was available at encode time (zstd blobs
+still need zstd to decode, and raise ImportError otherwise).
+"""
+from __future__ import annotations
+
+import zlib
+
+try:  # optional dependency: prefer zstd when the wheel is present
+    import zstandard as _zstd
+except ImportError:  # pragma: no cover - environment-dependent
+    _zstd = None
+
+__all__ = ["compress", "decompress", "HAVE_ZSTD"]
+
+HAVE_ZSTD = _zstd is not None
+
+_TAG_ZSTD = b"Z"
+_TAG_ZLIB = b"L"
+
+
+def compress(data: bytes, level: int = 9) -> bytes:
+    if _zstd is not None:
+        return _TAG_ZSTD + _zstd.ZstdCompressor(level=level).compress(data)
+    return _TAG_ZLIB + zlib.compress(data, level)
+
+
+def decompress(blob: bytes) -> bytes:
+    tag, body = blob[:1], blob[1:]
+    if tag == _TAG_ZLIB:
+        return zlib.decompress(body)
+    if tag == _TAG_ZSTD:
+        if _zstd is None:
+            raise ImportError(
+                "blob was entropy-coded with zstd but the zstandard wheel "
+                "is not installed")
+        return _zstd.ZstdDecompressor().decompress(body)
+    raise ValueError(f"unknown entropy-coder tag {tag!r}")

@@ -11,7 +11,8 @@ import struct
 from dataclasses import dataclass
 
 import numpy as np
-import zstandard as zstd
+
+from . import _entropy
 from scipy.interpolate import splev, splrep
 
 _MAGIC = b"ISBL"
@@ -63,10 +64,10 @@ class IsabelaLikeCodec:
         idx = np.concatenate(idx_parts) if idx_parts else np.zeros(0, np.int32)
         coef = np.concatenate(coef_parts) if coef_parts else np.zeros(0)
         corr = np.concatenate(corr_parts) if corr_parts else np.zeros(0)
-        cctx = zstd.ZstdCompressor(level=9)
-        bidx = cctx.compress(np.diff(idx, prepend=0).astype(np.int32).tobytes())
-        bcoef = cctx.compress(coef.tobytes())
-        bcorr = cctx.compress(corr.tobytes())
+        bidx = _entropy.compress(
+            np.diff(idx, prepend=0).astype(np.int32).tobytes())
+        bcoef = _entropy.compress(coef.tobytes())
+        bcorr = _entropy.compress(corr.tobytes())
         out += struct.pack("<IIII", n_windows, len(bidx), len(bcoef), len(bcorr))
         out += bidx + bcoef + bcorr
         return bytes(out)
@@ -77,12 +78,11 @@ class IsabelaLikeCodec:
         off = struct.calcsize("<4sIIId")
         n_windows, li, lc, lr = struct.unpack_from("<IIII", blob, off)
         off += struct.calcsize("<IIII")
-        dctx = zstd.ZstdDecompressor()
-        idx = np.cumsum(np.frombuffer(dctx.decompress(blob[off:off + li]),
+        idx = np.cumsum(np.frombuffer(_entropy.decompress(blob[off:off + li]),
                                       dtype=np.int32)); off += li
-        coef = np.frombuffer(dctx.decompress(blob[off:off + lc]),
+        coef = np.frombuffer(_entropy.decompress(blob[off:off + lc]),
                              dtype=np.float64); off += lc
-        corr = np.frombuffer(dctx.decompress(blob[off:off + lr]),
+        corr = np.frombuffer(_entropy.decompress(blob[off:off + lr]),
                              dtype=np.float64); off += lr
         out = np.zeros(n)
         ip = cp = rp = 0

@@ -13,7 +13,8 @@ import struct
 from dataclasses import dataclass
 
 import numpy as np
-import zstandard as zstd
+
+from . import _entropy
 
 _MAGIC = b"SZLK"
 
@@ -58,9 +59,8 @@ class SzLikeCodec:
                 raw_vals.append(xi)
                 val = xi
             d0, d1, d2 = d1, d2, val
-        cctx = zstd.ZstdCompressor(level=9)
-        bcodes = cctx.compress(codes.astype(np.int32).tobytes())
-        braw = cctx.compress(np.asarray(raw_vals).tobytes())
+        bcodes = _entropy.compress(codes.astype(np.int32).tobytes())
+        braw = _entropy.compress(np.asarray(raw_vals).tobytes())
         hdr = struct.pack("<4sIddII", _MAGIC, n, bound, rng, len(bcodes), len(braw))
         return hdr + bcodes + braw
 
@@ -68,10 +68,11 @@ class SzLikeCodec:
         magic, n, bound, _rng, lc, lr = struct.unpack_from("<4sIddII", blob, 0)
         assert magic == _MAGIC
         off = struct.calcsize("<4sIddII")
-        dctx = zstd.ZstdDecompressor()
-        codes = np.frombuffer(dctx.decompress(blob[off:off + lc]), dtype=np.int32)
+        codes = np.frombuffer(_entropy.decompress(blob[off:off + lc]),
+                              dtype=np.int32)
         off += lc
-        raw = np.frombuffer(dctx.decompress(blob[off:off + lr]), dtype=np.float64)
+        raw = np.frombuffer(_entropy.decompress(blob[off:off + lr]),
+                            dtype=np.float64)
         half = 1 << (self.quant_bits - 1)
         out = np.zeros(n)
         d0 = d1 = d2 = 0.0

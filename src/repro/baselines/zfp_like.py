@@ -12,7 +12,8 @@ import struct
 from dataclasses import dataclass
 
 import numpy as np
-import zstandard as zstd
+
+from . import _entropy
 
 _MAGIC = b"ZFPL"
 
@@ -37,21 +38,21 @@ class ZfpLikeCodec:
         x = np.ascontiguousarray(x, dtype=np.float64)
         n = len(x)
         if n == 0:
-            comp = zstd.ZstdCompressor(level=9).compress(b"")
+            comp = _entropy.compress(b"")
             return struct.pack("<4sIId", _MAGIC, 0, len(comp), self.tolerance) + comp
         pad = (-n) % 4
         xp = np.pad(x, (0, pad), mode="edge") if pad else x
         coeff = xp.reshape(-1, 4) @ _M.T
         q = np.round(coeff / self.tolerance).astype(np.int64)
         q[:, 0] = np.concatenate([[q[0, 0]], np.diff(q[:, 0])])
-        comp = zstd.ZstdCompressor(level=9).compress(q.tobytes())
+        comp = _entropy.compress(q.tobytes())
         return struct.pack("<4sIId", _MAGIC, n, len(comp), self.tolerance) + comp
 
     def decode(self, blob: bytes) -> np.ndarray:
         magic, n, clen, tol = struct.unpack_from("<4sIId", blob, 0)
         assert magic == _MAGIC
         off = struct.calcsize("<4sIId")
-        raw = zstd.ZstdDecompressor().decompress(blob[off:off + clen])
+        raw = _entropy.decompress(blob[off:off + clen])
         q = np.frombuffer(raw, dtype=np.int64).reshape(-1, 4).copy()
         q[:, 0] = np.cumsum(q[:, 0])
         blocks = (q * tol) @ _MINV.T

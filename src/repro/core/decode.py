@@ -124,6 +124,11 @@ class DecodePlan:
     block_idx: np.ndarray           # (nb,) global block positions
     seed: int = 0
     overwrite: Optional[np.ndarray] = None  # (nb,) bool, informational
+    # Error-bounded streams (FLAG_EB) pin hits to the stored row order:
+    # the std-mode hit permutation is skipped so max|x - x_hat| over a hit
+    # is exactly the bound the encoder enforced.  Res/delta modes never
+    # permute, so the flag only changes std-mode reconstruction.
+    no_perm: bool = False
 
     @property
     def nb(self) -> int:
@@ -204,12 +209,13 @@ def gather_rows(u8: np.ndarray, dt: np.dtype, offs: np.ndarray,
     return u8[offs[:, None] + np.arange(width * dt.itemsize)].view(dt)
 
 
-def plan_from_parsed(header, parsed, seed: int = 0) -> DecodePlan:
+def plan_from_parsed(header, parsed, seed: int = 0, i0: int = 0) -> DecodePlan:
     """Plan for a full sequential decode of one parsed stream.
 
     ``header``/``parsed`` are duck-typed (``repro.core.stream`` supplies
     ``StreamHeader`` and its struct-of-arrays ``_Parsed``); block positions
-    are simply ``0..nb``."""
+    are ``i0..i0+nb`` (``i0`` offsets a restart section within a larger
+    stream so permutations stay keyed on global position)."""
     nb = len(parsed.is_hit)
     return DecodePlan(
         mode=header.mode, block_size=header.block_size,
@@ -217,13 +223,14 @@ def plan_from_parsed(header, parsed, seed: int = 0) -> DecodePlan:
         payloads=parsed.payloads,
         src=decode_sources(parsed.is_hit, parsed.slot),
         bases=parsed.bases, is_hit=parsed.is_hit,
-        block_idx=np.arange(nb, dtype=np.int64), seed=seed,
-        overwrite=parsed.overwrite)
+        block_idx=i0 + np.arange(nb, dtype=np.int64), seed=seed,
+        overwrite=parsed.overwrite,
+        no_perm=bool(getattr(header, "error_bounded", False)))
 
 
 def pad_parts(mode: int, block_size: int, dtype, value_range,
-              parts: Sequence[PlanPart], seed: int = 0
-              ) -> Tuple[DecodePlan, int]:
+              parts: Sequence[PlanPart], seed: int = 0,
+              no_perm: bool = False) -> Tuple[DecodePlan, int]:
     """Pad R ragged request parts into ONE plan of shape ``(R * nbm,)``.
 
     The read-side mirror of the encoder's masked ragged batches: requests
@@ -257,7 +264,8 @@ def pad_parts(mode: int, block_size: int, dtype, value_range,
         mode=mode, block_size=block_size, dtype=dt, value_range=value_range,
         payloads=payloads, src=src.ravel(),
         bases=None if bases is None else bases.ravel(),
-        is_hit=is_hit.ravel(), block_idx=block_idx.ravel(), seed=seed)
+        is_hit=is_hit.ravel(), block_idx=block_idx.ravel(), seed=seed,
+        no_perm=no_perm)
     return plan, nbm
 
 
@@ -267,7 +275,8 @@ def _reconstruct_numpy(plan: DecodePlan) -> np.ndarray:
     rows = plan.payloads[plan.src]          # fancy index: always a fresh copy
     if plan.mode == MODE_STD:
         out = rows
-        hit_pos = np.flatnonzero(plan.is_hit)
+        hit_pos = (np.zeros(0, dtype=np.int64) if plan.no_perm
+                   else np.flatnonzero(plan.is_hit))
         if len(hit_pos):
             perm = hit_perms(plan.seed, plan.block_idx[hit_pos],
                              plan.block_size)
@@ -360,7 +369,8 @@ def _run_device(plan: DecodePlan, backend: str) -> np.ndarray:
             perm = np.broadcast_to(
                 np.arange(plan.block_size, dtype=np.int64),
                 (nbp, plan.block_size)).copy()
-            hit_pos = np.flatnonzero(plan.is_hit)
+            hit_pos = (np.zeros(0, dtype=np.int64) if plan.no_perm
+                       else np.flatnonzero(plan.is_hit))
             if len(hit_pos):
                 perm[hit_pos] = hit_perms(plan.seed, plan.block_idx[hit_pos],
                                           plan.block_size)

@@ -81,6 +81,10 @@ class DictState(NamedTuple):
     dmax: jax.Array  # (D,)
     valid: jax.Array  # (D,) bool
     count: jax.Array  # () int32, number of inserts so far (FIFO position)
+    # (D, n) raw (stream-order) payload rows, kept only for the error-bounded
+    # mode's pointwise |x - x_hat| check; (0, n) when the mode is off so the
+    # pytree structure (and partition specs) stay constant at zero cost.
+    raw_blocks: jax.Array
 
 
 class EncoderParams(NamedTuple):
@@ -88,12 +92,22 @@ class EncoderParams(NamedTuple):
     rel_tol: float  # relative tolerance r for the min/max check (eq. 3)
     use_minmax: bool  # paper's new gate; False = "KS test only" mode
     use_ks: bool = True  # False = min/max check alone (ablation)
+    # error-bounded mode (2404.02840 taxonomy): a would-be hit whose
+    # pointwise reconstruction error exceeds the bound is demoted to a miss.
+    # None disables the check; error_cumulative bounds the running cumsum of
+    # the payload difference instead (delta mode, where decoded samples are
+    # base + cumsum of stored diffs).
+    error_bound: Optional[float] = None
+    error_cumulative: bool = False
 
 
 def init_state(num_dict: int, n: int, dtype=jnp.float32,
-               channels: Optional[int] = None) -> DictState:
+               channels: Optional[int] = None,
+               raw: bool = False) -> DictState:
     """Fresh (empty-dictionary) carry; ``channels=C`` stacks C independent
-    per-channel states on a leading axis for the batched encoder."""
+    per-channel states on a leading axis for the batched encoder.  ``raw``
+    allocates the raw-payload rows the error-bounded check matches against
+    (required whenever ``error_bound`` is set)."""
     lead = () if channels is None else (channels,)
     return DictState(
         sorted_blocks=jnp.zeros(lead + (num_dict, n), dtype=dtype),
@@ -101,7 +115,21 @@ def init_state(num_dict: int, n: int, dtype=jnp.float32,
         dmax=jnp.zeros(lead + (num_dict,), dtype=dtype),
         valid=jnp.zeros(lead + (num_dict,), dtype=bool),
         count=jnp.zeros(lead, dtype=jnp.int32),
+        raw_blocks=jnp.zeros(lead + (num_dict if raw else 0, n),
+                             dtype=dtype),
     )
+
+
+def _error_gate(block, raw_blocks, params: EncoderParams):
+    """Per-entry pointwise error check: ``max|err| <= bound`` where err is
+    the payload difference (std/residual: decoded samples differ from the
+    original by exactly this) or its running cumsum (delta: decoded samples
+    are base + cumsum of stored diffs).  With a value_range the bound holds
+    in the circular metric (payloads are wrap-centered)."""
+    diff = block[None, :] - raw_blocks
+    if params.error_cumulative:
+        diff = jnp.cumsum(diff, axis=-1)
+    return jnp.max(jnp.abs(diff), axis=-1) <= params.error_bound
 
 
 def _minmax_gate(xmin, xmax, dmin, dmax, r):
@@ -144,6 +172,8 @@ def _step(matcher, params: EncoderParams, state: DictState, block_valid):
     ks_ok = (ks <= params.d_crit) if params.use_ks else ones
 
     ok = state.valid & mm_ok & ks_ok
+    if params.error_bound is not None:
+        ok = ok & _error_gate(block, state.raw_blocks, params)
     is_hit = jnp.any(ok) & valid
     first_hit = jnp.argmax(ok)  # lowest passing slot == early-exit result
 
@@ -158,12 +188,18 @@ def _step(matcher, params: EncoderParams, state: DictState, block_valid):
         state.sorted_blocks, xs[None, :], (ins_slot, 0)
     )
     upd = jnp.arange(num_dict) == ins_slot
+    raw_blocks = state.raw_blocks
+    if params.error_bound is not None:
+        new_raw = jax.lax.dynamic_update_slice(
+            raw_blocks, block[None, :], (ins_slot, 0))
+        raw_blocks = jnp.where(do_ins, new_raw, raw_blocks)
     new_state = DictState(
         sorted_blocks=jnp.where(do_ins, new_sorted, state.sorted_blocks),
         dmin=jnp.where(do_ins & upd, xmin, state.dmin),
         dmax=jnp.where(do_ins & upd, xmax, state.dmax),
         valid=jnp.where(do_ins & upd, True, state.valid),
         count=state.count + do_ins.astype(jnp.int32),
+        raw_blocks=raw_blocks,
     )
     return new_state, (is_hit, slot, overwrite)
 
@@ -182,12 +218,16 @@ def _pad_state_d(state: DictState, pad: int) -> DictState:
     the gate and are never inserted (FIFO slot uses the logical D)."""
     if pad == 0:
         return state
+    raw = state.raw_blocks
+    if raw.shape[0]:  # empty (0, n) raw stays empty: the mode is off
+        raw = jnp.pad(raw, ((0, pad), (0, 0)))
     return DictState(
         sorted_blocks=jnp.pad(state.sorted_blocks, ((0, pad), (0, 0))),
         dmin=jnp.pad(state.dmin, (0, pad)),
         dmax=jnp.pad(state.dmax, (0, pad)),
         valid=jnp.pad(state.valid, (0, pad)),
         count=state.count,
+        raw_blocks=raw,
     )
 
 
@@ -195,12 +235,16 @@ def _slice_state_d(state: DictState, num_dict: int) -> DictState:
     """Inverse of ``_pad_state_d``: back to the logical-D resumable carry."""
     if state.sorted_blocks.shape[0] == num_dict:
         return state
+    raw = state.raw_blocks
+    if raw.shape[0]:
+        raw = raw[:num_dict]
     return DictState(
         sorted_blocks=state.sorted_blocks[:num_dict],
         dmin=state.dmin[:num_dict],
         dmax=state.dmax[:num_dict],
         valid=state.valid[:num_dict],
         count=state.count,
+        raw_blocks=raw,
     )
 
 
@@ -216,12 +260,24 @@ def _step_fused(tile_d: int, params: EncoderParams, num_dict: int,
 
     block, valid = block_valid
     xs = jnp.sort(block)
-    new_sorted, ndmin, ndmax, nvalid, dec = encode_step_pallas(
-        xs, state.sorted_blocks, state.dmin, state.dmax, state.valid,
-        state.count, valid, d_crit=params.d_crit, rel_tol=params.rel_tol,
-        use_minmax=params.use_minmax, use_ks=params.use_ks,
-        num_dict=num_dict, tile_d=tile_d, interpret=_INTERPRET)
-    new_state = DictState(new_sorted, ndmin, ndmax, nvalid, dec[DEC_COUNT])
+    if params.error_bound is None:
+        new_sorted, ndmin, ndmax, nvalid, dec = encode_step_pallas(
+            xs, state.sorted_blocks, state.dmin, state.dmax, state.valid,
+            state.count, valid, d_crit=params.d_crit, rel_tol=params.rel_tol,
+            use_minmax=params.use_minmax, use_ks=params.use_ks,
+            num_dict=num_dict, tile_d=tile_d, interpret=_INTERPRET)
+        new_raw = state.raw_blocks
+    else:
+        new_sorted, ndmin, ndmax, nvalid, new_raw, dec = encode_step_pallas(
+            xs, state.sorted_blocks, state.dmin, state.dmax, state.valid,
+            state.count, valid, d_crit=params.d_crit, rel_tol=params.rel_tol,
+            use_minmax=params.use_minmax, use_ks=params.use_ks,
+            num_dict=num_dict, tile_d=tile_d, interpret=_INTERPRET,
+            raw=block, raw_blocks=state.raw_blocks,
+            error_bound=params.error_bound,
+            error_cumulative=params.error_cumulative)
+    new_state = DictState(new_sorted, ndmin, ndmax, nvalid, dec[DEC_COUNT],
+                          new_raw)
     return new_state, (dec[DEC_HIT].astype(bool), dec[DEC_SLOT],
                        dec[DEC_OVER].astype(bool))
 
@@ -239,14 +295,15 @@ def _encode_scan():
     @functools.partial(
         jax.jit,
         static_argnames=("d_crit", "rel_tol", "use_minmax", "use_ks",
-                         "matcher"),
+                         "matcher", "error_bound", "error_cumulative"),
         donate_argnums=donate,
     )
     def scan(state: DictState, blocks, valid, *, d_crit, rel_tol, use_minmax,
-             use_ks, matcher):
+             use_ks, matcher, error_bound=None, error_cumulative=False):
         params = EncoderParams(
             d_crit=d_crit, rel_tol=rel_tol, use_minmax=use_minmax,
-            use_ks=use_ks,
+            use_ks=use_ks, error_bound=error_bound,
+            error_cumulative=error_cumulative,
         )
         if _is_fused(matcher):
             tile_d = matcher[1]
@@ -405,6 +462,8 @@ def encode_decisions(
     rel_tol: float = 0.1,
     use_minmax: bool = True,
     use_ks: bool = True,
+    error_bound: Optional[float] = None,
+    error_cumulative: bool = False,
     matcher: Optional[Union[Callable, str, Tuple]] = None,
     state: Optional[DictState] = None,
     valid: Optional[jax.Array] = None,
@@ -434,12 +493,18 @@ def encode_decisions(
                               n=blocks.shape[-1], dtype=blocks.dtype)
     return_state = state is not None
     if state is None:
-        state = init_state(num_dict, blocks.shape[-1], dtype=blocks.dtype)
-    if valid is None:
-        valid = jnp.ones(blocks.shape[0], dtype=bool)
+        state = init_state(num_dict, blocks.shape[-1], dtype=blocks.dtype,
+                           raw=error_bound is not None)
+    if error_bound is not None and state.raw_blocks.shape[-2] == 0:
+        raise ValueError("error_bound requires a state created with "
+                         "init_state(..., raw=True)")
     out, new_state = _encode_scan()(
-        state, blocks, valid, d_crit=float(d_crit), rel_tol=float(rel_tol),
+        state, blocks,
+        jnp.ones(blocks.shape[0], dtype=bool) if valid is None else valid,
+        d_crit=float(d_crit), rel_tol=float(rel_tol),
         use_minmax=use_minmax, use_ks=use_ks, matcher=matcher,
+        error_bound=None if error_bound is None else float(error_bound),
+        error_cumulative=bool(error_cumulative),
     )
     return (out, new_state) if return_state else out
 
@@ -471,6 +536,7 @@ def encode_decisions_batched(
         state = init_state(
             num_dict, blocks_cn.shape[-1], dtype=blocks_cn.dtype,
             channels=blocks_cn.shape[0],
+            raw=kw.get("error_bound") is not None,
         )
     if valid is None:
         valid = jnp.ones(blocks_cn.shape[:2], dtype=bool)
@@ -496,6 +562,7 @@ def state_partition_spec(axis_name: str):
         dmax=P(axis_name, None),
         valid=P(axis_name, None),
         count=P(axis_name),
+        raw_blocks=P(axis_name, None, None),
     )
 
 
@@ -520,13 +587,15 @@ def _sharded_scan(mesh, axis_name: str):
     @functools.partial(
         jax.jit,
         static_argnames=("d_crit", "rel_tol", "use_minmax", "use_ks",
-                         "matcher"),
+                         "matcher", "error_bound", "error_cumulative"),
         donate_argnums=donate,
     )
     def scan(state, blocks, valid, *, d_crit, rel_tol, use_minmax, use_ks,
-             matcher):
+             matcher, error_bound=None, error_cumulative=False):
         params = EncoderParams(d_crit=d_crit, rel_tol=rel_tol,
-                               use_minmax=use_minmax, use_ks=use_ks)
+                               use_minmax=use_minmax, use_ks=use_ks,
+                               error_bound=error_bound,
+                               error_cumulative=error_cumulative)
         num_dict = state.sorted_blocks.shape[-2]
         if _is_fused(matcher):
             tile_d = matcher[1]
@@ -565,6 +634,8 @@ def encode_decisions_sharded(
     rel_tol: float = 0.1,
     use_minmax: bool = True,
     use_ks: bool = True,
+    error_bound: Optional[float] = None,
+    error_cumulative: bool = False,
     matcher: Optional[Union[Callable, str, Tuple]] = None,
     state: Optional[DictState] = None,
     valid: Optional[jax.Array] = None,
@@ -589,13 +660,16 @@ def encode_decisions_sharded(
     return_state = state is not None
     if state is None:
         state = init_state(num_dict, blocks_cn.shape[-1],
-                           dtype=blocks_cn.dtype, channels=C)
+                           dtype=blocks_cn.dtype, channels=C,
+                           raw=error_bound is not None)
     if valid is None:
         valid = jnp.ones(blocks_cn.shape[:2], dtype=bool)
     out, new_state = _sharded_scan(mesh, axis_name)(
         state, blocks_cn, valid, d_crit=float(d_crit),
         rel_tol=float(rel_tol), use_minmax=use_minmax, use_ks=use_ks,
         matcher=matcher,
+        error_bound=None if error_bound is None else float(error_bound),
+        error_cumulative=bool(error_cumulative),
     )
     return (out, new_state) if return_state else out
 
@@ -625,6 +699,8 @@ def _step_dshard(matcher, params: EncoderParams, num_dict: int,
     mm_ok = mm if params.use_minmax else ones
     ks_ok = (ks <= params.d_crit) if params.use_ks else ones
     ok = state.valid & mm_ok & ks_ok
+    if params.error_bound is not None:
+        ok = ok & _error_gate(block, state.raw_blocks, params)
 
     ids = off + jnp.arange(shard_d, dtype=jnp.int32)
     local_first = jnp.min(jnp.where(ok, ids, _SENTINEL))
@@ -644,12 +720,18 @@ def _step_dshard(matcher, params: EncoderParams, num_dict: int,
     new_sorted = jax.lax.dynamic_update_slice(
         state.sorted_blocks, xs[None, :], (lclip, 0))
     upd = jnp.arange(shard_d) == lclip
+    raw_blocks = state.raw_blocks
+    if params.error_bound is not None:
+        new_raw = jax.lax.dynamic_update_slice(
+            raw_blocks, block[None, :], (lclip, 0))
+        raw_blocks = jnp.where(do_here, new_raw, raw_blocks)
     new_state = DictState(
         sorted_blocks=jnp.where(do_here, new_sorted, state.sorted_blocks),
         dmin=jnp.where(do_here & upd, xmin, state.dmin),
         dmax=jnp.where(do_here & upd, xmax, state.dmax),
         valid=jnp.where(do_here & upd, True, state.valid),
         count=state.count + do_ins.astype(jnp.int32),
+        raw_blocks=raw_blocks,
     )
     return new_state, (is_hit, slot, overwrite)
 
@@ -666,6 +748,7 @@ def state_dshard_partition_spec(ch_axis: str, dict_axis: str):
         dmax=P(ch_axis, dict_axis),
         valid=P(ch_axis, dict_axis),
         count=P(ch_axis),
+        raw_blocks=P(ch_axis, dict_axis, None),
     )
 
 
@@ -691,16 +774,21 @@ def _dsharded_scan(mesh, ch_axis: str, dict_axis: str):
     @functools.partial(
         jax.jit,
         static_argnames=("d_crit", "rel_tol", "use_minmax", "use_ks",
-                         "matcher"),
+                         "matcher", "error_bound", "error_cumulative"),
         donate_argnums=donate,
     )
     def scan(state, blocks, valid, *, d_crit, rel_tol, use_minmax, use_ks,
-             matcher):
+             matcher, error_bound=None, error_cumulative=False):
         params = EncoderParams(d_crit=d_crit, rel_tol=rel_tol,
-                               use_minmax=use_minmax, use_ks=use_ks)
+                               use_minmax=use_minmax, use_ks=use_ks,
+                               error_bound=error_bound,
+                               error_cumulative=error_cumulative)
         num_dict = state.sorted_blocks.shape[1]
         shards = mesh.shape[dict_axis]
         pad = (-num_dict) % shards
+        raw = state.raw_blocks
+        if raw.shape[1]:
+            raw = jnp.pad(raw, ((0, 0), (0, pad), (0, 0)))
         pstate = DictState(
             sorted_blocks=jnp.pad(state.sorted_blocks,
                                   ((0, 0), (0, pad), (0, 0))),
@@ -708,6 +796,7 @@ def _dsharded_scan(mesh, ch_axis: str, dict_axis: str):
             dmax=jnp.pad(state.dmax, ((0, 0), (0, pad))),
             valid=jnp.pad(state.valid, ((0, 0), (0, pad))),
             count=state.count,
+            raw_blocks=raw,
         )
         step = functools.partial(_step_dshard, matcher, params, num_dict,
                                  dict_axis)
@@ -731,6 +820,8 @@ def _dsharded_scan(mesh, ch_axis: str, dict_axis: str):
             dmax=new_p.dmax[:, :num_dict],
             valid=new_p.valid[:, :num_dict],
             count=new_p.count,
+            raw_blocks=(new_p.raw_blocks[:, :num_dict]
+                        if new_p.raw_blocks.shape[1] else new_p.raw_blocks),
         )
         return out, new_state
 
@@ -748,6 +839,8 @@ def encode_decisions_dsharded(
     rel_tol: float = 0.1,
     use_minmax: bool = True,
     use_ks: bool = True,
+    error_bound: Optional[float] = None,
+    error_cumulative: bool = False,
     matcher: Optional[Union[Callable, str, Tuple]] = None,
     state: Optional[DictState] = None,
     valid: Optional[jax.Array] = None,
@@ -778,12 +871,15 @@ def encode_decisions_dsharded(
     return_state = state is not None
     if state is None:
         state = init_state(num_dict, blocks_cn.shape[-1],
-                           dtype=blocks_cn.dtype, channels=C)
+                           dtype=blocks_cn.dtype, channels=C,
+                           raw=error_bound is not None)
     if valid is None:
         valid = jnp.ones(blocks_cn.shape[:2], dtype=bool)
     out, new_state = _dsharded_scan(mesh, ch_axis, dict_axis)(
         state, blocks_cn, valid, d_crit=float(d_crit),
         rel_tol=float(rel_tol), use_minmax=use_minmax, use_ks=use_ks,
         matcher=matcher,
+        error_bound=None if error_bound is None else float(error_bound),
+        error_cumulative=bool(error_cumulative),
     )
     return (out, new_state) if return_state else out

@@ -28,6 +28,7 @@ import numpy as np
 
 from . import stream as stream_mod
 from .ks import critical_distance
+from .select import SelectorConfig
 from .session import IdealemSession
 from .stream import MODE_DELTA, MODE_RESIDUAL, MODE_STD
 from .transforms import np_wrap_centered
@@ -53,6 +54,18 @@ class IdealemCodec:
     matcher: Optional[str] = None
     decode_seed: int = 0
     decode_backend: str = "numpy"  # reconstruction backend (core.decode)
+    # error-bounded mode: a would-be hit whose pointwise reconstruction
+    # error would exceed the bound is demoted to a miss, and hit decode
+    # skips the exchangeability permutation so the bound literally holds on
+    # every sample (max|x - x_hat| <= error_bound; circular metric when
+    # value_range wraps).  error_bound_rel is the bound as a fraction of the
+    # value_range width, resolved to an absolute error_bound here.
+    error_bound: Optional[float] = None
+    error_bound_rel: Optional[float] = None
+    # adaptive per-channel mode selection (core.select): streaming-only --
+    # sessions switch transform/threshold at segment restarts
+    adaptive: bool = False
+    selector: Optional[SelectorConfig] = None
     d_crit: float = field(init=False)
 
     def __post_init__(self):
@@ -69,6 +82,13 @@ class IdealemCodec:
             raise ValueError("max_count must be in [1, 255]")
         if self.block_size < 2:
             raise ValueError("block_size must be >= 2")
+        if self.error_bound_rel is not None:
+            if self.value_range is None:
+                raise ValueError("error_bound_rel requires value_range")
+            self.error_bound = float(self.error_bound_rel) * (
+                self.value_range[1] - self.value_range[0])
+        if self.error_bound is not None and not self.error_bound > 0:
+            raise ValueError("error_bound must be positive")
         n = self._lem_n()
         self.d_crit = critical_distance(self.alpha, n, n)
 
@@ -113,6 +133,9 @@ class IdealemCodec:
     def encode(self, x: np.ndarray) -> bytes:
         """One-shot encode: a single-feed session assembled as one segment."""
         x = np.ascontiguousarray(x)
+        if self.adaptive:
+            raise ValueError("adaptive codecs are streaming-only; use "
+                             "codec.session() and feed chunks")
         if x.ndim != 1:
             raise ValueError(
                 "IdealemCodec.encode compresses 1-D arrays; use "

@@ -28,13 +28,23 @@ __all__ = [
 
 _SERIES_TERMS = 40
 
+# Below this the alternating series needs more terms than we carry: the
+# partial sums of the even-truncated series cancel as lam -> 0 (Q(0) came
+# out 0.0 instead of 1.0).  The true survival function satisfies
+# 1 - Q(0.1) ~ 4e-53, far below f64 resolution, so returning exactly 1.0
+# under the cutoff agrees with scipy.special.kolmogorov to machine
+# precision while the series itself is accurate (truncation < 3e-15) above.
+_SMALL_LAM = 0.1
+
 
 def kolmogorov_sf(lam):
     """Survival function of the Kolmogorov distribution.
 
     Q_KS(lam) = 2 * sum_{j>=1} (-1)^{j-1} exp(-2 j^2 lam^2), clipped to [0,1].
-    Matches scipy.special.kolmogorov to ~1e-8 for lam >= 0.15; both saturate
-    at 1 below that.
+    For lam < 0.1 the truncated series is replaced by its limit 1.0 (the
+    scipy small-lam regime, where 1 - Q(lam) underflows f64); above the
+    cutoff it matches scipy.special.kolmogorov to ~1e-8 in f32, ~1e-14 in
+    f64.
     """
     lam = jnp.asarray(lam)
     j = jnp.arange(1, _SERIES_TERMS + 1, dtype=lam.dtype if jnp.issubdtype(lam.dtype, jnp.floating) else jnp.float32)
@@ -43,11 +53,16 @@ def kolmogorov_sf(lam):
         (j % 2) == 1, 1.0, -1.0
     ) * jnp.exp(-2.0 * (j ** 2)[..., :] * (lam_[..., None] ** 2))
     q = 2.0 * jnp.sum(terms, axis=-1)
-    return jnp.clip(q, 0.0, 1.0)
+    return jnp.where(lam_ < _SMALL_LAM, 1.0, jnp.clip(q, 0.0, 1.0))
 
 
 def ks_pvalue(d, n1, n2):
-    """Asymptotic two-sided two-sample KS p-value (scipy ``mode='asymp'``)."""
+    """Asymptotic two-sided two-sample KS p-value (scipy ``mode='asymp'``).
+
+    Includes the small-lam special case: for sqrt(n1*n2/(n1+n2))*d < 0.1
+    (in particular d == 0, identical samples) the p-value is exactly 1.0,
+    not the cancelled partial sum the raw series produces.
+    """
     d = jnp.asarray(d)
     en = (n1 * n2) / (n1 + n2)
     return kolmogorov_sf(jnp.sqrt(en) * d)
@@ -103,6 +118,8 @@ def critical_distance(alpha: float, n1: int, n2: int) -> float:
     en = (n1 * n2) / (n1 + n2)
 
     def q(lam: float) -> float:
+        if lam < _SMALL_LAM:
+            return 1.0
         j = np.arange(1, _SERIES_TERMS + 1)
         val = 2.0 * np.sum((-1.0) ** (j - 1) * np.exp(-2.0 * j * j * lam * lam))
         return float(np.clip(val, 0.0, 1.0))

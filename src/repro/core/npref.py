@@ -36,6 +36,8 @@ def ks_statistic_np(x: np.ndarray, y: np.ndarray) -> float:
 def ks_pvalue_np(d: float, n1: int, n2: int, terms: int = 40) -> float:
     en = n1 * n2 / (n1 + n2)
     lam = max(np.sqrt(en) * d, 1e-12)
+    if lam < 0.1:  # keep byte-consistent with ks._SMALL_LAM
+        return 1.0
     j = np.arange(1, terms + 1)
     q = 2.0 * np.sum((-1.0) ** (j - 1) * np.exp(-2.0 * j * j * lam * lam))
     return float(np.clip(q, 0.0, 1.0))
@@ -67,6 +69,8 @@ def encode_decisions_np(
     rel_tol: float = 0.1,
     use_minmax: bool = True,
     use_ks: bool = True,
+    error_bound: Optional[float] = None,
+    error_cumulative: bool = False,
     state: Optional[NpDictState] = None,
 ) -> Tuple[np.ndarray, ...]:
     """Sequential early-exit reference; same outputs as encoder.encode_decisions.
@@ -100,6 +104,15 @@ def encode_decisions_np(
                     continue
             if use_ks and ks_statistic_np(x, dict_blocks[s]) > d_crit:
                 continue
+            if error_bound is not None:
+                # pointwise demotion: the stored entry's raw row is what the
+                # no-permutation decode reproduces, so max|err| over it (or
+                # over its running cumsum in delta mode) IS the decode error
+                diff = x - dict_blocks[s]
+                if error_cumulative:
+                    diff = np.cumsum(diff)
+                if float(np.max(np.abs(diff))) > error_bound:
+                    continue
             hit = s
             break
         if hit >= 0:

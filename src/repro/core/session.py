@@ -34,7 +34,7 @@ throughput after the first chunk.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import TYPE_CHECKING, List, NamedTuple, Optional, Union
 
 import numpy as np
@@ -72,6 +72,9 @@ class SessionStats:
     segments: int = 0
     bytes_in: int = 0
     bytes_out: int = 0
+    # adaptive sessions: accepted selector switches (core.select), as dicts
+    mode_switches: int = 0
+    events: List[dict] = field(default_factory=list)
 
     @property
     def hit_rate(self) -> float:
@@ -83,6 +86,8 @@ class SessionStats:
             "hit_rate": self.hit_rate, "segments": self.segments,
             "bytes_in": self.bytes_in, "bytes_out": self.bytes_out,
             "ratio": self.bytes_in / max(self.bytes_out, 1),
+            "mode_switches": self.mode_switches,
+            "events": list(self.events),
         }
 
 
@@ -125,6 +130,31 @@ class IdealemSession:
         self._stats = [SessionStats() for _ in range(C)]
         self._dev_state = None   # batched DictState (jax / pallas backends)
         self._np_states = None   # list[NpDictState] (numpy backend)
+        # adaptive per-channel mode selection (core.select): each channel
+        # carries its own current codec variant + quantized d_crit; a switch
+        # resets the channel dictionary and restarts its segment chain.
+        self.adaptive = bool(getattr(codec, "adaptive", False))
+        self._codecs = [codec] * C
+        self._d_crit = [float(codec.d_crit)] * C
+        self._selectors = None
+        self._adapt_states = None  # per-channel DictState list (device)
+        if self.adaptive:
+            if not emit_segments:
+                raise ValueError(
+                    "adaptive sessions require emit_segments=True (mode "
+                    "switches live at segment restarts)")
+            if container:
+                raise ValueError(
+                    "adaptive sessions do not support container output")
+            if plan is not None:
+                raise ValueError(
+                    "adaptive sessions do not support encode plans")
+            from .select import ChannelSelector
+            self._selectors = [
+                ChannelSelector(codec.block_size, mode=codec.mode,
+                                config=getattr(codec, "selector", None))
+                for _ in range(C)]
+            self._adapt_states = [None] * C
         # host-side accumulation for emit_segments=False (one-shot assembly)
         self._buf = [
             {"raw": [], "payload": [], "bases": [], "hit": [], "slot": [],
@@ -144,6 +174,10 @@ class IdealemSession:
             use_minmax=cdc.use_minmax,
             use_ks=cdc.use_ks,
         )
+        eb = getattr(cdc, "error_bound", None)
+        if eb is not None:
+            kw["error_bound"] = float(eb)
+            kw["error_cumulative"] = cdc.mode == "delta"
         if cdc.backend == "numpy":
             from .npref import encode_decisions_np, np_init_state
             if self._np_states is None:
@@ -181,7 +215,8 @@ class IdealemSession:
             valid[self._C:] = False
             if self._dev_state is None:
                 st = init_state(cdc.num_dict, pj.shape[-1],
-                                dtype=jnp.float32, channels=Cp)
+                                dtype=jnp.float32, channels=Cp,
+                                raw=eb is not None)
                 self._dev_state = jax.device_put(st, plan.state_sharding())
             if getattr(plan, "dict_shards", 1) > 1:
                 (h, s, o), self._dev_state = encode_decisions_dsharded(
@@ -197,16 +232,115 @@ class IdealemSession:
             if self._dev_state is None:
                 self._dev_state = init_state(
                     cdc.num_dict, pj.shape[-1], dtype=jnp.float32,
-                    channels=self._C)
+                    channels=self._C, raw=eb is not None)
             # the carry is donated to the scan: the old state is consumed
             (h, s, o), self._dev_state = encode_decisions_batched(
                 pj, state=self._dev_state, **kw)
         h, s, o = (np.asarray(v) for v in (h, s, o))
         return [(h[ci], s[ci], o[ci]) for ci in range(self._C)]
 
+    # ------------------------------------------------- adaptive mode selection
+    def _channel_kw(self, ci: int) -> dict:
+        """Per-channel encode kwargs under the channel's current codec
+        variant (adaptive sessions only)."""
+        cdc0 = self.codec
+        cdc = self._codecs[ci]
+        kw = dict(
+            num_dict=cdc0.num_dict,
+            d_crit=float(self._d_crit[ci]),
+            rel_tol=float(cdc0.rel_tol),
+            use_minmax=cdc0.use_minmax,
+            use_ks=cdc0.use_ks,
+        )
+        eb = getattr(cdc, "error_bound", None)
+        if eb is not None:
+            kw["error_bound"] = float(eb)
+            kw["error_cumulative"] = cdc.mode == "delta"
+        return kw
+
+    def _decide_adaptive(self, payloads):
+        """Per-channel decisions under per-channel codec variants.  Channels
+        loop (modes may differ in payload width and threshold), each with
+        its own resumable carry."""
+        cdc0 = self.codec
+        if cdc0.backend == "numpy":
+            from .npref import encode_decisions_np, np_init_state
+            if self._np_states is None:
+                self._np_states = [np_init_state(cdc0.num_dict)
+                                   for _ in range(self._C)]
+            return [
+                encode_decisions_np(payloads[ci],
+                                    state=self._np_states[ci],
+                                    **self._channel_kw(ci))[0]
+                for ci in range(self._C)
+            ]
+        import jax.numpy as jnp
+        from .encoder import encode_decisions, init_state
+        outs = []
+        for ci in range(self._C):
+            kw = self._channel_kw(ci)
+            matcher = getattr(cdc0, "matcher", None)
+            if cdc0.backend == "pallas":
+                kw["matcher"] = matcher or "fused"
+            elif matcher:
+                kw["matcher"] = matcher
+            pj = jnp.asarray(payloads[ci], dtype=jnp.float32)
+            if self._adapt_states[ci] is None:
+                self._adapt_states[ci] = init_state(
+                    cdc0.num_dict, pj.shape[-1], dtype=jnp.float32,
+                    raw="error_bound" in kw)
+            (h, s, o), self._adapt_states[ci] = encode_decisions(
+                pj, state=self._adapt_states[ci], **kw)
+            outs.append((np.asarray(h), np.asarray(s), np.asarray(o)))
+        return outs
+
+    def _apply_switch(self, ci: int, ev) -> None:
+        """Commit an accepted selector switch: swap the channel's codec
+        variant, quantize its threshold, drop its dictionary and restart its
+        segment chain (the next segment is cont=False, so decoders treat it
+        as a fresh section)."""
+        import dataclasses
+        cdc = self.codec if ev.new_mode == self.codec.mode \
+            else dataclasses.replace(self.codec, mode=ev.new_mode)
+        self._codecs[ci] = cdc
+        self._d_crit[ci] = float(cdc.d_crit) * float(ev.new_scale)
+        self._started[ci] = False
+        if self._np_states is not None:
+            from .npref import np_init_state
+            self._np_states[ci] = np_init_state(self.codec.num_dict)
+        if self._adapt_states is not None:
+            self._adapt_states[ci] = None
+        st = self._stats[ci]
+        st.mode_switches += 1
+        st.events.append(ev.as_dict())
+
+    def _feed_adaptive(self, chunk):
+        if self._finished:
+            raise RuntimeError("session already finished")
+        arr = np.asarray(chunk)
+        arr2 = arr[None, :] if self.channels is None else arr
+        if arr2.ndim != 2 or arr2.shape[0] != self._C:
+            raise ValueError(
+                f"expected {'1-D' if self.channels is None else f'(C={self._C}, m)'}"
+                f" chunk, got {arr.shape}")
+        # switches apply at the feed boundary, from statistics through the
+        # *previous* feeds -- a segment never changes transform mid-flight
+        for ci in range(self._C):
+            ev = self._selectors[ci].decide(self._stats[ci].blocks)
+            if ev is not None:
+                self._apply_switch(ci, ev)
+        for ci in range(self._C):
+            self._selectors[ci].observe(arr2[ci])
+        prep = self.prepare(chunk)
+        if prep is None:
+            empty = [b""] * self._C
+            return empty[0] if self.channels is None else empty
+        outs = self.commit(prep, self._decide_adaptive(prep.payloads))
+        return outs[0] if self.channels is None else outs
+
     def _make_header(self, ci: int, nb: int, tail: np.ndarray,
                      more: bool) -> StreamHeader:
-        cdc = self.codec
+        cdc = self._codecs[ci]
         return StreamHeader(
             mode=cdc.mode_id,
             block_size=cdc.block_size,
@@ -218,6 +352,7 @@ class IdealemSession:
             tail=tail,
             more=more,
             cont=self._started[ci],
+            error_bounded=getattr(cdc, "error_bound", None) is not None,
         )
 
     def _emit(self, ci, raw, payload, bases, hit, slot, ovw, tail, more):
@@ -233,11 +368,12 @@ class IdealemSession:
         return seg
 
     def _empty(self, ci: int):
-        B = self.codec.block_size
-        n_lem = self.codec._lem_n()
+        cdc = self._codecs[ci]
+        B = cdc.block_size
+        n_lem = cdc._lem_n()
         raw = np.zeros((0, B), dtype=self.dtype)
         payload = np.zeros((0, n_lem), dtype=self.dtype)
-        bases = None if self.codec.mode == "std" else np.zeros(0, self.dtype)
+        bases = None if cdc.mode == "std" else np.zeros(0, self.dtype)
         z = np.zeros(0, dtype=np.int32)
         return raw, payload, bases, z.astype(bool), z, z.astype(bool)
 
@@ -273,10 +409,14 @@ class IdealemSession:
         blocks = np.stack([j[: nb * B].reshape(nb, B) for j in joined])
         payloads, bases = [], []
         for ci in range(self._C):
-            p, b = self.codec._transform(blocks[ci])
+            p, b = self._codecs[ci]._transform(blocks[ci])
             payloads.append(p)
             bases.append(b)
-        return PreparedChunk(blocks, np.stack(payloads), bases, nb)
+        # adaptive channels may carry different payload widths (std vs
+        # delta/residual), so they stay a ragged list; the static path keeps
+        # the stacked array the batched device scan consumes
+        stacked = payloads if self.adaptive else np.stack(payloads)
+        return PreparedChunk(blocks, stacked, bases, nb)
 
     def commit(self, prep: PreparedChunk, decisions) -> List[bytes]:
         """Apply per-channel decision triples for a prepared chunk: update
@@ -310,6 +450,8 @@ class IdealemSession:
         ``bytes`` for single-channel sessions, a list for ``channels=C``).
         Samples not filling a block are buffered for the next feed/finish;
         an empty ``bytes`` means no full block completed yet."""
+        if self.adaptive:
+            return self._feed_adaptive(chunk)
         prep = self.prepare(chunk)
         if prep is None:
             empty = [b""] * self._C

@@ -72,7 +72,13 @@ def segment_walk_count() -> int:
 
 MAGIC = b"IDLM"
 VERSION = 2
+# Version 3 is emitted only when a v3-only feature (f16 payloads or the
+# error-bounded no-permutation contract) is actually used, so v2 readers
+# reject such streams with a typed StreamFormatError instead of decoding
+# garbage, while every stream a v2 reader could decode stays byte-identical.
+VERSION_EB = 3
 FLAG_RANGE, FLAG_F32, FLAG_MORE, FLAG_CONT = 1, 2, 4, 8
+FLAG_F16, FLAG_EB = 16, 32
 _HDR = struct.Struct("<4sBBHBBBBddIH")  # 34 bytes (packed little-endian)
 
 
@@ -88,6 +94,8 @@ class StreamHeader:
     tail: np.ndarray
     more: bool = False  # another segment follows this one
     cont: bool = False  # continues the previous segment's dictionary state
+    error_bounded: bool = False  # hits honored a pointwise bound; decode
+    #                              skips the std-mode hit permutation
 
     @property
     def itemsize(self) -> int:
@@ -102,14 +110,19 @@ def _pack_header(h: StreamHeader) -> bytes:
         rmin, rmax = float(h.value_range[0]), float(h.value_range[1])
     if np.dtype(h.dtype) == np.float32:
         flags |= FLAG_F32
+    elif np.dtype(h.dtype) == np.float16:
+        flags |= FLAG_F16
     elif np.dtype(h.dtype) != np.float64:
         raise ValueError(f"unsupported dtype {h.dtype}")
     if h.more:
         flags |= FLAG_MORE
     if h.cont:
         flags |= FLAG_CONT
+    if h.error_bounded:
+        flags |= FLAG_EB
+    ver = VERSION_EB if flags & (FLAG_F16 | FLAG_EB) else VERSION
     buf = _HDR.pack(
-        MAGIC, VERSION, h.mode, h.block_size, h.num_dict, h.max_count,
+        MAGIC, ver, h.mode, h.block_size, h.num_dict, h.max_count,
         flags, 0, rmin, rmax, h.n_blocks, len(h.tail),
     )
     return buf + np.asarray(h.tail, dtype=h.dtype).tobytes()
@@ -124,7 +137,7 @@ def _unpack_header(buf: memoryview, off: int = 0) -> Tuple[StreamHeader, int]:
         raise StreamFormatError("truncated segment header", hdr_off) from None
     if magic != MAGIC:
         raise StreamFormatError("bad IDEALEM stream magic", hdr_off)
-    if ver != VERSION:
+    if ver not in (VERSION, VERSION_EB):
         raise StreamFormatError(f"unsupported stream version {ver}", hdr_off)
     if mode not in (MODE_STD, MODE_RESIDUAL, MODE_DELTA):
         raise StreamFormatError(f"unknown mode byte {mode}", hdr_off)
@@ -132,7 +145,17 @@ def _unpack_header(buf: memoryview, off: int = 0) -> Tuple[StreamHeader, int]:
         raise StreamFormatError(
             f"degenerate header fields (B={bsz}, D={ndict}, c={maxc})",
             hdr_off)
-    dtype = np.float32 if (flags & FLAG_F32) else np.float64
+    if ver == VERSION and flags & (FLAG_F16 | FLAG_EB):
+        raise StreamFormatError("v3 feature flags on a version-2 segment",
+                                hdr_off)
+    if (flags & FLAG_F32) and (flags & FLAG_F16):
+        raise StreamFormatError("both f32 and f16 dtype flags set", hdr_off)
+    if flags & FLAG_F32:
+        dtype = np.float32
+    elif flags & FLAG_F16:
+        dtype = np.float16
+    else:
+        dtype = np.float64
     off += _HDR.size
     if off + tail_len * np.dtype(dtype).itemsize > len(buf):
         raise StreamFormatError(
@@ -143,7 +166,8 @@ def _unpack_header(buf: memoryview, off: int = 0) -> Tuple[StreamHeader, int]:
     hdr = StreamHeader(mode, bsz, ndict, maxc, np.dtype(dtype), rng,
                        n_blocks, tail,
                        more=bool(flags & FLAG_MORE),
-                       cont=bool(flags & FLAG_CONT))
+                       cont=bool(flags & FLAG_CONT),
+                       error_bounded=bool(flags & FLAG_EB))
     return hdr, off
 
 
@@ -438,6 +462,8 @@ def _walk_all(buf: memoryview, off: int = 0, fill: int = 0,
     while True:
         start = off
         header, off = _unpack_header(buf, off)
+        if segs and not header.cont:
+            fill = 0  # restart segment: fresh dictionary state
         i0, body_start, fill_in = len(hits_b), off, fill
         off, fill = _walk_segment(buf, off, header, fill, hits_b, slots_b,
                                   ovws_b)
@@ -498,16 +524,43 @@ def _gather_values(u8: np.ndarray, dt: np.dtype, P: int, base_parts,
     return bases, decode_mod.gather_rows(u8, dt, po, P)
 
 
-def _parse_arrays(data) -> Tuple[StreamHeader, _Parsed]:
-    """Parse a (possibly multi-segment) stream into struct-of-arrays form.
+def _hdr_params(h: StreamHeader):
+    """Decode-relevant header parameters (framing flags and counts excluded);
+    segments whose params differ cannot share one merged plan."""
+    return (h.mode, h.block_size, h.num_dict, h.max_count,
+            np.dtype(h.dtype).str, h.value_range, h.error_bounded)
 
-    Per-block Python work is the decision-byte walk only; value offsets are
-    recomputed per segment with the assembler's vectorized layout math and
-    every base/payload is gathered in one fancy-indexing pass."""
-    buf = memoryview(data)
-    u8 = np.frombuffer(buf, dtype=np.uint8)
-    segs, is_hit, slot, ovw = _walk_all(buf)
-    merged = replace(segs[0].header, n_blocks=len(is_hit),
+
+def _split_sections(segs: List[SegmentRef]) -> List[List[SegmentRef]]:
+    """Group a walked segment chain into *restart sections*: maximal runs of
+    segments whose dictionary state chains (every segment after the first
+    has FLAG_CONT).  An adaptive session emits a new section per mode
+    switch; plain sessions are a single section."""
+    out: List[List[SegmentRef]] = []
+    cur: List[SegmentRef] = []
+    for seg in segs:
+        if cur and not seg.header.cont:
+            out.append(cur)
+            cur = []
+        cur.append(seg)
+    out.append(cur)
+    return out
+
+
+def _section_arrays(u8, segs, is_hit, slot, ovw) -> Tuple[StreamHeader,
+                                                          _Parsed]:
+    """Merge a run of parameter-homogeneous segments (already walked) into
+    struct-of-arrays form; value offsets are recomputed per segment with
+    the assembler's layout math and gathered in one fancy-indexing pass."""
+    for seg in segs[1:]:
+        if _hdr_params(seg.header) != _hdr_params(segs[0].header):
+            raise StreamFormatError(
+                "segment parameters changed mid-stream; heterogeneous "
+                "(adaptive) streams must be decoded with decode_stream",
+                seg.start)
+    i0 = segs[0].i0
+    i1 = segs[-1].i0 + segs[-1].n_blocks
+    merged = replace(segs[0].header, n_blocks=i1 - i0,
                      tail=segs[-1].header.tail, more=False, cont=False)
     std = merged.mode == MODE_STD
     P = merged.block_size if std else merged.block_size - 1
@@ -527,7 +580,23 @@ def _parse_arrays(data) -> Tuple[StreamHeader, _Parsed]:
 
     bases, payloads = _gather_values(u8, np.dtype(merged.dtype), P,
                                      base_parts, pay_parts)
-    return merged, _Parsed(is_hit, slot, ovw, bases, payloads)
+    return merged, _Parsed(is_hit[i0:i1], slot[i0:i1], ovw[i0:i1], bases,
+                           payloads)
+
+
+def _parse_arrays(data) -> Tuple[StreamHeader, _Parsed]:
+    """Parse a (possibly multi-segment) stream into struct-of-arrays form.
+
+    Per-block Python work is the decision-byte walk only.  Requires every
+    segment to share decode parameters (raises :class:`StreamFormatError`
+    for heterogeneous adaptive streams -- those decode section-by-section
+    via :func:`decode_stream`); parameter-homogeneous restarts merge fine
+    because a restarted dictionary's hits still source the most recent
+    miss written to their slot."""
+    buf = memoryview(data)
+    u8 = np.frombuffer(buf, dtype=np.uint8)
+    segs, is_hit, slot, ovw = _walk_all(buf)
+    return _section_arrays(u8, segs, is_hit, slot, ovw)
 
 
 def parse_stream(data):
@@ -586,16 +655,32 @@ def decode_stream(data: bytes, seed: int = 0,
     sequence); decode is deterministic for a fixed stream + seed, and
     positional keying makes ``repro.store`` range decodes exact slices of
     this output.
+
+    Heterogeneous (adaptive-session) streams -- segment parameters changing
+    at a dictionary restart -- are decoded section by section with each
+    section's own header parameters; the outputs (and each section's tail)
+    concatenate in stream order.
     """
-    header, pr = _parse_arrays(data)
-    dt = np.dtype(header.dtype)
-    nb = len(pr.is_hit)
-    if nb == 0:
-        return np.concatenate([header.tail]) if len(header.tail) else (
-            np.zeros((0,), dtype=dt))
-    plan = decode_mod.plan_from_parsed(header, pr, seed=seed)
-    out = decode_mod.reconstruct(plan, backend=backend)
-    return np.concatenate([out.ravel(), header.tail])
+    buf = memoryview(data)
+    u8 = np.frombuffer(buf, dtype=np.uint8)
+    segs, is_hit, slot, ovw = _walk_all(buf)
+    dt0 = np.dtype(segs[0].header.dtype)
+    outs = []
+    for section in _split_sections(segs):
+        header, pr = _section_arrays(u8, section, is_hit, slot, ovw)
+        if np.dtype(header.dtype) != dt0:
+            raise StreamFormatError("dtype changed across restart sections",
+                                    section[0].start)
+        if len(pr.is_hit):
+            plan = decode_mod.plan_from_parsed(header, pr, seed=seed,
+                                               i0=section[0].i0)
+            outs.append(decode_mod.reconstruct(plan,
+                                               backend=backend).ravel())
+        if len(header.tail):
+            outs.append(np.asarray(header.tail, dtype=dt0))
+    if not outs:
+        return np.zeros((0,), dtype=dt0)
+    return np.concatenate(outs)
 
 
 # ----------------------------------------------- seed per-block loop oracles

@@ -54,12 +54,17 @@ SENTINEL = 2 ** 30
 DEC_BEST, DEC_HIT, DEC_SLOT, DEC_OVER, DEC_COUNT = range(5)
 
 
-def _encode_step_kernel(d_crit, rel_tol, use_minmax, use_ks, num_dict,
-                        tile_d,
-                        xs_ref, meta_ref, dict_ref, dmin_ref, dmax_ref,
-                        valid_ref,
-                        new_dict_ref, new_dmin_ref, new_dmax_ref,
-                        new_valid_ref, dec_ref):
+def _encode_step_kernel(d_crit, rel_tol, use_minmax, use_ks, error_bound,
+                        error_cumulative, num_dict, tile_d, *refs):
+    if error_bound is None:
+        (xs_ref, meta_ref, dict_ref, dmin_ref, dmax_ref, valid_ref,
+         new_dict_ref, new_dmin_ref, new_dmax_ref, new_valid_ref,
+         dec_ref) = refs
+        raw_ref = rawdict_ref = new_raw_ref = None
+    else:
+        (xs_ref, raw_ref, meta_ref, dict_ref, rawdict_ref, dmin_ref,
+         dmax_ref, valid_ref, new_dict_ref, new_raw_ref, new_dmin_ref,
+         new_dmax_ref, new_valid_ref, dec_ref) = refs
     i = pl.program_id(0)
     nprog = pl.num_programs(0)
     n = xs_ref.shape[0]
@@ -94,6 +99,20 @@ def _encode_step_kernel(d_crit, rel_tol, use_minmax, use_ks, num_dict,
         gate = dvalid & mm
     else:
         gate = dvalid
+
+    if error_bound is not None:
+        # carry the raw (stream-order) rows alongside the sorted ones and
+        # fold the pointwise-error demotion into the gate: a tile where no
+        # entry is within the bound also skips its KS rank work.  Computed
+        # in the stored dtype (no f32 cast) so the per-entry max|err| is
+        # exactly what the no-permutation decode reproduces.
+        new_raw_ref[pl.ds(off, tile_d), :] = rawdict_ref[:, :]
+        diff = raw_ref[:][None, :] - rawdict_ref[:, :]
+        if error_cumulative:
+            diff = jnp.cumsum(diff, axis=1)
+        err_ok = jnp.max(jnp.abs(diff), axis=1) <= jnp.asarray(
+            error_bound, diff.dtype)
+        gate = gate & err_ok
 
     ids = off + jax.lax.iota(jnp.int32, tile_d)
 
@@ -148,15 +167,20 @@ def _encode_step_kernel(d_crit, rel_tol, use_minmax, use_ks, num_dict,
             new_dmin_ref[pl.ds(ins, 1)] = xs_ref[pl.ds(0, 1)]
             new_dmax_ref[pl.ds(ins, 1)] = xs_ref[pl.ds(n - 1, 1)]
             new_valid_ref[pl.ds(ins, 1)] = jnp.ones((1,), jnp.bool_)
+            if error_bound is not None:
+                new_raw_ref[pl.ds(ins, 1), :] = raw_ref[:][None, :]
 
 
 @functools.partial(jax.jit, static_argnames=(
     "d_crit", "rel_tol", "use_minmax", "use_ks", "num_dict", "tile_d",
-    "interpret"))
+    "error_bound", "error_cumulative", "interpret"))
 def encode_step_pallas(xs_sorted, sorted_blocks, dmin, dmax, valid, count,
                        block_valid, *, d_crit: float, rel_tol: float,
                        num_dict: int, use_minmax: bool = True,
                        use_ks: bool = True, tile_d: int = TILE_D,
+                       raw=None, raw_blocks=None,
+                       error_bound: float | None = None,
+                       error_cumulative: bool = False,
                        interpret: bool = True):
     """One fused encode step.
 
@@ -169,42 +193,69 @@ def encode_step_pallas(xs_sorted, sorted_blocks, dmin, dmax, valid, count,
     Returns ``(new_sorted, new_dmin, new_dmax, new_valid, dec)`` where
     ``dec`` is (8,) int32 laid out by the ``DEC_*`` constants: the winning
     global index (or SENTINEL), is_hit, slot, overwrite, updated count.
+
+    With ``error_bound`` set, ``raw`` (n,) and ``raw_blocks`` (Dp, n) carry
+    the stream-order rows, the pointwise max|err| demotion joins the gate,
+    and the return becomes
+    ``(new_sorted, new_dmin, new_dmax, new_valid, new_raw, dec)``.
     """
     num_dp, n = sorted_blocks.shape
     check_tile_divisible(num_dp, tile_d, "encode_step_pallas")
     if not 1 <= num_dict <= num_dp:
         raise ValueError(f"num_dict={num_dict} outside [1, Dp={num_dp}]")
+    eb = error_bound is not None
+    if eb and (raw is None or raw_blocks is None):
+        raise ValueError("error_bound requires raw and raw_blocks")
     grid = (num_dp // tile_d,)
     meta = jnp.stack([jnp.asarray(count, jnp.int32),
                       jnp.asarray(block_valid).astype(jnp.int32)])
     kernel = functools.partial(
         _encode_step_kernel, float(d_crit), float(rel_tol), bool(use_minmax),
-        bool(use_ks), int(num_dict), int(tile_d))
-    return pl.pallas_call(
+        bool(use_ks), None if error_bound is None else float(error_bound),
+        bool(error_cumulative), int(num_dict), int(tile_d))
+    in_specs = [
+        pl.BlockSpec((n,), lambda i: (0,)),           # candidate: reused
+        pl.BlockSpec((2,), lambda i: (0,)),           # [count, valid]
+        pl.BlockSpec((tile_d, n), lambda i: (i, 0)),  # streamed dict tile
+        pl.BlockSpec((tile_d,), lambda i: (i,)),
+        pl.BlockSpec((tile_d,), lambda i: (i,)),
+        pl.BlockSpec((tile_d,), lambda i: (i,)),
+    ]
+    out_specs = [
+        # constant index maps: carry-out lives in VMEM across the grid
+        pl.BlockSpec((num_dp, n), lambda i: (0, 0)),
+        pl.BlockSpec((num_dp,), lambda i: (0,)),
+        pl.BlockSpec((num_dp,), lambda i: (0,)),
+        pl.BlockSpec((num_dp,), lambda i: (0,)),
+        pl.BlockSpec((8,), lambda i: (0,)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((num_dp, n), sorted_blocks.dtype),
+        jax.ShapeDtypeStruct((num_dp,), dmin.dtype),
+        jax.ShapeDtypeStruct((num_dp,), dmax.dtype),
+        jax.ShapeDtypeStruct((num_dp,), jnp.bool_),
+        jax.ShapeDtypeStruct((8,), jnp.int32),
+    ]
+    operands = [xs_sorted, meta, sorted_blocks, dmin, dmax, valid]
+    if eb:
+        # raw candidate after xs, raw dict tile after the sorted tile, raw
+        # carry-out after the sorted carry-out (kernel unpack order)
+        in_specs.insert(1, pl.BlockSpec((n,), lambda i: (0,)))
+        in_specs.insert(4, pl.BlockSpec((tile_d, n), lambda i: (i, 0)))
+        out_specs.insert(1, pl.BlockSpec((num_dp, n), lambda i: (0, 0)))
+        out_shape.insert(1, jax.ShapeDtypeStruct((num_dp, n),
+                                                 raw_blocks.dtype))
+        operands = [xs_sorted, raw, meta, sorted_blocks, raw_blocks,
+                    dmin, dmax, valid]
+    out = pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((n,), lambda i: (0,)),           # candidate: reused
-            pl.BlockSpec((2,), lambda i: (0,)),           # [count, valid]
-            pl.BlockSpec((tile_d, n), lambda i: (i, 0)),  # streamed dict tile
-            pl.BlockSpec((tile_d,), lambda i: (i,)),
-            pl.BlockSpec((tile_d,), lambda i: (i,)),
-            pl.BlockSpec((tile_d,), lambda i: (i,)),
-        ],
-        out_specs=[
-            # constant index maps: carry-out lives in VMEM across the grid
-            pl.BlockSpec((num_dp, n), lambda i: (0, 0)),
-            pl.BlockSpec((num_dp,), lambda i: (0,)),
-            pl.BlockSpec((num_dp,), lambda i: (0,)),
-            pl.BlockSpec((num_dp,), lambda i: (0,)),
-            pl.BlockSpec((8,), lambda i: (0,)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((num_dp, n), sorted_blocks.dtype),
-            jax.ShapeDtypeStruct((num_dp,), dmin.dtype),
-            jax.ShapeDtypeStruct((num_dp,), dmax.dtype),
-            jax.ShapeDtypeStruct((num_dp,), jnp.bool_),
-            jax.ShapeDtypeStruct((8,), jnp.int32),
-        ],
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
-    )(xs_sorted, meta, sorted_blocks, dmin, dmax, valid)
+    )(*operands)
+    if eb:
+        new_sorted, new_raw, ndmin, ndmax, nvalid, dec = out
+        return new_sorted, ndmin, ndmax, nvalid, new_raw, dec
+    return out

@@ -55,7 +55,7 @@ class _PlannedStore(NamedTuple):
     requests, their walked windows, and the shared codec-parameter key."""
 
     store_id: str
-    pkey: tuple                    # (mode, block_size, dtype str, range)
+    pkey: tuple                    # (mode, block_size, dtype str, range, eb)
     requests: list                 # [(rid, channel, start, stop), ...]
     ranges: list                   # [(channel, start, stop), ...]
     header: object
@@ -188,6 +188,10 @@ class StreamCoalescer:
         if self._codec.backend == "numpy":
             raise ValueError("StreamCoalescer batches on device; use "
                              "CompressionService for the numpy backend")
+        if getattr(self._codec, "adaptive", False):
+            raise ValueError(
+                "adaptive codecs need per-channel transforms/thresholds and "
+                "cannot share one batched scan; use CompressionService")
         if plan is not None and plan.channels != plan.padded_channels:
             raise ValueError("coalescer plans must be made for a padded "
                              "channel count (channels % devices == 0)")
@@ -342,12 +346,17 @@ class StreamCoalescer:
                 dmax=jnp.pad(st.dmax, pad + ((0, 0),)),
                 valid=jnp.pad(st.valid, pad + ((0, 0),)),
                 count=jnp.pad(st.count, pad),
+                # channel-axis pad is safe even when the raw dict axis is
+                # empty (error-bounded mode off): (C, 0, n) -> (2C, 0, n)
+                raw_blocks=jnp.pad(st.raw_blocks, pad + ((0, 0),) * 2),
             )
 
     def _init_state(self, n_lem: int):
         import jax
         from repro.core.encoder import init_state
-        st = init_state(self._codec.num_dict, n_lem, channels=self._capacity)
+        st = init_state(
+            self._codec.num_dict, n_lem, channels=self._capacity,
+            raw=getattr(self._codec, "error_bound", None) is not None)
         if self.plan is not None:
             st = jax.device_put(st, self.plan.state_sharding())
         return st
@@ -394,6 +403,10 @@ class StreamCoalescer:
             rel_tol=float(cdc.rel_tol), use_minmax=cdc.use_minmax,
             use_ks=cdc.use_ks,
         )
+        eb = getattr(cdc, "error_bound", None)
+        if eb is not None:
+            kw["error_bound"] = float(eb)
+            kw["error_cumulative"] = cdc.mode == "delta"
         matcher = getattr(cdc, "matcher", None)
         if cdc.backend == "pallas":
             # fused single-dispatch kernel by default (decisions bitwise
@@ -750,7 +763,8 @@ class DecompressionService:
                 self.stats["failed_requests"] += 1
                 continue
             pkey = (hdr.mode, hdr.block_size, np.dtype(hdr.dtype).str,
-                    hdr.value_range)
+                    hdr.value_range,
+                    bool(getattr(hdr, "error_bounded", False)))
             by_store.setdefault((sid,) + pkey, []).append(
                 (rid, channel, start, stop))
 
@@ -797,7 +811,7 @@ class DecompressionService:
         # not any single request -- the autotuner must route
         groups: Dict[tuple, List[Tuple[str, int, object]]] = {}
         for (pkey, seed), items in pregroups.items():
-            mode, B, dt_str, vr = pkey
+            mode, B, dt_str, vr, _eb = pkey
             total = sum(n for _, n, _ in items)
             if (self.backend == "auto" and self._pipe.inflight
                     and not decode_mod.autotune_cached(mode, dt_str, total)):
@@ -838,11 +852,11 @@ class DecompressionService:
                 split.append((gkey, items))
 
         units: List[_Unit] = []
-        for ((mode, B, dt_str, vr), seed, _bucket, eff), items in split:
+        for ((mode, B, dt_str, vr, eb), seed, _bucket, eff), items in split:
             try:
                 plan, nbm = decode_mod.pad_parts(
                     mode, B, np.dtype(dt_str), vr,
-                    [part for _, _, part in items], seed=seed)
+                    [part for _, _, part in items], seed=seed, no_perm=eb)
             except Exception as e:
                 for rid, _, _ in items:
                     self.last_errors[rid] = e

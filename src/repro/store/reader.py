@@ -256,8 +256,9 @@ def decode_ranges(store: Container, requests: Sequence[Tuple[int, int, int]],
     if not len(requests):
         return []
     hdr, parts = plan_parts(store, requests, parse=parse)
-    plan, nbm = decode_mod.pad_parts(hdr.mode, hdr.block_size, hdr.dtype,
-                                     hdr.value_range, parts, seed=seed)
+    plan, nbm = decode_mod.pad_parts(
+        hdr.mode, hdr.block_size, hdr.dtype, hdr.value_range, parts,
+        seed=seed, no_perm=bool(getattr(hdr, "error_bounded", False)))
     out = decode_mod.reconstruct(plan, backend=backend).reshape(
         len(parts), nbm, hdr.block_size)
     return [out[r, :len(p.is_hit)].ravel() for r, p in enumerate(parts)]

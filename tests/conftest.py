@@ -53,6 +53,9 @@ GOLDEN_CASES = {
     "delta_D32": dict(mode="delta", num_dict=32),
     # small FIFO + wandering level: pins the 0xFF overwrite prefix bytes
     "std_D4_ovw": dict(mode="std", num_dict=4),
+    # half precision: pins the v3 FLAG_F16 header byte and the raw f16
+    # payload layout (appended last -- signal seeds are by case index)
+    "std_D8_f16": dict(mode="std", num_dict=8, dtype=np.float16),
 }
 GOLDEN_BLOCK = 16
 GOLDEN_SAMPLES = 16 * 40 + 5
@@ -67,12 +70,15 @@ def golden_signal(name: str) -> np.ndarray:
     n_lvl, scale = (16, 0.9) if name.endswith("_ovw") else (5, 0.07)
     x += np.repeat(np.arange(n_lvl), len(x) // n_lvl + 1)[:len(x)] \
         * (hi - lo) * scale
-    return np.mod(x, hi - lo) + lo if vr is not None else x
+    x = np.mod(x, hi - lo) + lo if vr is not None else x
+    return x.astype(GOLDEN_CASES[name].get("dtype", np.float64))
 
 
 def golden_codec_kwargs(name: str) -> dict:
+    # "dtype" parameterizes the SIGNAL (golden_signal), not the codec
+    case = {k: v for k, v in GOLDEN_CASES[name].items() if k != "dtype"}
     return dict(block_size=GOLDEN_BLOCK, alpha=0.05, rel_tol=0.5,
-                backend="numpy", **GOLDEN_CASES[name])
+                backend="numpy", **case)
 
 
 # ------------------------------------------------------ hypothesis plumbing

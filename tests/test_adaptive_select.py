@@ -1,0 +1,159 @@
+"""Adaptive per-channel mode selection (DESIGN.md Sec. 11): the selector's
+predictor/hysteresis policy as a unit, and the streaming session wiring
+(segment-boundary switches, per-channel codecs, heterogeneous decode)."""
+import numpy as np
+import pytest
+
+from repro.core import IdealemCodec
+from repro.core.select import ChannelSelector, SelectorConfig
+from repro.core.stream import decode_stream, parse_stream
+
+
+def _noise(n, seed=0):
+    return np.random.default_rng(seed).normal(0.0, 1.0, n)
+
+
+def _smooth(n, seed=0):
+    # heavily autocorrelated: rho1 ~ 1
+    t = np.arange(n)
+    return np.sin(t * 0.01) * 5 + _noise(n, seed) * 0.01
+
+
+# ----------------------------------------------------------------- selector
+def test_warmup_gates_predictors():
+    sel = ChannelSelector(block_size=16, config=SelectorConfig(
+        warmup_blocks=4))
+    sel.observe(_noise(16 * 3))
+    assert sel.predictors() is None
+    assert sel.decide(3) is None          # no decision while warming up
+    sel.observe(_noise(16))
+    assert sel.predictors() is not None
+    assert sel.events == []
+
+
+def test_predictors_separate_regimes():
+    sel = ChannelSelector(block_size=32)
+    sel.observe(_noise(32 * 8))
+    rho_noise, _, _ = sel.predictors()
+    sel2 = ChannelSelector(block_size=32)
+    sel2.observe(_smooth(32 * 8))
+    rho_smooth, _, _ = sel2.predictors()
+    assert rho_noise < 0.35 < 0.7 < rho_smooth
+
+
+def test_smooth_signal_switches_to_delta_and_sticks():
+    cfg = SelectorConfig(warmup_blocks=4, patience=2, min_dwell_blocks=8)
+    sel = ChannelSelector(block_size=32, mode="std", config=cfg)
+    events = []
+    for i in range(20):
+        sel.observe(_smooth(32, seed=i))
+        ev = sel.decide((i + 1) * 1)
+        if ev is not None:
+            events.append(ev)
+    assert len(events) == 1               # one switch, then stable
+    assert events[0].old_mode == "std" and events[0].new_mode == "delta"
+    assert sel.mode == "delta"
+
+
+def test_patience_requires_consecutive_targets():
+    cfg = SelectorConfig(warmup_blocks=4, patience=3, min_dwell_blocks=0)
+    sel = ChannelSelector(block_size=32, mode="std", config=cfg)
+    sel.observe(_smooth(32 * 4))
+    assert sel.decide(4) is None          # streak 1
+    assert sel.decide(5) is None          # streak 2
+    assert sel.decide(6) is not None      # streak 3 == patience
+    assert sel.mode == "delta"
+
+
+def test_min_dwell_blocks_spaces_switches():
+    cfg = SelectorConfig(warmup_blocks=4, patience=1, min_dwell_blocks=100)
+    sel = ChannelSelector(block_size=32, mode="std", config=cfg)
+    sel.observe(_smooth(32 * 4))
+    assert sel.decide(10) is not None     # first switch commits
+    sel.observe(_noise(32 * 4))           # regime flips right back
+    assert sel.decide(50) is None         # inside the dwell window
+    assert sel.decide(109) is None
+    assert sel.decide(110) is not None    # dwell elapsed
+
+
+def test_mode_boundaries_are_sticky():
+    """The rho1 boundary moves AWAY from the current mode by the hysteresis
+    margin, so a value inside the band never flaps."""
+    cfg = SelectorConfig(hysteresis=0.1, residual_rho=0.35, delta_rho=0.7)
+    lo = ChannelSelector(block_size=16, mode="std", config=cfg)
+    hi = ChannelSelector(block_size=16, mode="residual", config=cfg)
+    for rho in (0.30, 0.36, 0.44):        # inside [0.25, 0.45): ambiguous
+        assert lo._target_mode(rho) == "std"
+        assert hi._target_mode(rho) == "residual"
+    assert lo._target_mode(0.46) == "residual"   # cleared 0.35 + 0.1
+    assert hi._target_mode(0.24) == "std"        # cleared 0.35 - 0.1
+
+
+def test_scale_tightens_and_relaxes_with_hysteresis():
+    cfg = SelectorConfig(drift_hi=0.5, drift_lo=0.2, d_crit_scales=(0.75, 1.0))
+    sel = ChannelSelector(block_size=16, config=cfg)
+    assert sel._target_scale(1.0, 0.1) == 1.0
+    assert sel._target_scale(1.0, 0.6) == 0.75   # drift above drift_hi
+    sel.scale = 0.75
+    assert sel._target_scale(1.0, 0.3) == 0.75   # still above drift_lo
+    assert sel._target_scale(1.0, 0.1) == 1.0    # settled: relax
+
+
+def test_selector_validation():
+    with pytest.raises(ValueError, match="warmup_blocks"):
+        ChannelSelector(16, config=SelectorConfig(warmup_blocks=1))
+    with pytest.raises(ValueError, match="mode"):
+        ChannelSelector(16, mode="huffman")
+
+
+# ----------------------------------------------------- session integration
+def _regime_signal(n_half, seed=0):
+    return np.concatenate([_noise(n_half, seed), _smooth(n_half, seed + 1)])
+
+
+def _run_adaptive(backend, x, feed=256):
+    codec = IdealemCodec(
+        mode="std", block_size=16, num_dict=32, alpha=0.05, backend=backend,
+        adaptive=True,
+        selector=SelectorConfig(warmup_blocks=4, patience=2,
+                                min_dwell_blocks=16))
+    s = codec.session()
+    segs = [s.feed(x[lo:lo + feed]) for lo in range(0, len(x), feed)]
+    segs.append(s.finish())
+    return b"".join(segs), s.stats
+
+
+def test_adaptive_session_switches_and_decodes():
+    x = _regime_signal(16 * 200)
+    blob, stats = _run_adaptive("numpy", x)
+    assert stats.mode_switches >= 1
+    assert stats.events and stats.events[0]["old_mode"] == "std"
+    y = decode_stream(blob)
+    assert len(y) == len(x)
+    # the stream really is heterogeneous: the single-section parser must
+    # refuse it (decode_stream is the documented entry point)
+    from repro.core.stream import StreamFormatError
+    with pytest.raises(StreamFormatError, match="decode_stream"):
+        parse_stream(blob)
+
+
+def test_adaptive_numpy_jax_agree():
+    x = _regime_signal(16 * 120, seed=3)
+    blob_np, st_np = _run_adaptive("numpy", x)
+    blob_j, st_j = _run_adaptive("jax", x)
+    assert blob_np == blob_j
+    assert st_np.mode_switches == st_j.mode_switches
+
+
+def test_adaptive_requires_streaming():
+    codec = IdealemCodec(mode="std", block_size=16, adaptive=True)
+    with pytest.raises(ValueError, match="streaming-only"):
+        codec.encode(_noise(256))
+    with pytest.raises(ValueError, match="emit_segments"):
+        codec.session(emit_segments=False)
+
+
+def test_stationary_channel_never_switches():
+    x = _noise(16 * 300, seed=9)
+    _, stats = _run_adaptive("numpy", x)
+    assert stats.mode_switches == 0

@@ -7,8 +7,11 @@ import scipy.stats
 from repro.core.ks import critical_distance, ks_pvalue, ks_statistic
 from repro.core.npref import ks_pvalue_np, ks_statistic_np
 
-pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+try:  # only the property test needs hypothesis (optional dep)
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 
 @pytest.mark.parametrize("n1,n2", [(16, 16), (32, 32), (64, 31), (111, 111)])
@@ -48,17 +51,53 @@ def test_sensitivity_with_n():
     assert all(a > b for a, b in zip(ps, ps[1:]))
 
 
-@given(
-    st.integers(min_value=4, max_value=128),
-    st.integers(min_value=0, max_value=2**31 - 1),
-)
-@settings(max_examples=25, deadline=None)
-def test_statistic_properties(n, seed):
-    rng = np.random.default_rng(seed)
-    x, y = rng.normal(size=n), rng.normal(size=n)
-    d = ks_statistic_np(x, y)
-    assert 0.0 <= d <= 1.0
-    assert ks_statistic_np(x, x) == 0.0
-    # symmetry & permutation invariance
-    assert np.isclose(d, ks_statistic_np(y, x), atol=1e-12)
-    assert np.isclose(d, ks_statistic_np(rng.permutation(x), y), atol=1e-12)
+@pytest.mark.parametrize("n", [4, 8, 16, 32, 64, 128, 255])
+def test_identical_samples_always_accepted(n):
+    """d=0 must give p == 1.0 exactly.  The asymptotic series used to
+    collapse to 0 for small lambda (sum of zero terms); the small-lambda
+    cutoff pins the fix in BOTH implementations, byte-consistently."""
+    assert float(ks_pvalue(0.0, n, n)) == 1.0
+    assert ks_pvalue_np(0.0, n, n) == 1.0
+    # a tiny-but-nonzero distance still lands in the cutoff region
+    assert ks_pvalue_np(1e-6, n, n) == 1.0
+    # and an identical-block encode can therefore never KS-reject
+    for alpha in [0.01, 0.05, 0.2]:
+        assert ks_pvalue_np(0.0, n, n) > alpha
+
+
+def test_small_lambda_agrees_with_scipy_asymp():
+    """Across the cutoff: our p-values track scipy's asymptotic two-sample
+    KS (mode="asymp") and never resurrect the small-lambda collapse."""
+    rng = np.random.default_rng(7)
+    for n in [16, 32, 64]:
+        x = rng.normal(size=n)
+        for d in [0.0, 1.0 / (4 * n), 1.0 / n, 2.0 / n, 0.2, 0.5]:
+            p_ours = ks_pvalue_np(d, n, n)
+            lam = np.sqrt(n / 2.0) * d  # en = n1*n2/(n1+n2) = n/2
+            ref = scipy.special.kolmogorov(lam)
+            if lam < 0.1:
+                assert p_ours == 1.0  # cutoff region: exact by construction
+            else:
+                assert np.isclose(p_ours, ref, atol=1e-9)
+        # end-to-end cross-check on a realized pair
+        ref = scipy.stats.ks_2samp(x, x, method="asymp").pvalue
+        assert ks_pvalue_np(ks_statistic_np(x, x), n, n) == pytest.approx(
+            ref, abs=1e-12) == 1.0
+
+
+if HAVE_HYPOTHESIS:
+    @given(
+        st.integers(min_value=4, max_value=128),
+        st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_statistic_properties(n, seed):
+        rng = np.random.default_rng(seed)
+        x, y = rng.normal(size=n), rng.normal(size=n)
+        d = ks_statistic_np(x, y)
+        assert 0.0 <= d <= 1.0
+        assert ks_statistic_np(x, x) == 0.0
+        # symmetry & permutation invariance
+        assert np.isclose(d, ks_statistic_np(y, x), atol=1e-12)
+        assert np.isclose(
+            d, ks_statistic_np(rng.permutation(x), y), atol=1e-12)

@@ -1,0 +1,128 @@
+"""Error-bounded mode (DESIGN.md Sec. 11): the pointwise demotion gate.
+
+The contract: with ``error_bound=t``, every decoded sample differs from its
+original by at most ``t`` (circular distance when a wrapping ``value_range``
+is set), because would-be hits whose stored dictionary row violates the
+bound are demoted to misses and FLAG_EB decode skips the hit permutation.
+Property-tested with hypothesis when installed, plus a deterministic seeded
+sweep that always runs.
+"""
+import numpy as np
+import pytest
+
+from conftest import mixed_signal
+from repro.core import IdealemCodec
+from repro.core.npref import encode_decisions_np
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+BACKENDS = ["numpy", "jax", "pallas"]
+# f32 payload storage rounds on top of the float64 gate decision
+_F32_SLOP = 1e-4
+
+
+def _err(x, y, value_range=None):
+    d = np.abs(np.asarray(x, np.float64) - np.asarray(y, np.float64))
+    if value_range is not None:
+        w = value_range[1] - value_range[0]
+        d = np.minimum(d, w - d)
+    return float(np.max(d)) if len(d) else 0.0
+
+
+def _check(x, mode, bound, backend="numpy", value_range=None, **kw):
+    codec = IdealemCodec(mode=mode, block_size=16, num_dict=32, alpha=0.05,
+                         value_range=value_range, error_bound=bound,
+                         backend=backend, **kw)
+    blob = codec.encode(x)
+    y = codec.decode(blob)
+    assert _err(x, y, value_range) <= bound + _F32_SLOP * max(bound, 1.0)
+    return codec, blob, y
+
+
+@pytest.mark.parametrize("mode,value_range", [
+    ("std", None), ("residual", (-12.0, 12.0)), ("delta", None)])
+@pytest.mark.parametrize("bound", [0.05, 0.5, 2.5])
+def test_bound_honored_end_to_end(mode, value_range, bound):
+    x = mixed_signal(16 * 60 + 3, seed=1)
+    _check(x, mode, bound, value_range=value_range)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_bound_honored_on_every_backend(backend):
+    x = mixed_signal(16 * 40, seed=2)
+    for mode in ("std", "delta"):
+        _check(x, mode, 0.5, backend=backend)
+
+
+def test_demotion_is_monotone_and_only_demotes():
+    """Adding a bound can only turn hits into misses (never the reverse),
+    and a looser bound admits at least as many hits as a tighter one."""
+    x = mixed_signal(16 * 80, seed=3).reshape(-1, 16)
+    base = dict(num_dict=32, d_crit=0.45, rel_tol=0.5)
+    free, _, _ = encode_decisions_np(x, **base)
+    prev = None
+    for bound in (0.1, 0.5, 2.0, 50.0):
+        hit, _, _ = encode_decisions_np(x, error_bound=bound, **base)
+        assert not np.any(hit & ~free)        # demotion only
+        if prev is not None:
+            assert hit.sum() >= prev.sum()    # monotone in the bound
+        prev = hit
+    # a bound far above the signal spread demotes nothing
+    assert np.array_equal(prev, free)
+
+
+def test_tight_bound_demotes_everything():
+    x = mixed_signal(16 * 40, seed=4).reshape(-1, 16)
+    hit, _, _ = encode_decisions_np(x, num_dict=32, d_crit=0.45,
+                                    rel_tol=0.5, error_bound=1e-9)
+    assert not np.any(hit)
+
+
+def test_error_bound_reduces_decode_error():
+    """The point of the feature: bounding provably shrinks the worst-case
+    reconstruction error a statistical-similarity hit would otherwise
+    introduce (at some ratio cost)."""
+    x = mixed_signal(16 * 120, seed=5)
+    loose = IdealemCodec(mode="std", block_size=16, num_dict=32,
+                         alpha=0.05, backend="numpy")
+    e_free = _err(x, loose.decode(loose.encode(x)))
+    _, blob, y = _check(x, "std", bound=e_free / 4)
+    assert _err(x, y) <= e_free / 4 + _F32_SLOP
+    assert len(blob) >= len(loose.encode(x))  # paid for in hits
+
+
+def test_error_bound_validation():
+    with pytest.raises(ValueError, match="positive"):
+        IdealemCodec(mode="std", error_bound=-1.0)
+    with pytest.raises(ValueError, match="value_range"):
+        IdealemCodec(mode="std", error_bound_rel=0.01)
+    c = IdealemCodec(mode="residual", value_range=(0.0, 10.0),
+                     error_bound_rel=0.05)
+    assert c.error_bound == pytest.approx(0.5)
+
+
+if HAVE_HYPOTHESIS:
+    @given(
+        st.sampled_from(["std", "residual", "delta"]),
+        st.floats(min_value=0.05, max_value=5.0),
+        st.integers(min_value=0, max_value=2**31 - 1),
+        st.booleans(),
+    )
+    @settings(max_examples=20, deadline=None)
+    def test_bound_property(mode, bound, seed, wrap):
+        rng = np.random.default_rng(seed)
+        n = 16 * int(rng.integers(4, 40)) + int(rng.integers(0, 16))
+        x = mixed_signal(n, seed=seed)
+        vr = None
+        if wrap and mode != "std":
+            vr = (0.0, 360.0)
+            x = np.mod(x * 40.0, 360.0)
+        codec = IdealemCodec(mode=mode, block_size=16, num_dict=32,
+                             alpha=0.05, value_range=vr, error_bound=bound,
+                             backend="numpy")
+        y = codec.decode(codec.encode(x))
+        assert _err(x, y, vr) <= bound + _F32_SLOP * max(bound, 1.0)

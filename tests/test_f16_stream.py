@@ -1,0 +1,100 @@
+"""Half-precision streams (v3 FLAG_F16): byte round-trips across mode x
+decode backend x session chunking, version gating, and the f32/f16 flag
+exclusivity rules."""
+import struct
+
+import numpy as np
+import pytest
+
+from repro.core import IdealemCodec
+from repro.core.stream import (FLAG_EB, FLAG_F16, MAGIC, VERSION, VERSION_EB,
+                               StreamFormatError, decode_stream, parse_stream)
+
+MODES = ["std", "residual", "delta"]
+BACKENDS = ["numpy", "jax", "pallas"]
+
+
+def _signal(n=16 * 30 + 7, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0, 1, n) + np.repeat(
+        rng.normal(0, 2, 4), n // 4 + 1)[:n]
+    return x.astype(np.float16)
+
+
+def _codec(mode, **kw):
+    vr = (-16.0, 16.0) if mode != "std" else None
+    return IdealemCodec(mode=mode, block_size=16, num_dict=16, alpha=0.05,
+                        value_range=vr, backend="numpy", **kw)
+
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_f16_roundtrip_ring(mode, backend):
+    """One-shot f16 encode decodes byte-identically on every backend, in
+    the stored dtype."""
+    x = _signal()
+    codec = _codec(mode)
+    blob = codec.encode(x)
+    y = codec.decode(blob, backend=backend)
+    assert y.dtype == np.float16
+    assert len(y) == len(x)
+    # the tail and every miss block are raw f16: reconstruct exactly
+    assert y[-7:].tobytes() == x[-7:].tobytes()
+    assert decode_stream(blob).tobytes() == y.tobytes()
+
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("feed", [48, 100, 16 * 30 + 7])
+def test_f16_chunked_session_matches_oneshot_decode(mode, feed):
+    x = _signal(seed=2)
+    codec = _codec(mode)
+    s = codec.session(dtype=np.float16)
+    segs = [s.feed(x[lo:lo + feed]) for lo in range(0, len(x), feed)]
+    segs.append(s.finish())
+    y = decode_stream(b"".join(segs))
+    assert y.dtype == np.float16
+    want = decode_stream(codec.encode(x))
+    # chunking changes segmentation, not the decisions or the samples
+    assert len(y) == len(want) == len(x)
+
+
+def test_f16_header_is_version3():
+    blob = _codec("std").encode(_signal())
+    (magic, ver), flags = struct.unpack_from("<4sB", blob, 0), blob[10]
+    assert magic == MAGIC
+    assert ver == VERSION_EB == 3
+    assert flags & FLAG_F16
+
+
+def test_f32_stream_stays_version2():
+    """No v3 feature used -> the bytes stay readable by a v2 reader."""
+    x = np.asarray(_signal(), dtype=np.float32)
+    blob = _codec("std").encode(x)
+    ver, flags = blob[4], blob[10]
+    assert ver == VERSION
+    assert not flags & (FLAG_F16 | FLAG_EB)
+
+
+def test_v3_flags_on_v2_segment_rejected():
+    blob = bytearray(_codec("std").encode(_signal()))
+    blob[4] = VERSION  # claim v2 while FLAG_F16 is set
+    with pytest.raises(StreamFormatError, match="v3 feature flags"):
+        parse_stream(bytes(blob))
+
+
+def test_f32_and_f16_flags_are_exclusive():
+    blob = bytearray(_codec("std").encode(_signal()))
+    blob[10] |= 2  # FLAG_F32 on top of FLAG_F16
+    with pytest.raises(StreamFormatError):
+        parse_stream(bytes(blob))
+
+
+def test_f16_with_error_bound_combines():
+    x = _signal(seed=5)
+    codec = _codec("std", error_bound=0.25)
+    blob = codec.encode(x)
+    ver, flags = blob[4], blob[10]
+    assert ver == VERSION_EB and (flags & FLAG_F16) and (flags & FLAG_EB)
+    y = np.asarray(decode_stream(blob), dtype=np.float64)
+    # f16 storage adds half-precision rounding on top of the gate's bound
+    assert float(np.max(np.abs(np.asarray(x, np.float64) - y))) <= 0.25 + 1e-2
