@@ -4,7 +4,8 @@ export PYTHONPATH := src
 
 .PHONY: test test-core bench bench-quick bench-gate bench-stream \
 	bench-shard bench-store bench-decode bench-encode bench-frontier \
-	shard-check store-check store-check-quick lint example-stream
+	bench-obs shard-check store-check store-check-quick obs-check lint \
+	example-stream
 
 # Tier-1 verification (ROADMAP.md): the full suite, fail-fast.
 test:
@@ -41,6 +42,11 @@ bench-encode:
 bench-frontier:
 	$(PY) -m benchmarks.bench_frontier
 
+# Telemetry overhead: metrics-on vs metrics-off encode/decode, fails
+# when the modeled obs cost exceeds the 3% bar (DESIGN.md Sec. 12).
+bench-obs:
+	$(PY) -m benchmarks.bench_obs_overhead
+
 # CI smoke profile: small workloads, fast host/codec benches only.
 bench-quick:
 	$(PY) -m benchmarks.run --quick
@@ -51,6 +57,13 @@ bench-gate:
 	$(PY) -m benchmarks.run --quick --json BENCH_quick.json
 	$(PY) scripts/bench_gate.py BENCH_quick.json \
 	    benchmarks/baselines/BENCH_quick.json
+
+# Telemetry self-check (CI tier1): exporter round trip on a scratch
+# registry, then a live end-to-end workload that must populate the
+# expected metric families across encode/decode/store/serve from one
+# registry snapshot (scripts/obs_tool.py).
+obs-check:
+	$(PY) scripts/obs_tool.py selfcheck
 
 lint:
 	ruff check .

@@ -1,0 +1,229 @@
+"""Telemetry overhead: metrics-on vs metrics-off encode + decode.
+
+The obs layer (DESIGN.md Sec. 12) instruments per *flush* and per
+*dispatch*, never per sample, so its cost must vanish against the codec
+work it measures.  This bench enforces the 3% acceptance bar (ISSUE 8)
+with a *measured cost model* rather than a raw wall-clock A/B: on a
+shared CI box, back-to-back runs of a 25-170 ms workload jitter by
++/-10%, which would make a 3% wall-clock assertion a coin flip.  Instead:
+
+1. Count every obs write (counter inc, gauge move, histogram observe,
+   span, event) one workload call performs, by temporarily wrapping the
+   instrument methods.  Counts are exact and deterministic.
+2. Measure the per-op cost of each write kind in a tight loop (100k+
+   iterations amortize scheduler noise to ~1%), instruments enabled.
+3. overhead fraction = sum(count * cost) / workload floor, asserted
+   <= 3% for both encode and decode.  A chatty metric added to a hot
+   loop inflates the counts; an accidentally expensive write inflates
+   the per-op cost -- both realistic regressions fail deterministically.
+
+The classic interleaved on/off wall-clock ratio is still measured and
+reported (it is the number an operator would see), but only asserted
+against a loose sanity ceiling that machine noise cannot trip.
+
+Rows: ``obs/overhead/encode`` / ``obs/overhead/decode`` report the
+metrics-ON time with the on/off ratio and modeled overhead;
+``obs/overhead/summary`` is a zero-time derived row pinning both modeled
+fractions (zero-time rows are excluded from the perf gate's timing
+comparison).
+"""
+from __future__ import annotations
+
+import gc
+import os
+import time
+
+import numpy as np
+
+from repro import obs
+from repro.core import IdealemCodec
+from repro.store import Container, decode_ranges, pack
+
+from .common import csv_row
+
+QUICK = bool(int(os.environ.get("REPRO_BENCH_QUICK", "0")))
+B = 32
+NB = 1_500 if QUICK else 6_000          # blocks per arm
+FEED = 16 * B                           # samples per session feed
+N_RANGES = 64
+RANGE_BLOCKS = 64 if QUICK else 256     # fat enough that decode dominates
+REPEAT = 3                              # timed calls per interleave round
+ROUNDS = 5 if QUICK else 8              # on/off alternations
+BAR = 0.03                              # the 3% acceptance ceiling (modeled)
+SANITY = 1.25                           # wall-clock on/off ratio ceiling
+
+
+def _signal(nb: int) -> np.ndarray:
+    rng = np.random.default_rng(7)
+    return rng.normal(0, 1, size=nb * B)
+
+
+def _encode_once(x: np.ndarray) -> bytes:
+    codec = IdealemCodec(mode="std", block_size=B, num_dict=32,
+                         matcher="reference")
+    sess = codec.session()
+    blob = b""
+    for i in range(0, len(x), FEED):
+        blob += sess.feed(x[i:i + FEED])
+    return blob + sess.finish()
+
+
+def _decode_once(store: Container, requests) -> None:
+    decode_ranges(store, requests, backend="numpy")
+
+
+def _count_ops(fn) -> dict:
+    """Exact invocation counts of every obs write kind during one call."""
+    from repro.obs import metrics as _m
+    from repro.obs import trace as _t
+
+    counts = {"inc": 0, "observe": 0, "gauge": 0, "span": 0, "event": 0}
+    patched = []
+
+    def patch(cls, attr, key):
+        orig = getattr(cls, attr)
+
+        def wrapper(self, *args, **kwargs):
+            counts[key] += 1
+            return orig(self, *args, **kwargs)
+
+        setattr(cls, attr, wrapper)
+        patched.append((cls, attr, orig))
+
+    patch(_m.Counter, "inc", "inc")
+    patch(_m.Histogram, "observe", "observe")
+    patch(_m.Gauge, "set", "gauge")
+    patch(_m.Gauge, "inc", "gauge")  # dec() routes through inc()
+    patch(_t.SpanTracer, "span", "span")
+    patch(_t.SpanTracer, "event", "event")
+    try:
+        fn()
+    finally:
+        for cls, attr, orig in patched:
+            setattr(cls, attr, orig)
+    return counts
+
+
+def _op_costs() -> dict:
+    """Seconds per obs write, measured enabled on scratch instruments.
+
+    Tight loops over 20k-200k ops amortize per-sample noise away -- this
+    is the stable half of the cost model."""
+    reg = obs.MetricsRegistry()
+    trc = obs.SpanTracer(capacity=256)
+    c = reg.counter("bench_probe_total", "cost probe")
+    g = reg.gauge("bench_probe_gauge", "cost probe")
+    h = reg.histogram("bench_probe_seconds", "cost probe")
+
+    def timed(n, op):
+        t0 = time.perf_counter()
+        for _ in range(n):
+            op()
+        return (time.perf_counter() - t0) / n
+
+    def one_span():
+        with trc.span("bench.probe"):
+            pass
+
+    return {
+        "inc": timed(200_000, c.inc),
+        "gauge": timed(200_000, lambda: g.set(1.0)),
+        "observe": timed(100_000, lambda: h.observe(1e-3)),
+        "span": timed(20_000, one_span),
+        "event": timed(50_000, lambda: trc.event("bench.probe")),
+    }
+
+
+def _timed_pair(fn, repeat: int = REPEAT, rounds: int = ROUNDS):
+    """(metrics-on seconds, metrics-off seconds), wall clock.
+
+    Tightly interleaved on/off rounds with a global min per arm; the arm
+    order flips every round so within-round warmup cancels, and the
+    collector is paused across the timed region (a GC pause is several
+    ms against a tens-of-ms workload, far louder than the instruments
+    under test).  Still only good to ~10% on a noisy box -- hence the
+    cost model above for the 3% assertion."""
+    tracer = obs.tracer()
+    fn()  # warmup once: jit compile, page-in, allocator steady state
+    t_on = t_off = float("inf")
+    gc.collect()
+    gc_was_enabled = gc.isenabled()
+    gc.disable()
+    try:
+        for r in range(rounds):
+            order = (True, False) if r % 2 == 0 else (False, True)
+            for enabled in order:
+                prev = obs.set_enabled(enabled)
+                prev_tr, tracer.enabled = tracer.enabled, enabled
+                try:
+                    for _ in range(repeat):
+                        t0 = time.perf_counter()
+                        fn()
+                        dt = time.perf_counter() - t0
+                        if enabled:
+                            t_on = min(t_on, dt)
+                        else:
+                            t_off = min(t_off, dt)
+                finally:
+                    obs.set_enabled(prev)
+                    tracer.enabled = prev_tr
+            gc.collect()  # pay collection between rounds, not mid-sample
+    finally:
+        if gc_was_enabled:
+            gc.enable()
+    return t_on, t_off
+
+
+def run():
+    x = _signal(NB)
+    enc_on, enc_off = _timed_pair(lambda: _encode_once(x))
+    enc_ops = _count_ops(lambda: _encode_once(x))
+
+    codec = IdealemCodec(mode="std", block_size=B, num_dict=32,
+                         matcher="reference")
+    store = Container(pack(codec.encode(x)))
+    total = store.total_blocks(0)
+    rng = np.random.default_rng(3)
+    starts = rng.integers(0, total - RANGE_BLOCKS, size=N_RANGES)
+    requests = [(0, int(s), int(s) + RANGE_BLOCKS) for s in starts]
+    dec_on, dec_off = _timed_pair(lambda: _decode_once(store, requests))
+    dec_ops = _count_ops(lambda: _decode_once(store, requests))
+
+    costs = _op_costs()
+    enc_cost = sum(enc_ops[k] * costs[k] for k in costs)
+    dec_cost = sum(dec_ops[k] * costs[k] for k in costs)
+    enc_frac = enc_cost / enc_off
+    dec_frac = dec_cost / dec_off
+    enc_ratio = enc_on / enc_off
+    dec_ratio = dec_on / dec_off
+    within = enc_frac <= BAR and dec_frac <= BAR
+    enc_n = sum(enc_ops.values())
+    dec_n = sum(dec_ops.values())
+    rows = [
+        csv_row("obs/overhead/encode", enc_on * 1e6,
+                f"blocks={NB};obs_ops={enc_n};modeled_pct={enc_frac * 100:.3f};"
+                f"ratio_vs_off={enc_ratio:.4f}"),
+        csv_row("obs/overhead/decode", dec_on * 1e6,
+                f"requests={N_RANGES};obs_ops={dec_n};"
+                f"modeled_pct={dec_frac * 100:.3f};"
+                f"ratio_vs_off={dec_ratio:.4f}"),
+        csv_row("obs/overhead/summary", 0.0,
+                f"encode_pct={enc_frac * 100:.3f};dec_pct={dec_frac * 100:.3f};"
+                f"within_3pct={int(within)}"),
+    ]
+    if not within:
+        raise AssertionError(
+            f"telemetry overhead above the 3% bar: encode "
+            f"{enc_frac * 100:.3f}%, decode {dec_frac * 100:.3f}% "
+            f"(modeled: obs op counts x measured per-op cost)")
+    if enc_ratio > SANITY or dec_ratio > SANITY:
+        raise AssertionError(
+            f"metrics-on wall clock implausibly above metrics-off: encode "
+            f"{enc_ratio:.4f}x, decode {dec_ratio:.4f}x (sanity ceiling "
+            f"{SANITY}x)")
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

@@ -12,7 +12,14 @@ document -- the input of the CI perf gate (``scripts/bench_gate.py``):
 
     {"version": 1, "quick": bool,
      "results": {name: {"us_per_call": float, "derived": str}},
-     "failed": [module, ...]}
+     "failed": [module, ...],
+     "metrics_snapshot": {...}}
+
+``metrics_snapshot`` is the full ``repro.obs`` JSON export (metric
+families + recent spans) taken after all benches ran in this process --
+the nightly job uploads it as an artifact, so codec health counters
+(hit rates, gate rejections, backend choices, stage latencies) ride
+along with every full bench run.
 """
 from __future__ import annotations
 
@@ -24,7 +31,8 @@ import sys
 import traceback
 
 QUICK_MODULES = ("stream_io", "store_decode", "decode_backends",
-                 "encode_fused", "frontier")  # fast host/codec smoke set
+                 "encode_fused", "frontier",
+                 "obs_overhead")  # fast host/codec smoke set
 
 RESULTS_VERSION = 1
 
@@ -87,6 +95,7 @@ def main(argv=None) -> None:
         ("decode_backends", "bench_decode_backends"),
         ("encode_fused", "bench_encode_fused"),
         ("frontier", "bench_frontier"),
+        ("obs_overhead", "bench_obs_overhead"),
         ("roofline", "roofline"),
     ]
     if args.quick:
@@ -108,6 +117,11 @@ def main(argv=None) -> None:
         doc = carry_tolerances(args.json, {
             "version": RESULTS_VERSION, "quick": args.quick,
             "results": rows_to_results(all_rows), "failed": failed})
+        try:  # codec health from this process's bench traffic (obs layer)
+            from repro import obs
+            doc["metrics_snapshot"] = obs.to_json()
+        except Exception:
+            traceback.print_exc()
         with open(args.json, "w", encoding="utf-8") as f:
             json.dump(doc, f, indent=1, sort_keys=True)
         print(f"wrote {len(doc['results'])} results -> {args.json}",

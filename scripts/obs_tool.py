@@ -1,0 +1,150 @@
+"""CLI over the unified telemetry layer (repro.obs, DESIGN.md Sec. 12).
+
+  dump       [--format prom|json] [--no-workload]
+             exercise a small end-to-end workload (coalesced encode ->
+             packed container -> pipelined range decode) against the
+             process-default registry and print the resulting snapshot
+             as Prometheus text exposition (default) or JSON.
+  selfcheck  the CI round trip (``make obs-check``): (1) the exporter
+             round trip on a scratch registry covering all three
+             instrument kinds, awkward label escapes included; (2) the
+             live end-to-end: the workload above must populate the
+             expected ``repro_<layer>_<name>`` metric families across
+             encode, decode, store and serving from ONE registry
+             snapshot, the exposition must parse back value-exact, and
+             the span ring must hold all four serve stages.
+
+Exit status: 0 clean, 1 failed check, 2 usage.
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro import obs  # noqa: E402
+
+# one metric family per wired layer: the acceptance shape of ISSUE 8
+EXPECTED_FAMILIES = (
+    "repro_encode_bytes_in_total",        # session ingest
+    "repro_encode_bytes_out_total",
+    "repro_encode_blocks_total",
+    "repro_encode_hits_total",
+    "repro_encode_flushes_total",         # coalescer device batches
+    "repro_encode_flush_seconds",
+    "repro_decode_host_calls_total",      # unified decode engine
+    "repro_decode_backend_calls_total",
+    "repro_store_chunk_walks_total",      # container read path
+    "repro_store_range_requests_total",
+    "repro_serve_requests_total",         # serving
+    "repro_serve_stage_seconds",
+    "repro_serve_cache_hits_total",
+)
+EXPECTED_STAGES = ("plan", "gather", "reconstruct", "emit")
+
+
+def run_workload() -> None:
+    """Small but complete traffic: many coalesced streams flushed as one
+    device batch, packed into a container, range-decoded through a
+    pipelined ``DecompressionService``."""
+    import numpy as np
+
+    from repro.core import IdealemCodec
+    from repro.serve import (DecompressionService, FlushPolicy,
+                             StreamCoalescer)
+    from repro.store import Container, pack
+
+    rng = np.random.default_rng(0)
+    coal = StreamCoalescer(
+        policy=FlushPolicy(max_batch_blocks=64, max_batch_streams=4),
+        mode="std", block_size=16, num_dict=8)
+    blobs = {}
+    for sid in ("a", "b", "c"):
+        coal.open_stream(sid)
+        blobs[sid] = b""
+    for _ in range(4):
+        for sid in blobs:
+            out = coal.submit(sid, rng.normal(0, 1, size=64)) or {}
+            for k, seg in out.items():
+                blobs[k] += seg
+    for sid in list(blobs):
+        blobs[sid] += coal.close_stream(sid)
+
+    svc = DecompressionService(
+        policy=FlushPolicy(max_batch_streams=4, pipeline_depth=2),
+        backend="numpy")
+    svc.attach("s", Container(pack(blobs["a"])))
+    for i, (start, stop) in enumerate([(0, 4), (4, 8), (2, 10), (0, 16)]):
+        svc.submit(f"r{i}", "s", start, stop)
+    svc.close()
+
+
+def check_live() -> list:
+    problems = []
+    reg = obs.registry()
+    run_workload()
+    snap = reg.snapshot()
+    for fam in EXPECTED_FAMILIES:
+        if fam not in snap:
+            problems.append(f"metric family missing after workload: {fam}")
+    stage_hist = snap.get("repro_serve_stage_seconds", {"values": []})
+    seen = {v["labels"].get("stage") for v in stage_hist["values"]
+            if v.get("count", 0) > 0}
+    for stage in EXPECTED_STAGES:
+        if stage not in seen:
+            problems.append(f"stage histogram never observed: {stage}")
+    span_names = {s.name for s in obs.tracer().records(kind="span")}
+    for stage in EXPECTED_STAGES:
+        if f"serve.{stage}" not in span_names:
+            problems.append(f"span ring missing serve.{stage}")
+    if "encode.flush" not in span_names:
+        problems.append("span ring missing encode.flush")
+    problems.extend(obs.selfcheck(reg))
+    return problems
+
+
+def cmd_dump(args) -> int:
+    if not args.no_workload:
+        run_workload()
+    if args.format == "json":
+        import json
+        json.dump(obs.to_json(), sys.stdout, indent=1, sort_keys=True)
+        print()
+    else:
+        sys.stdout.write(obs.to_prometheus())
+    return 0
+
+
+def cmd_selfcheck(args) -> int:
+    problems = obs.selfcheck()  # scratch registry: exporter round trip
+    if not problems:
+        print("exporter round trip: OK")
+    problems += check_live()
+    if problems:
+        for p in problems:
+            print(f"FAIL: {p}")
+        return 1
+    print(f"live end-to-end: OK ({len(EXPECTED_FAMILIES)} families, "
+          f"{len(EXPECTED_STAGES)} stage histograms, spans present)")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="obs_tool")
+    sub = ap.add_subparsers(dest="cmd")
+    d = sub.add_parser("dump", help="exercise a workload and print metrics")
+    d.add_argument("--format", choices=("prom", "json"), default="prom")
+    d.add_argument("--no-workload", action="store_true",
+                   help="dump the registry as-is, without traffic")
+    sub.add_parser("selfcheck", help="exporter round trip + live e2e check")
+    args = ap.parse_args(argv)
+    if args.cmd == "dump":
+        return cmd_dump(args)
+    if args.cmd == "selfcheck":
+        return cmd_selfcheck(args)
+    ap.print_help()
+    return 2
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

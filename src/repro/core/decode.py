@@ -37,13 +37,13 @@ from __future__ import annotations
 import json
 import logging
 import os
-import threading
 import time
 from dataclasses import dataclass
 from typing import NamedTuple, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .. import obs
 from .transforms import np_wrap_range
 
 __all__ = [
@@ -64,35 +64,52 @@ BACKENDS = ("numpy", "jax", "pallas")
 
 logger = logging.getLogger("repro.core.decode")
 
-# Per-process accounting of backend routing.  ``fallbacks`` counts calls
-# that *asked* for a device backend but ran on the host because the probe
-# failed (or the device path raised); tests pin this so a silent fallback
-# cannot masquerade as device coverage.  ``autotune_probes``/
-# ``autotune_hits`` count measured first-use probes vs cached ``"auto"``
-# resolutions.
-_stats = {"host_calls": 0, "device_calls": 0, "fallbacks": 0,
-          "autotune_probes": 0, "autotune_hits": 0}
-# a pipelined service increments from its worker thread concurrently with
-# the caller's reads/probes; dict += is not atomic even under the GIL
-_stats_lock = threading.Lock()
+# Per-process accounting of backend routing, held as counters on the
+# repro.obs registry (ISSUE 8) -- :func:`decode_stats` is a dict-shaped
+# compat view over them, byte-compatible with the pre-registry API that
+# tests pin.  ``fallbacks`` counts calls that *asked* for a device
+# backend but ran on the host because the probe failed (or the device
+# path raised); tests pin this so a silent fallback cannot masquerade as
+# device coverage.  ``autotune_probes``/``autotune_hits`` count measured
+# first-use probes vs cached ``"auto"`` resolutions.  Counters are
+# individually locked, so the pipelined service's worker-thread bumps
+# stay exact against the caller's reads.
+_STAT_HELP = {
+    "host_calls": "reconstruct calls served on the numpy host path",
+    "device_calls": "reconstruct calls served on a device backend",
+    "fallbacks": "device requests that fell back to the host",
+    "autotune_probes": "backend=auto measured first-use probes",
+    "autotune_hits": "backend=auto cached resolutions",
+}
+_stat_counters = {
+    key: obs.registry().counter(f"repro_decode_{key}_total", help_text)
+    for key, help_text in _STAT_HELP.items()
+}
+# resolved-backend routing, labelled per backend (the "backend choice
+# counts" metric; decode_stats keeps only the host/device aggregate)
+_backend_counters = {
+    b: obs.registry().counter("repro_decode_backend_calls_total",
+                              "reconstruct calls per resolved backend",
+                              labels={"backend": b})
+    for b in ("numpy", "jax", "pallas")
+}
 _exact_cache: dict = {}
 
 
 def _bump(key: str, n: int = 1) -> None:
-    with _stats_lock:
-        _stats[key] += n
+    _stat_counters[key].inc(n)
 
 
 def decode_stats() -> dict:
-    with _stats_lock:
-        snap = dict(_stats)
+    snap = {key: int(c.value) for key, c in _stat_counters.items()}
     return {**snap, "autotune_choices": autotune_choices()}
 
 
 def reset_decode_stats() -> None:
-    with _stats_lock:
-        for k in _stats:
-            _stats[k] = 0
+    for c in _stat_counters.values():
+        c.reset()
+    for c in _backend_counters.values():
+        c.reset()
 
 
 # ------------------------------------------------------------------ the plan
@@ -465,7 +482,7 @@ _BUCKET_MIN, _BUCKET_MAX = 64, 16384
 _TUNER = MeasuredTuner(
     version=AUTOTUNE_VERSION, env_var="REPRO_DECODE_AUTOTUNE",
     validate_entry=lambda ent: ent.get("backend") in BACKENDS,
-    log=logger)
+    log=logger, name="decode")
 
 
 def _size_bucket(nb: int) -> int:
@@ -591,6 +608,7 @@ def reconstruct(plan: DecodePlan, backend: str = "numpy") -> np.ndarray:
         return np.zeros((0, plan.block_size), dtype=np.dtype(plan.dtype))
     backend = resolve_backend(backend, plan.mode, plan.dtype, plan.nb,
                               plan.value_range, plan.block_size)
+    _backend_counters[backend].inc()
     if backend != "numpy":
         if _device_exact(backend, plan):
             try:

@@ -40,7 +40,23 @@ from typing import TYPE_CHECKING, List, NamedTuple, Optional, Union
 import numpy as np
 
 from . import stream as stream_mod
+from .. import obs
 from .stream import StreamHeader
+
+# Session-level registry counters (ISSUE 8): process-wide aggregates over
+# every session/channel; per-channel detail stays on ``SessionStats``.
+# The per-(block, slot) gate attribution lives in ``npref`` (host walk).
+_M = {
+    key: obs.registry().counter(f"repro_encode_{key}_total", help_text)
+    for key, help_text in {
+        "bytes_in": "raw sample bytes accepted by sessions",
+        "bytes_out": "emitted segment bytes (compressed size)",
+        "segments": "stream segments emitted",
+        "blocks": "blocks encoded",
+        "hits": "blocks replaced by a dictionary reference",
+        "mode_switches": "adaptive selector mode/scale switches applied",
+    }.items()
+}
 
 if TYPE_CHECKING:  # pragma: no cover
     from .idealem import IdealemCodec
@@ -313,6 +329,11 @@ class IdealemSession:
         st = self._stats[ci]
         st.mode_switches += 1
         st.events.append(ev.as_dict())
+        _M["mode_switches"].inc()
+        # the selector's decision, as a structured trace event: channel +
+        # the full SelectionEvent payload (rho1, var ratio, drift, scales)
+        obs.event("encode.mode_switch", attrs={"channel": ci,
+                                               **ev.as_dict()})
 
     def _feed_adaptive(self, chunk):
         if self._finished:
@@ -363,6 +384,8 @@ class IdealemSession:
         st = self._stats[ci]
         st.bytes_out += len(seg)
         st.segments += 1
+        _M["bytes_out"].inc(len(seg))
+        _M["segments"].inc()
         if self._writer is not None:
             self._writer.append(seg, channel=ci)
         return seg
@@ -403,6 +426,7 @@ class IdealemSession:
         self._tails = [j[nb * B:] for j in joined]
         for ci in range(self._C):
             self._stats[ci].bytes_in += arr[ci].nbytes
+        _M["bytes_in"].inc(arr.nbytes)
         if nb == 0:
             return None
 
@@ -423,11 +447,14 @@ class IdealemSession:
         stats and emit (or buffer) each channel's segment.  Always returns
         a per-channel list; decisions may cover only ``prep.nb`` blocks."""
         outs = []
+        total_hits = 0
         for ci in range(self._C):
             hit, slot, ovw = decisions[ci]
             st = self._stats[ci]
             st.blocks += prep.nb
-            st.hits += int(np.sum(hit))
+            n_hits = int(np.sum(hit))
+            st.hits += n_hits
+            total_hits += n_hits
             if self.emit_segments:
                 outs.append(self._emit(
                     ci, prep.blocks[ci], prep.payloads[ci], prep.bases[ci],
@@ -443,6 +470,8 @@ class IdealemSession:
                 buf["slot"].append(slot)
                 buf["ovw"].append(ovw)
                 outs.append(b"")
+        _M["blocks"].inc(prep.nb * self._C)
+        _M["hits"].inc(total_hits)
         return outs
 
     def feed(self, chunk) -> Union[bytes, List[bytes]]:

@@ -32,6 +32,8 @@ import threading
 import time
 from typing import Callable, Dict, Optional
 
+from .. import obs
+
 __all__ = ["AutotuneCacheError", "MeasuredTuner", "best_of", "pow2_bucket"]
 
 logger = logging.getLogger("repro.core.tuning")
@@ -74,20 +76,39 @@ class MeasuredTuner:
     Lookups and records race the pipelined service's worker thread (and
     each other across services), hence the RLock; ``stats`` counts probes
     (cold resolutions the caller measured) vs hits (served from the
-    table).
+    table).  Since ISSUE 8 the counts live on the ``repro.obs`` registry
+    (``repro_tuning_{probes,hits}_total`` labelled per tuner ``name``);
+    ``stats`` stays a dict-shaped view for existing subscript reads.
     """
 
     def __init__(self, *, version: int, env_var: str,
                  validate_entry: Callable[[dict], bool],
-                 log: Optional[logging.Logger] = None):
+                 log: Optional[logging.Logger] = None,
+                 name: Optional[str] = None):
         self.version = version
         self.env_var = env_var
+        self.name = name if name is not None else env_var.lower()
         self._validate_entry = validate_entry
         self._log = log if log is not None else logger
         self._entries: Dict[str, dict] = {}
         self._loaded = False
         self.lock = threading.RLock()
-        self.stats = {"probes": 0, "hits": 0}
+        reg = obs.registry()
+        self._probes = reg.counter(
+            "repro_tuning_probes_total",
+            "cold auto resolutions measured by a timing probe",
+            labels={"tuner": self.name})
+        self._hits = reg.counter(
+            "repro_tuning_hits_total",
+            "auto resolutions served from the recorded table",
+            labels={"tuner": self.name})
+
+    @property
+    def stats(self) -> Dict[str, int]:
+        """Compat view: ``{"probes": int, "hits": int}`` (a snapshot --
+        mutating the returned dict does not write back)."""
+        return {"probes": int(self._probes.value),
+                "hits": int(self._hits.value)}
 
     # ------------------------------------------------------------ persistence
     def _path(self) -> Optional[str]:
@@ -156,8 +177,8 @@ class MeasuredTuner:
         with self.lock:
             self._entries.clear()
             self._loaded = False
-            self.stats["probes"] = 0
-            self.stats["hits"] = 0
+            self._probes.reset()
+            self._hits.reset()
 
     # ---------------------------------------------------------------- lookups
     def _ensure_loaded(self) -> None:
@@ -181,7 +202,7 @@ class MeasuredTuner:
             self._ensure_loaded()
             ent = self._entries.get(key)
             if ent is not None:
-                self.stats["hits"] += 1
+                self._hits.inc()
             return ent
 
     def record(self, key: str, entry: dict) -> dict:
@@ -191,7 +212,7 @@ class MeasuredTuner:
         over an unwritable cache path."""
         with self.lock:
             self._entries[key] = entry
-            self.stats["probes"] += 1
+            self._probes.inc()
         path = self._path()
         if path:
             try:
@@ -210,7 +231,7 @@ class MeasuredTuner:
             self._ensure_loaded()
             ent = self._entries.get(key)
             if ent is not None:
-                self.stats["hits"] += 1
+                self._hits.inc()
                 return ent
             return self.record(key, probe())
 

@@ -1,0 +1,190 @@
+"""Exporters: Prometheus text exposition, JSON snapshot, and a parser.
+
+``to_prometheus`` serializes a :class:`~repro.obs.metrics.MetricsRegistry`
+into the text exposition format (``# HELP`` / ``# TYPE`` headers,
+cumulative ``_bucket{le=...}`` rows, ``_sum`` / ``_count``).
+``parse_prometheus`` reads that format back into a flat
+``{(name, label_items): value}`` map -- the round-trip check used by the
+golden-format tests and ``scripts/obs_tool.py selfcheck``.
+
+``to_json`` bundles the registry snapshot with the span-ring snapshot
+into one JSON-ready document; ``benchmarks/run.py --json`` embeds it as
+the ``metrics_snapshot`` section so bench artifacts carry the same
+telemetry the live system exports.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+from .metrics import MetricsRegistry, registry as default_registry
+from .trace import SpanTracer, tracer as default_tracer
+
+__all__ = ["to_prometheus", "to_json", "parse_prometheus", "selfcheck"]
+
+SNAPSHOT_VERSION = 1
+
+
+def _fmt(v: float) -> str:
+    """Prometheus sample value: integers without a trailing ``.0`` so
+    counter rows read naturally; +Inf spelled the exposition way."""
+    if math.isinf(v):
+        return "+Inf" if v > 0 else "-Inf"
+    if float(v).is_integer() and abs(v) < 2 ** 53:
+        return str(int(v))
+    return repr(float(v))
+
+
+def _escape(v: str) -> str:
+    return v.replace("\\", r"\\").replace("\n", r"\n").replace('"', r'\"')
+
+
+def _labels_str(items: Tuple[Tuple[str, str], ...],
+                extra: Optional[Tuple[Tuple[str, str], ...]] = None) -> str:
+    parts = [f'{k}="{_escape(v)}"' for k, v in items]
+    if extra:
+        parts += [f'{k}="{_escape(v)}"' for k, v in extra]
+    return "{" + ",".join(parts) + "}" if parts else ""
+
+
+def to_prometheus(reg: Optional[MetricsRegistry] = None) -> str:
+    reg = reg if reg is not None else default_registry()
+    lines = []
+    for fam in sorted(reg.families(), key=lambda f: f.name):
+        if fam.help:
+            lines.append(f"# HELP {fam.name} {_escape(fam.help)}")
+        lines.append(f"# TYPE {fam.name} {fam.kind}")
+        for items, child in sorted(fam.children.items()):
+            if fam.kind == "histogram":
+                counts = child.bucket_counts()
+                cum = 0
+                for bound, c in zip(child.bounds, counts[:-1]):
+                    cum += c
+                    lines.append(
+                        f"{fam.name}_bucket"
+                        f"{_labels_str(items, (('le', _fmt(bound)),))}"
+                        f" {cum}")
+                cum += counts[-1]
+                lines.append(
+                    f"{fam.name}_bucket"
+                    f"{_labels_str(items, (('le', '+Inf'),))} {cum}")
+                lines.append(
+                    f"{fam.name}_sum{_labels_str(items)} {_fmt(child.sum)}")
+                lines.append(
+                    f"{fam.name}_count{_labels_str(items)} {child.count}")
+            else:
+                lines.append(
+                    f"{fam.name}{_labels_str(items)} {_fmt(child.value)}")
+    return "\n".join(lines) + ("\n" if lines else "")
+
+
+def to_json(reg: Optional[MetricsRegistry] = None,
+            trc: Optional[SpanTracer] = None,
+            include_spans: bool = True) -> dict:
+    reg = reg if reg is not None else default_registry()
+    trc = trc if trc is not None else default_tracer()
+    doc = {"version": SNAPSHOT_VERSION, "metrics": reg.snapshot()}
+    if include_spans:
+        doc["spans"] = trc.snapshot()
+    return doc
+
+
+def _parse_labels(s: str) -> Tuple[Tuple[str, str], ...]:
+    # exposition label block: {k="v",k2="v2"} with \\ \n \" escapes
+    items = []
+    i = 0
+    while i < len(s):
+        eq = s.index("=", i)
+        key = s[i:eq].lstrip(",").strip()
+        assert s[eq + 1] == '"', f"malformed label value at {s[eq:]!r}"
+        j = eq + 2
+        val = []
+        while s[j] != '"':
+            if s[j] == "\\":
+                nxt = s[j + 1]
+                val.append({"n": "\n", "\\": "\\", '"': '"'}[nxt])
+                j += 2
+            else:
+                val.append(s[j])
+                j += 1
+        items.append((key, "".join(val)))
+        i = j + 1
+    return tuple(sorted(items))
+
+
+def parse_prometheus(text: str) -> Dict[Tuple[str, Tuple[Tuple[str, str],
+                                                         ...]], float]:
+    """Exposition text -> ``{(sample_name, label_items): value}``.
+    Histogram series keep their expanded ``_bucket``/``_sum``/``_count``
+    names and the ``le`` label, exactly as exposed."""
+    out: Dict[Tuple[str, Tuple[Tuple[str, str], ...]], float] = {}
+    for line in text.splitlines():
+        line = line.strip()
+        if not line or line.startswith("#"):
+            continue
+        if "{" in line:
+            name = line[:line.index("{")]
+            rest = line[line.index("{") + 1:]
+            labels_s, _, value_s = rest.rpartition("}")
+            items = _parse_labels(labels_s)
+        else:
+            name, _, value_s = line.partition(" ")
+            items = ()
+        value_s = value_s.strip()
+        if value_s == "+Inf":
+            value = math.inf
+        elif value_s == "-Inf":
+            value = -math.inf
+        else:
+            value = float(value_s)
+        out[(name, items)] = value
+    return out
+
+
+def selfcheck(reg: Optional[MetricsRegistry] = None,
+              trc: Optional[SpanTracer] = None) -> list:
+    """Exporter round trip on a registry (default: a scratch one with all
+    three instrument kinds populated).  Returns a list of problem
+    strings; empty means healthy."""
+    problems = []
+    if reg is None:
+        reg = MetricsRegistry()
+        reg.counter("repro_check_ops_total", "ops",
+                    labels={"op": 'weird"\\label\n'}).inc(3)
+        reg.gauge("repro_check_depth", "depth").set(-2.5)
+        h = reg.histogram("repro_check_lat_seconds", "lat")
+        for v in (1e-6, 3e-4, 0.25, 99.0):
+            h.observe(v)
+    text = to_prometheus(reg)
+    try:
+        parsed = parse_prometheus(text)
+    except Exception as exc:  # pragma: no cover - defensive
+        return [f"exposition does not parse: {exc!r}"]
+    # every sample the registry holds must survive the round trip exactly
+    for fam in reg.families():
+        for items, child in fam.children.items():
+            if fam.kind == "histogram":
+                counts = child.bucket_counts()
+                want = {("_count", items): float(child.count),
+                        ("_sum", items): child.sum}
+                for (suffix, it), v in want.items():
+                    got = parsed.get((fam.name + suffix, it))
+                    if got != v:
+                        problems.append(
+                            f"{fam.name}{suffix}{dict(it)}: {got} != {v}")
+                inf_key = (fam.name + "_bucket",
+                           tuple(sorted(items + (("le", "+Inf"),))))
+                if parsed.get(inf_key) != float(sum(counts)):
+                    problems.append(f"{fam.name}_bucket le=+Inf mismatch")
+            else:
+                got = parsed.get((fam.name, items))
+                if got != child.value:
+                    problems.append(
+                        f"{fam.name}{dict(items)}: {got} != {child.value}")
+    # the JSON document must be round-trippable too
+    import json
+    try:
+        json.loads(json.dumps(to_json(reg, trc)))
+    except (TypeError, ValueError) as exc:
+        problems.append(f"JSON snapshot not serializable: {exc!r}")
+    return problems

@@ -41,11 +41,83 @@ from typing import (Callable, Dict, List, NamedTuple, Optional, Sequence,
 
 import numpy as np
 
+from repro import obs
 from repro.core import IdealemCodec
 from repro.core.session import IdealemSession, SessionStats
 
 from .engine import FlushPolicy
 from .pipeline import StagePipeline, SyncExecutor, ThreadStageExecutor
+
+# ---------------------------------------------------------------- telemetry
+# Serve-layer registry metrics (ISSUE 8, DESIGN.md Sec. 12).  Handles are
+# module-level so hot paths never repeat the family lookup; values are
+# process-wide aggregates across service instances (per-instance detail
+# stays on each service's ``stats`` dict, which these mirror).
+_M_STAGE_SECONDS = {
+    stage: obs.registry().histogram(
+        "repro_serve_stage_seconds",
+        "pipelined decode stage latency per flush batch",
+        labels={"stage": stage})
+    for stage in ("plan", "gather", "reconstruct", "emit")
+}
+_M_SERVE = {
+    key: obs.registry().counter(f"repro_serve_{key}_total", help_text)
+    for key, help_text in {
+        "requests": "range requests answered",
+        "blocks_out": "blocks reconstructed and handed out",
+        "flushes": "decode flush batches cut",
+        "failed_requests": "requests quarantined into last_errors",
+        "cache_hits": "parsed-segment LRU hits",
+        "cache_misses": "parsed-segment LRU misses (chunk walked)",
+        "dispatches": "reconstruct engine dispatches",
+    }.items()
+}
+_M_INFLIGHT = obs.registry().gauge(
+    "repro_serve_inflight",
+    "reconstruct batches in flight (most recent pipeline activity)")
+_M_FLUSH_AGE = obs.registry().histogram(
+    "repro_serve_flush_age_seconds",
+    "age of the oldest pending request when its batch was cut")
+_M_ENC_FLUSHES = obs.registry().counter(
+    "repro_encode_flushes_total", "coalescer device flush batches")
+_M_ENC_FLUSH_SECONDS = obs.registry().histogram(
+    "repro_encode_flush_seconds", "coalescer flush wall time")
+_M_ENC_FLUSH_BLOCKS = obs.registry().histogram(
+    "repro_encode_flush_blocks", "blocks encoded per coalescer flush",
+    buckets=tuple(float(1 << p) for p in range(0, 17, 2)))
+_M_STREAMS_OPEN = {
+    kind: obs.registry().gauge(
+        "repro_encode_streams_open", "open encode streams",
+        labels={"kind": kind})
+    for kind in ("session", "coalesced")
+}
+
+
+def _staged(stage: str, seq: int, **attrs):
+    """Span + stage-latency histogram around one pipeline stage body.
+    The injected ``trace(stage, seq)`` hook fires at stage *start* only,
+    so it cannot time; this wrapper is where durations come from."""
+    return _StagedTimer(stage, seq, attrs)
+
+
+class _StagedTimer:
+    __slots__ = ("stage", "seq", "attrs", "_span", "_t0")
+
+    def __init__(self, stage, seq, attrs):
+        self.stage, self.seq, self.attrs = stage, seq, attrs
+
+    def __enter__(self):
+        self._span = obs.span(f"serve.{self.stage}",
+                              attrs={"seq": self.seq, **self.attrs})
+        self._span.__enter__()
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        dt = time.perf_counter() - self._t0
+        if exc_type is None:
+            _M_STAGE_SECONDS[self.stage].observe(dt)
+        return self._span.__exit__(exc_type, exc, tb)
 
 __all__ = ["CompressionService", "StreamCoalescer", "DecompressionService"]
 
@@ -110,6 +182,7 @@ class CompressionService:
         self._streams[stream_id] = codec.session(channels=channels,
                                                  dtype=dtype,
                                                  container=container)
+        _M_STREAMS_OPEN["session"].inc()
         old = self._closed.pop(stream_id, None)
         if old is not None:
             for one in (old if isinstance(old, list) else [old]):
@@ -128,6 +201,7 @@ class CompressionService:
         seg = sess.finish()
         self._closed[stream_id] = sess.stats
         del self._streams[stream_id]
+        _M_STREAMS_OPEN["session"].dec()
         return seg
 
     def stats(self, stream_id: Optional[str] = None) -> dict:
@@ -240,6 +314,7 @@ class StreamCoalescer:
         self._slots[stream_id] = slot
         self._pending[stream_id] = []
         self._buffered[stream_id] = 0
+        _M_STREAMS_OPEN["coalesced"].inc()
         old = self._closed.pop(stream_id, None)
         if old is not None:
             _fold_stats(self._retired, old)
@@ -296,6 +371,7 @@ class StreamCoalescer:
         del self._pending[stream_id]
         del self._buffered[stream_id]
         self._staged_ts.pop(stream_id, None)
+        _M_STREAMS_OPEN["coalesced"].dec()
         return flushed + final
 
     def stats(self, stream_id: Optional[str] = None) -> dict:
@@ -362,6 +438,15 @@ class StreamCoalescer:
         return st
 
     def _flush(self, stream_ids: List[str]) -> Dict[str, bytes]:
+        t0 = time.perf_counter()
+        with obs.span("encode.flush", attrs={"streams": len(stream_ids)}):
+            out = self._flush_impl(stream_ids)
+        if out:
+            _M_ENC_FLUSHES.inc()
+            _M_ENC_FLUSH_SECONDS.observe(time.perf_counter() - t0)
+        return out
+
+    def _flush_impl(self, stream_ids: List[str]) -> Dict[str, bytes]:
         import jax.numpy as jnp
         from repro.core.encoder import (encode_decisions_batched,
                                         encode_decisions_dsharded,
@@ -387,6 +472,7 @@ class StreamCoalescer:
 
         cdc = self._codec
         n_lem = cdc._lem_n()
+        _M_ENC_FLUSH_BLOCKS.observe(sum(p.nb for p in prepared.values()))
         nb_max = max(p.nb for p in prepared.values())
         nb_pad = -(-nb_max // self._bucket) * self._bucket
         batch = np.zeros((self._capacity, nb_pad, n_lem), dtype=np.float32)
@@ -556,7 +642,7 @@ class DecompressionService:
         for rid, *_ in dropped:
             self.last_errors[rid] = KeyError(
                 f"store {store_id!r} detached with request pending")
-        self.stats["failed_requests"] += len(dropped)
+        self._acct("failed_requests", len(dropped))
         self._pending = [r for r in self._pending if r[1] != store_id]
         self._pending_blocks = sum(r[4] - r[3] for r in self._pending)
 
@@ -574,8 +660,8 @@ class DecompressionService:
                            seed=self._seeds[store_id],
                            parse=self._parse_for(store_id),
                            backend=self.backend)
-        self.stats["requests"] += 1
-        self.stats["blocks_out"] += stop_block - start_block
+        self._acct("requests")
+        self._acct("blocks_out", stop_block - start_block)
         return out
 
     def read_channels(self, store_id: str,
@@ -588,9 +674,9 @@ class DecompressionService:
                               seed=self._seeds[store_id],
                               parse=self._parse_for(store_id),
                               backend=self.backend)
-        self.stats["requests"] += len(out)
-        self.stats["blocks_out"] += sum(
-            store.total_blocks(c) for c in out)
+        self._acct("requests", len(out))
+        self._acct("blocks_out",
+                   sum(store.total_blocks(c) for c in out))
         return out
 
     def submit(self, request_id: str, store_id: str, start_block: int,
@@ -661,6 +747,9 @@ class DecompressionService:
         too); callers correlating answers by id should ``pop`` entries they
         have handled."""
         self._check_open()
+        age = self._age()
+        if age is not None:  # flush age at cut: how long the oldest waited
+            _M_FLUSH_AGE.observe(age)
         pending, self._pending = self._pending, []
         self._pending_blocks = 0
         out: Dict[str, np.ndarray] = self._take_early()
@@ -674,9 +763,10 @@ class DecompressionService:
         units = self._stage_gather(seq, self._stage_plan(seq, pending))
         completed = self._pipe.push((seq, units),
                                     self._stage_reconstruct, seq, units)
-        self.stats["flushes"] += 1
+        self._acct("flushes")
         self.stats["inflight_peak"] = max(
             self.stats["inflight_peak"], self._pipe.inflight + len(completed))
+        _M_INFLIGHT.set(self._pipe.inflight)
         for (seq_done, batch_units), outcomes, exc in completed:
             out.update(self._stage_emit(seq_done, batch_units, outcomes, exc))
         out.update(self._take_early())  # batches drained by a probe quiesce
@@ -691,6 +781,7 @@ class DecompressionService:
         out: Dict[str, np.ndarray] = self._take_early()
         for (seq_done, batch_units), outcomes, exc in self._pipe.drain():
             out.update(self._stage_emit(seq_done, batch_units, outcomes, exc))
+        _M_INFLIGHT.set(self._pipe.inflight)
         return out
 
     def close(self) -> Dict[str, np.ndarray]:
@@ -716,6 +807,13 @@ class DecompressionService:
     def _check_open(self) -> None:
         if self._closed:
             raise RuntimeError("DecompressionService is closed")
+
+    def _acct(self, key: str, n: int = 1) -> None:
+        """Bump a service stat and its registry mirror: the ``stats`` dict
+        keeps its pinned per-instance shape, the ``repro_serve_*_total``
+        counters aggregate across instances for the exporters."""
+        self.stats[key] += n
+        _M_SERVE[key].inc(n)
 
     def _collect_ready(self) -> Dict[str, np.ndarray]:
         """Emit every in-flight batch that has already finished
@@ -747,6 +845,10 @@ class DecompressionService:
         seek + walk each store's covering chunks.  Failing stores are
         quarantined here -- recorded in ``last_errors`` when the batch is
         cut, before any reconstruction of it runs."""
+        with _staged("plan", seq, requests=len(pending)):
+            return self._plan_impl(seq, pending)
+
+    def _plan_impl(self, seq: int, pending) -> List["_PlannedStore"]:
         from repro.store import plan_windows
         self._trace("plan", seq)
         by_store: Dict[tuple, List[Tuple[str, int, int, int]]] = {}
@@ -760,7 +862,7 @@ class DecompressionService:
                         int(self._stores[sid].chunks_of(channel)[0]))
             except Exception as e:  # corrupt header / racing detach
                 self.last_errors[rid] = e
-                self.stats["failed_requests"] += 1
+                self._acct("failed_requests")
                 continue
             pkey = (hdr.mode, hdr.block_size, np.dtype(hdr.dtype).str,
                     hdr.value_range,
@@ -777,7 +879,7 @@ class DecompressionService:
             except Exception as e:  # quarantine this store's requests
                 for rid, _, _, _ in reqs:
                     self.last_errors[rid] = e
-                self.stats["failed_requests"] += len(reqs)
+                self._acct("failed_requests", len(reqs))
                 continue
             planned.append(_PlannedStore(sid, tuple(pkey), reqs, ranges,
                                          hdr, windows))
@@ -788,6 +890,11 @@ class DecompressionService:
         """Host stage 2: one shared byte gather per store, then group
         compatible parts across stores, resolve each group's backend
         (``"auto"`` = measured-best) and pad each group into ONE plan."""
+        with _staged("gather", seq, stores=len(planned)):
+            return self._gather_impl(seq, planned)
+
+    def _gather_impl(self, seq: int,
+                     planned: List["_PlannedStore"]) -> List["_Unit"]:
         from repro.core import decode as decode_mod
         from repro.store import gather_parts
         self._trace("gather", seq)
@@ -799,7 +906,7 @@ class DecompressionService:
             except Exception as e:  # quarantine this store's requests
                 for rid, _, _, _ in ps.requests:
                     self.last_errors[rid] = e
-                self.stats["failed_requests"] += len(ps.requests)
+                self._acct("failed_requests", len(ps.requests))
                 continue
             pre = (ps.pkey, self._seeds[ps.store_id])
             for (rid, _, i, j), part in zip(ps.requests, parts):
@@ -860,7 +967,7 @@ class DecompressionService:
             except Exception as e:
                 for rid, _, _ in items:
                     self.last_errors[rid] = e
-                self.stats["failed_requests"] += len(items)
+                self._acct("failed_requests", len(items))
                 continue
             units.append(_Unit(eff, B, [(rid, n) for rid, n, _ in items],
                                plan, nbm))
@@ -870,7 +977,13 @@ class DecompressionService:
         """Device stage: one engine dispatch per unit.  Runs under the
         stage executor -- possibly on its worker thread, overlapping the
         next batch's host stages -- so it must not touch shared service
-        state: failures are captured per unit and accounted at emit."""
+        state: failures are captured per unit and accounted at emit.
+        (The span/histogram wrapper is thread-safe for the same reason:
+        registry and tracer state are lock- and thread-local-guarded.)"""
+        with _staged("reconstruct", seq, units=len(units)):
+            return self._reconstruct_impl(seq, units)
+
+    def _reconstruct_impl(self, seq: int, units: List["_Unit"]) -> list:
         self._trace("reconstruct", seq)
         from repro.core import decode as decode_mod
         outcomes = []
@@ -888,6 +1001,11 @@ class DecompressionService:
         """Host stage 4: slice each request's blocks out of its unit's
         padded body, account stats, and quarantine reconstruct failures.
         Runs in the caller's thread when the batch is collected."""
+        with _staged("emit", seq, units=len(units)):
+            return self._emit_impl(seq, units, outcomes, exc)
+
+    def _emit_impl(self, seq: int, units: List["_Unit"], outcomes,
+                   exc: Optional[BaseException]) -> Dict[str, np.ndarray]:
         self._trace("emit", seq)
         out: Dict[str, np.ndarray] = {}
         if exc is not None:  # the whole reconstruct stage died
@@ -896,14 +1014,14 @@ class DecompressionService:
             if u_exc is not None:
                 for rid, _ in u.items:
                     self.last_errors[rid] = u_exc
-                self.stats["failed_requests"] += len(u.items)
+                self._acct("failed_requests", len(u.items))
                 continue
             body = body.reshape(len(u.items), u.nbm, u.block_size)
-            self.stats["dispatches"] += 1
+            self._acct("dispatches")
             for r, (rid, n) in enumerate(u.items):
                 out[rid] = body[r, :n].ravel()
-                self.stats["blocks_out"] += n
-            self.stats["requests"] += len(u.items)
+                self._acct("blocks_out", n)
+            self._acct("requests", len(u.items))
         return out
 
     # ------------------------------------------------------------- internals
@@ -925,9 +1043,9 @@ class DecompressionService:
             hit = self._cache.get(key)
             if hit is not None:
                 self._cache.move_to_end(key)
-                self.stats["cache_hits"] += 1
+                self._acct("cache_hits")
                 return hit
-            self.stats["cache_misses"] += 1
+            self._acct("cache_misses")
             parsed = parse_chunk(store, chunk)
             self._cache[key] = parsed
             self._cached_blocks += len(parsed.is_hit)

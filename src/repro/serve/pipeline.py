@@ -30,8 +30,17 @@ import queue
 import threading
 from typing import Any, Callable, List, Optional, Tuple
 
+from repro import obs
+
 __all__ = ["StageFuture", "SyncExecutor", "ThreadStageExecutor",
            "StagePipeline"]
+
+# A batch whose reconstruct stage was *lost* (the stage raised, or the
+# executor died under it).  ``last_errors`` on the service tells the
+# operator which requests; this counter makes the event scrapeable.
+_M_STAGE_ERRORS = obs.registry().counter(
+    "repro_serve_stage_errors_total",
+    "in-flight batches collected with a stage exception")
 
 
 class StageFuture:
@@ -84,10 +93,18 @@ class ThreadStageExecutor:
 
     A single worker keeps device dispatch serialized (batches never race
     for the accelerator) while the caller thread stays free to plan and
-    gather the next batch -- double-buffering, not fan-out."""
+    gather the next batch -- double-buffering, not fan-out.
+
+    ``shutdown()`` is idempotent and safe after a worker death:
+    ``DecompressionService.close()`` may run it twice (its own ``close``
+    plus a ``with``-exit) or after the worker thread is already gone, and
+    must never block or raise.  ``submit`` after shutdown -- or onto a
+    dead worker -- delivers a failed future instead of enqueueing work
+    nobody will run (a silent hang at ``result()``)."""
 
     def __init__(self, name: str = "repro-decode-pipeline"):
         self._queue: "queue.SimpleQueue" = queue.SimpleQueue()
+        self._shutdown = False
         self._thread = threading.Thread(target=self._worker, name=name,
                                         daemon=True)
         self._thread.start()
@@ -103,13 +120,26 @@ class ThreadStageExecutor:
             except BaseException as e:
                 fut.set_exception(e)
 
+    @property
+    def alive(self) -> bool:
+        return not self._shutdown and self._thread.is_alive()
+
     def submit(self, fn: Callable, *args) -> StageFuture:
         fut = StageFuture()
+        if not self.alive:
+            fut.set_exception(RuntimeError(
+                "ThreadStageExecutor is shut down (or its worker died); "
+                "stage not submitted"))
+            return fut
         self._queue.put((fut, fn, args))
         return fut
 
     def shutdown(self) -> None:
-        self._queue.put(None)
+        if self._shutdown:
+            return
+        self._shutdown = True
+        if self._thread.is_alive():
+            self._queue.put(None)
 
 
 class StagePipeline:
@@ -173,4 +203,5 @@ class StagePipeline:
         try:
             return meta, fut.result(), None
         except Exception as e:
+            _M_STAGE_ERRORS.inc()
             return meta, None, e

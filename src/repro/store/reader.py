@@ -29,12 +29,31 @@ from typing import Callable, Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.core import decode as decode_mod
 from repro.core import stream as stream_mod
 from repro.core.decode import PlanPart
 from repro.core.stream import StreamFormatError, StreamHeader
 
 from .container import Container
+
+# Read-path registry metrics (ISSUE 8).  Chunk walks count *actual*
+# decision-byte walks -- the serving LRU's hits never reach parse_chunk,
+# so (requests served) vs (walks) is the cache story end to end.
+_M_WALKS = obs.registry().counter(
+    "repro_store_chunk_walks_total",
+    "container chunk decision-byte walks (cache misses reach here)")
+_M_RANGE_REQS = obs.registry().counter(
+    "repro_store_range_requests_total",
+    "range-decode requests (one per (channel, start, stop) tuple)")
+_M_GATHER_BYTES = obs.registry().counter(
+    "repro_store_gather_bytes_total",
+    "payload/base bytes fancy-index-gathered from containers")
+# request extents in blocks, pow-2-ish ladder: 1 block .. 64k blocks
+_M_RANGE_BLOCKS = obs.registry().histogram(
+    "repro_store_range_blocks",
+    "requested range sizes in blocks",
+    buckets=tuple(float(1 << p) for p in range(0, 17, 2)))
 
 __all__ = [
     "ParsedChunk",
@@ -68,6 +87,7 @@ def parse_chunk(store: Container, chunk: int) -> ParsedChunk:
     The index supplies the two pieces of cross-segment state a raw stream
     only has implicitly: the FIFO fill counter entering the segment and
     (elsewhere, via ``Container.snapshot``) the dictionary contents."""
+    _M_WALKS.inc()
     buf = memoryview(store.data)
     start = int(store._cols["offset"][chunk])
     hdr, off = stream_mod._unpack_header(buf, start)
@@ -204,6 +224,8 @@ def gather_parts(store: Container, hdr: StreamHeader,
     rows_flat = decode_mod.gather_rows(u8, dt, np.concatenate(po_parts), P)
     bases_flat = (None if std else decode_mod.gather_rows(
         u8, dt, np.concatenate(bo_parts), 1).ravel())
+    _M_GATHER_BYTES.inc(rows_flat.nbytes
+                        + (0 if bases_flat is None else bases_flat.nbytes))
 
     parts, pos = [], 0
     for w, (channel, start, stop) in zip(windows, requests):
@@ -255,6 +277,9 @@ def decode_ranges(store: Container, requests: Sequence[Tuple[int, int, int]],
     backend.  Returns one 1-D array per request, in request order."""
     if not len(requests):
         return []
+    _M_RANGE_REQS.inc(len(requests))
+    for _, start, stop in requests:
+        _M_RANGE_BLOCKS.observe(stop - start)
     hdr, parts = plan_parts(store, requests, parse=parse)
     plan, nbm = decode_mod.pad_parts(
         hdr.mode, hdr.block_size, hdr.dtype, hdr.value_range, parts,
