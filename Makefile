@@ -3,7 +3,8 @@ PY ?= python
 export PYTHONPATH := src
 
 .PHONY: test test-core bench bench-quick bench-gate bench-stream \
-	bench-shard bench-store bench-decode bench-encode bench-frontier \
+	bench-shard bench-store bench-decode bench-encode bench-adaptive \
+	bench-frontier \
 	bench-obs shard-check store-check store-check-quick obs-check lint \
 	example-stream
 
@@ -37,6 +38,11 @@ bench-decode:
 # (fails below the 1.3x acceptance bar).
 bench-encode:
 	$(PY) -m benchmarks.bench_encode_fused
+
+# Batched mixed-mode adaptive encode vs the per-channel loop (fails
+# below the 2x acceptance bar at C=64).
+bench-adaptive:
+	$(PY) -m benchmarks.bench_adaptive_batch
 
 # Rate-distortion frontier: error-bounded IDEALEM vs the baseline codecs.
 bench-frontier:

@@ -1,0 +1,135 @@
+"""Batched mixed-mode adaptive encode vs the per-channel loop (ISSUE 9,
+DESIGN.md Sec. 13).
+
+An adaptive session whose selectors have diverged holds per-channel codec
+variants: different payload widths (std vs delta), different quantized
+``d_crit`` thresholds.  The PR 7 path dispatched one device scan per
+channel per feed; the batched path masks all channels into ONE padded
+mixed-mode scan.  This bench builds heterogeneous C-channel sessions
+(half std at width B, half switched to delta at width B-1 with a tighter
+threshold), asserts decision identity between the two paths, then times
+``_decide_adaptive`` on both:
+
+  adaptive_batch/loop/C{C}            us per (channel x block), loop path
+  adaptive_batch/batched/C{C}         us per (channel x block), one scan
+  adaptive_batch/batched_vs_loop/C{C} dimensionless ratio row (x1000)
+
+``batched_vs_loop`` at C=64 is the acceptance gate: the batched scan must
+hold a >= 2x encode-throughput win over the per-channel loop.  The bench
+fails below the bar, and the ratio row is pinned in ``BENCH_quick.json``
+like ``encode_fused/fused_vs_ops``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+
+import numpy as np
+
+from repro.core import IdealemCodec
+from repro.core.session import _ADAPTIVE_LOOP_ENV
+
+from .common import csv_row
+
+# already quick-sized: the same two cohorts run in --quick and full mode
+CONFIGS = [8, 64]            # channel counts (heterogeneous cohorts)
+# blocks per channel per feed: a serving-quantum-sized feed, where the
+# loop's per-channel dispatch overhead is the dominant cost being removed
+NB = 16
+BLOCK = 16
+NUM_DICT = 32
+MIN_SPEEDUP = 2.0            # ISSUE 9 acceptance bar at C=64
+
+
+def _session(C: int, loop: bool):
+    """An adaptive session with half its channels switched to delta mode
+    at a tightened threshold (what a diverged selector fleet looks like),
+    locked onto the batched or loop decide path."""
+    codec = IdealemCodec(mode="std", block_size=BLOCK, num_dict=NUM_DICT,
+                         backend="jax", adaptive=True)
+    s = codec.session(channels=C)
+    delta = dataclasses.replace(codec, mode="delta")
+    for ci in range(1, C, 2):
+        s._codecs[ci] = delta
+        s._d_crit[ci] = float(codec.d_crit) * 0.75
+    prev = os.environ.pop(_ADAPTIVE_LOOP_ENV, None)
+    try:
+        if loop:
+            os.environ[_ADAPTIVE_LOOP_ENV] = "1"
+        s._decide_adaptive(_payloads(C, seed=999))  # locks the path + jits
+    finally:
+        os.environ.pop(_ADAPTIVE_LOOP_ENV, None)
+        if prev is not None:
+            os.environ[_ADAPTIVE_LOOP_ENV] = prev
+    assert (s._mixed is None) == loop
+    return s
+
+
+def _payloads(C: int, seed: int = 0):
+    """Ragged per-channel payload list: mixture traffic so hits, misses
+    and FIFO overwrites all occur; odd (delta) channels are one narrower."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for ci in range(C):
+        n = BLOCK - (ci % 2)
+        levels = rng.normal(0, 2, size=4)[rng.integers(0, 4, size=NB)]
+        out.append(rng.normal(0, 1, size=(NB, n)) + levels[:, None])
+    return out
+
+
+def _time(fn, repeat=3):
+    fn()  # warmup (jit compile already locked in _session)
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn()  # _decide_adaptive returns host arrays: already synced
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run():
+    rows = []
+    worst_at_max_c = None
+    for C in CONFIGS:
+        payloads = _payloads(C, seed=C)
+        # decision identity between the paths before any timing
+        ref = _session(C, loop=True)._decide_adaptive(payloads)
+        got = _session(C, loop=False)._decide_adaptive(payloads)
+        for (rh, rs, ro), (gh, gs, go) in zip(ref, got):
+            np.testing.assert_array_equal(rh, gh)
+            np.testing.assert_array_equal(rs, gs)
+            np.testing.assert_array_equal(ro, go)
+
+        s_loop = _session(C, loop=True)
+        s_batch = _session(C, loop=False)
+        t_loop = _time(lambda: s_loop._decide_adaptive(payloads))
+        t_batch = _time(lambda: s_batch._decide_adaptive(payloads))
+        per = 1e6 / (C * NB)
+        rows.append(csv_row(
+            f"adaptive_batch/loop/C{C}", t_loop * per,
+            f"nb={NB};B={BLOCK};D={NUM_DICT};dispatches_per_feed={C}"))
+        rows.append(csv_row(
+            f"adaptive_batch/batched/C{C}", t_batch * per,
+            f"nb={NB};B={BLOCK};D={NUM_DICT};dispatches_per_feed=1"))
+        speedup = t_loop / t_batch
+        rows.append(csv_row(
+            f"adaptive_batch/batched_vs_loop/C{C}",
+            # dimensionless ratio row (x1000): machine-speed independent,
+            # so the committed baseline pins the *speedup*, not a time
+            1000.0 * t_batch / t_loop,
+            f"speedup={speedup:.2f}x;channels={C}"))
+        if C == max(CONFIGS):
+            worst_at_max_c = speedup
+
+    if worst_at_max_c is not None and worst_at_max_c < MIN_SPEEDUP:
+        raise AssertionError(
+            f"batched adaptive encode speedup {worst_at_max_c:.2f}x < "
+            f"required {MIN_SPEEDUP}x over the per-channel loop at "
+            f"C={max(CONFIGS)}")
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

@@ -31,7 +31,7 @@ import sys
 import traceback
 
 QUICK_MODULES = ("stream_io", "store_decode", "decode_backends",
-                 "encode_fused", "frontier",
+                 "encode_fused", "adaptive_batch", "frontier",
                  "obs_overhead")  # fast host/codec smoke set
 
 RESULTS_VERSION = 1
@@ -94,6 +94,7 @@ def main(argv=None) -> None:
         ("store_decode", "bench_store_decode"),
         ("decode_backends", "bench_decode_backends"),
         ("encode_fused", "bench_encode_fused"),
+        ("adaptive_batch", "bench_adaptive_batch"),
         ("frontier", "bench_frontier"),
         ("obs_overhead", "bench_obs_overhead"),
         ("roofline", "roofline"),

@@ -39,17 +39,21 @@ from typing import Callable, NamedTuple, Optional, Tuple, Union
 import jax
 import jax.numpy as jnp
 
-from .ks import ks_statistic_many
+from .ks import ks_statistic_many, ks_statistic_many_masked
 from .tuning import MeasuredTuner, best_of
 
 __all__ = [
     "DictState",
     "EncoderParams",
+    "ChanParams",
     "init_state",
+    "repad_state_n",
     "matcher_reference",
     "resolve_matcher",
     "encode_decisions",
     "encode_decisions_batched",
+    "encode_decisions_mixed",
+    "encode_decisions_mixed_sharded",
     "encode_decisions_sharded",
     "encode_decisions_dsharded",
     "MATCHERS",
@@ -101,6 +105,22 @@ class EncoderParams(NamedTuple):
     error_cumulative: bool = False
 
 
+class ChanParams(NamedTuple):
+    """Per-channel *traced* parameters of the masked mixed-mode scan
+    (adaptive sessions, DESIGN.md Sec. 13).  Callers pass ``(C,)`` arrays;
+    under the channel vmap every field is a scalar.  Built host-side by
+    ``_chan_params_host`` so the float rounding matches the static paths
+    exactly (``inv_n`` is the f32 rounding of the python-float ``1/n`` the
+    fused kernel closes over)."""
+
+    n: jax.Array  # () int32 logical payload width (<= padded cohort max)
+    nf: jax.Array  # () f32 float(n): the reference matcher's ECDF divisor
+    inv_n: jax.Array  # () f32 f32(1/n): the fused kernel's ECDF multiplier
+    d_crit: jax.Array  # () f32 per-channel threshold (selector-scaled)
+    err_cum: jax.Array  # () bool cumulative error metric (delta mode)
+    eb_on: jax.Array  # () bool error-bound gate armed for this channel
+
+
 def init_state(num_dict: int, n: int, dtype=jnp.float32,
                channels: Optional[int] = None,
                raw: bool = False) -> DictState:
@@ -118,6 +138,30 @@ def init_state(num_dict: int, n: int, dtype=jnp.float32,
         raw_blocks=jnp.zeros(lead + (num_dict if raw else 0, n),
                              dtype=dtype),
     )
+
+
+def repad_state_n(state: DictState, n_new: int) -> DictState:
+    """Re-pad the trailing payload-width axis of a (batched) mixed carry
+    when the cohort's max live width changes.  Grown columns are ``+inf``
+    (the pad value of inserted rows -- sorted rows stay sorted).  Shrinking
+    slices pad columns off, which is only sound when every remaining valid
+    row's logical width is <= ``n_new``; the session resets a lane before
+    its width changes, so that invariant always holds."""
+    n_old = state.sorted_blocks.shape[-1]
+    if n_new == n_old:
+        return state
+
+    def fit(a):
+        if n_new > n_old:
+            pad = [(0, 0)] * (a.ndim - 1) + [(0, n_new - n_old)]
+            return jnp.pad(a, pad, constant_values=jnp.inf)
+        return a[..., :n_new]
+
+    raw = state.raw_blocks
+    if raw.shape[-2]:
+        raw = fit(raw)
+    return state._replace(sorted_blocks=fit(state.sorted_blocks),
+                          raw_blocks=raw)
 
 
 def _error_gate(block, raw_blocks, params: EncoderParams):
@@ -151,8 +195,13 @@ def matcher_reference(xs_sorted, dict_sorted, dmin, dmax, rel_tol):
     return ks, mm
 
 
-def _step(matcher, params: EncoderParams, state: DictState, block_valid):
-    """One scan step over ``(block, block_valid)``.
+def _step(matcher, params: EncoderParams, state: DictState, blk):
+    """One scan step over ``(block, xs_sorted, block_valid)``.
+
+    The per-block sort is hoisted out of the step: every scan entry point
+    sorts the whole ``(nb, n)`` batch once (``jnp.sort(..., axis=-1)`` is
+    bitwise identical to a per-step ``jnp.sort``) and threads the sorted
+    rows alongside the raw ones, so the step itself is pure matching.
 
     ``block_valid`` is the ragged-batch padding mask: a False step is a
     no-op -- the carry passes through untouched and the decision triple is
@@ -160,9 +209,8 @@ def _step(matcher, params: EncoderParams, state: DictState, block_valid):
     (coalesced serving batches, sharded channel padding) stay
     decision-identical to an unpadded scan.
     """
-    block, valid = block_valid
+    block, xs, valid = blk
     num_dict = state.sorted_blocks.shape[0]
-    xs = jnp.sort(block)
     xmin, xmax = xs[0], xs[-1]
 
     ks, mm = matcher(xs, state.sorted_blocks, state.dmin, state.dmax,
@@ -249,17 +297,17 @@ def _slice_state_d(state: DictState, num_dict: int) -> DictState:
 
 
 def _step_fused(tile_d: int, params: EncoderParams, num_dict: int,
-                state: DictState, block_valid):
+                state: DictState, blk):
     """Fused-kernel scan step: one pallas dispatch computes gate + masked KS
     + arg-min + FIFO overwrite and returns the updated (padded) carry.
     Decision-identical to ``_step`` with the ``ops`` matcher (bitwise: same
-    kernel arithmetic) and to ``matcher_reference`` (same decisions)."""
+    kernel arithmetic) and to ``matcher_reference`` (same decisions).  Like
+    ``_step`` it consumes pre-sorted rows from the batched sort stage."""
     from repro.kernels.encode_step import (DEC_COUNT, DEC_HIT, DEC_OVER,
                                            DEC_SLOT, encode_step_pallas)
     from repro.kernels.ops import _INTERPRET
 
-    block, valid = block_valid
-    xs = jnp.sort(block)
+    block, xs, valid = blk
     if params.error_bound is None:
         new_sorted, ndmin, ndmax, nvalid, dec = encode_step_pallas(
             xs, state.sorted_blocks, state.dmin, state.dmax, state.valid,
@@ -305,18 +353,19 @@ def _encode_scan():
             use_ks=use_ks, error_bound=error_bound,
             error_cumulative=error_cumulative,
         )
+        xs_all = jnp.sort(blocks, axis=-1)  # hoisted out of the scan step
         if _is_fused(matcher):
             tile_d = matcher[1]
             num_dict = state.sorted_blocks.shape[0]
             pstate = _pad_state_d(state, (-num_dict) % tile_d)
             step = functools.partial(_step_fused, tile_d, params, num_dict)
             new_state, (is_hit, slot, overwrite) = jax.lax.scan(
-                step, pstate, (blocks, valid))
+                step, pstate, (blocks, xs_all, valid))
             new_state = _slice_state_d(new_state, num_dict)
         else:
             step = functools.partial(_step, matcher, params)
             new_state, (is_hit, slot, overwrite) = jax.lax.scan(
-                step, state, (blocks, valid))
+                step, state, (blocks, xs_all, valid))
         return (is_hit, slot, overwrite), new_state
 
     return scan
@@ -548,6 +597,341 @@ def encode_decisions_batched(
     return (out, new_state) if return_state else out
 
 
+# ------------------------------------------- masked mixed-mode (adaptive)
+#
+# Adaptive sessions diverge per channel: payload width (std vs
+# residual/delta transforms), KS threshold (selector-scaled d_crit) and
+# error metric (plain vs cumulative) all become channel-local.  Instead of
+# one dispatch per channel, the mixed scan pads payloads to the cohort max
+# width with +inf, masks tail columns per channel, and turns the formerly
+# static kwargs into ChanParams carried through the vmap -- one dispatch
+# and one host sync per feed, bitwise identical to the per-channel loop
+# (DESIGN.md Sec. 13).
+
+def _step_mixed(params: EncoderParams, chan: ChanParams, state: DictState,
+                blk):
+    """Masked variant of ``_step``: every width-dependent quantity uses the
+    channel's logical width ``chan.n`` with the +inf tail columns masked
+    out, and the KS threshold / error metric come from ``chan`` instead of
+    the static params.  Bitwise-identical decisions and carry to ``_step``
+    on the unpadded width."""
+    block, xs, valid = blk
+    num_dict = state.sorted_blocks.shape[0]
+    n_max = xs.shape[0]
+    col_ok = jnp.arange(n_max) < chan.n
+    xmin = xs[0]
+    # == xs[chan.n - 1] on sorted data; avoids a traced-index gather
+    xmax = jnp.max(jnp.where(col_ok, xs, -jnp.inf))
+
+    ks = ks_statistic_many_masked(xs, state.sorted_blocks, chan.nf, col_ok)
+    mm = _minmax_gate(xmin, xmax, state.dmin, state.dmax, params.rel_tol)
+    ones = jnp.ones((num_dict,), dtype=bool)
+    mm_ok = mm if params.use_minmax else ones
+    ks_ok = (ks <= chan.d_crit) if params.use_ks else ones
+
+    ok = state.valid & mm_ok & ks_ok
+    if params.error_bound is not None:
+        diff = block[None, :] - state.raw_blocks
+        diff = jnp.where(chan.err_cum, jnp.cumsum(diff, axis=-1), diff)
+        # pad columns hold inf - inf = NaN: mask them before the max
+        err = jnp.max(jnp.where(col_ok[None, :], jnp.abs(diff), 0.0),
+                      axis=-1)
+        ok = ok & ((~chan.eb_on) | (err <= params.error_bound))
+    is_hit = jnp.any(ok) & valid
+    first_hit = jnp.argmax(ok)
+
+    ins_slot = jnp.mod(state.count, num_dict)
+    do_ins = (~is_hit) & valid
+    overwrite = do_ins & (state.count >= num_dict)
+    slot = jnp.where(is_hit, first_hit, ins_slot).astype(jnp.int32)
+    slot = jnp.where(valid, slot, 0)
+
+    new_sorted = jax.lax.dynamic_update_slice(
+        state.sorted_blocks, xs[None, :], (ins_slot, 0)
+    )
+    upd = jnp.arange(num_dict) == ins_slot
+    raw_blocks = state.raw_blocks
+    if params.error_bound is not None:
+        new_raw = jax.lax.dynamic_update_slice(
+            raw_blocks, block[None, :], (ins_slot, 0))
+        raw_blocks = jnp.where(do_ins, new_raw, raw_blocks)
+    new_state = DictState(
+        sorted_blocks=jnp.where(do_ins, new_sorted, state.sorted_blocks),
+        dmin=jnp.where(do_ins & upd, xmin, state.dmin),
+        dmax=jnp.where(do_ins & upd, xmax, state.dmax),
+        valid=jnp.where(do_ins & upd, True, state.valid),
+        count=state.count + do_ins.astype(jnp.int32),
+        raw_blocks=raw_blocks,
+    )
+    return new_state, (is_hit, slot, overwrite)
+
+
+def _chan_block(chan: ChanParams) -> jax.Array:
+    """The fused kernel's (8,) f32 channel-parameter operand (layout
+    mirrored by ``kernels.encode_step.CHAN_*``; rows 5..7 are padding)."""
+    z = jnp.zeros((), jnp.float32)
+    return jnp.stack([chan.nf, chan.inv_n, chan.d_crit,
+                      chan.err_cum.astype(jnp.float32),
+                      chan.eb_on.astype(jnp.float32), z, z, z])
+
+
+def _step_mixed_fused(tile_d: int, params: EncoderParams, num_dict: int,
+                      chan_arr: jax.Array, state: DictState, blk):
+    """Fused-kernel mixed scan step: the per-channel parameters travel as
+    the kernel's ``chan`` operand, so one pallas dispatch per block still
+    covers the whole heterogeneous step."""
+    from repro.kernels.encode_step import (DEC_COUNT, DEC_HIT, DEC_OVER,
+                                           DEC_SLOT, encode_step_pallas)
+    from repro.kernels.ops import _INTERPRET
+
+    block, xs, valid = blk
+    kw = dict(d_crit=0.0, rel_tol=params.rel_tol,  # d_crit from chan
+              use_minmax=params.use_minmax, use_ks=params.use_ks,
+              num_dict=num_dict, tile_d=tile_d, interpret=_INTERPRET,
+              chan=chan_arr)
+    if params.error_bound is None:
+        new_sorted, ndmin, ndmax, nvalid, dec = encode_step_pallas(
+            xs, state.sorted_blocks, state.dmin, state.dmax, state.valid,
+            state.count, valid, **kw)
+        new_raw = state.raw_blocks
+    else:
+        new_sorted, ndmin, ndmax, nvalid, new_raw, dec = encode_step_pallas(
+            xs, state.sorted_blocks, state.dmin, state.dmax, state.valid,
+            state.count, valid, raw=block, raw_blocks=state.raw_blocks,
+            error_bound=params.error_bound, **kw)
+    new_state = DictState(new_sorted, ndmin, ndmax, nvalid, dec[DEC_COUNT],
+                          new_raw)
+    return new_state, (dec[DEC_HIT].astype(bool), dec[DEC_SLOT],
+                       dec[DEC_OVER].astype(bool))
+
+
+def _mixed_one(matcher, params: EncoderParams, num_dict: int):
+    """Per-channel scan body shared by the vmapped and shard_map'd mixed
+    encoders.  ``matcher`` is ``"reference"`` or a fused tuple (the only
+    matchers with masked variants)."""
+
+    def one(s, b, xsb, v, cp):
+        if _is_fused(matcher):
+            ps = _pad_state_d(s, (-num_dict) % matcher[1])
+            step = functools.partial(_step_mixed_fused, matcher[1], params,
+                                     num_dict, _chan_block(cp))
+            new_s, out = jax.lax.scan(step, ps, (b, xsb, v))
+            return out, _slice_state_d(new_s, num_dict)
+        step = functools.partial(_step_mixed, params, cp)
+        new_s, out = jax.lax.scan(step, s, (b, xsb, v))
+        return out, new_s
+
+    return one
+
+
+@functools.lru_cache(maxsize=None)
+def _mixed_scan():
+    """Jitted mixed-mode scan, built lazily like ``_encode_scan``."""
+    donate = (0,) if jax.default_backend() in ("tpu", "gpu") else ()
+
+    @functools.partial(
+        jax.jit,
+        static_argnames=("rel_tol", "use_minmax", "use_ks", "matcher",
+                         "error_bound"),
+        donate_argnums=donate,
+    )
+    def scan(state, blocks, valid, chan, *, rel_tol, use_minmax, use_ks,
+             matcher, error_bound=None):
+        params = EncoderParams(d_crit=0.0, rel_tol=rel_tol,
+                               use_minmax=use_minmax, use_ks=use_ks,
+                               error_bound=error_bound)
+        num_dict = state.sorted_blocks.shape[-2]
+        xs_all = jnp.sort(blocks, axis=-1)  # +inf pads sort to the tail
+        one = _mixed_one(matcher, params, num_dict)
+        out, new_state = jax.vmap(one)(state, blocks, xs_all, valid, chan)
+        return out, new_state
+
+    return scan
+
+
+def _resolve_mixed_matcher(matcher):
+    """Only the reference and fused matchers have masked (width-aware)
+    variants; ``"ops"``/``"auto"``/callables must use the per-channel
+    loop instead (the session falls back automatically)."""
+    if matcher is None or matcher == "reference" \
+            or matcher is matcher_reference:
+        return "reference"
+    if matcher == "fused":
+        matcher = _named_matcher("fused")
+    if _is_fused(matcher):
+        return matcher
+    raise ValueError(
+        f"the mixed-mode scan has masked variants of the reference and "
+        f"fused matchers only; got {matcher!r}")
+
+
+def _chan_params_host(n_valid, d_crit, err_cum, eb_on) -> ChanParams:
+    """Host-side ChanParams construction: ``inv_n`` is rounded f64 -> f32
+    exactly like the static fused kernel's closed-over python float, so
+    the chan-parameterized kernel is bitwise identical to the static one."""
+    import numpy as np
+
+    n = np.maximum(np.asarray(n_valid, np.int64), 1)  # inactive-lane guard
+    return ChanParams(
+        n=jnp.asarray(n, jnp.int32),
+        nf=jnp.asarray(n, jnp.float32),
+        inv_n=jnp.asarray(1.0 / n.astype(np.float64), jnp.float32),
+        d_crit=jnp.asarray(np.asarray(d_crit), jnp.float32),
+        err_cum=jnp.asarray(np.asarray(err_cum), bool),
+        eb_on=jnp.asarray(np.asarray(eb_on), bool),
+    )
+
+
+def encode_decisions_mixed(
+    blocks_cn: jax.Array,
+    *,
+    num_dict: int,
+    n_valid,
+    d_crit,
+    rel_tol: float = 0.1,
+    use_minmax: bool = True,
+    use_ks: bool = True,
+    error_bound: Optional[float] = None,
+    error_cumulative=None,
+    eb_on=None,
+    matcher: Optional[Union[Callable, str, Tuple]] = None,
+    state: Optional[DictState] = None,
+    valid: Optional[jax.Array] = None,
+):
+    """Batched mixed-mode encoder for adaptive heterogeneous channels.
+
+    ``blocks_cn`` (C, nb, n_max): per-channel payloads padded on the
+    trailing width axis with ``+inf`` to the cohort max and on the block
+    axis via ``valid`` (C, nb).  ``n_valid`` (C,) gives each channel's
+    logical payload width, ``d_crit`` (C,) its (selector-scaled) KS
+    threshold, ``error_cumulative`` (C,) bools pick the cumsum error
+    metric per channel (delta mode) under the shared static
+    ``error_bound``, and ``eb_on`` (C,) disarms the bound per channel.
+
+    Decisions and the per-lane carry are bitwise identical to C separate
+    ``encode_decisions`` calls on the unpadded payloads, in **one**
+    dispatch (DESIGN.md Sec. 13).  Resumable exactly like
+    ``encode_decisions_batched``; the carry's width axis follows the
+    cohort max -- repad with :func:`repad_state_n` when it changes.
+    """
+    import numpy as np
+
+    C = blocks_cn.shape[0]
+    matcher = _resolve_mixed_matcher(matcher)
+    return_state = state is not None
+    if state is None:
+        state = init_state(num_dict, blocks_cn.shape[-1],
+                           dtype=blocks_cn.dtype, channels=C,
+                           raw=error_bound is not None)
+    if error_bound is not None and state.raw_blocks.shape[-2] == 0:
+        raise ValueError("error_bound requires a state created with "
+                         "init_state(..., raw=True)")
+    if valid is None:
+        valid = jnp.ones(blocks_cn.shape[:2], dtype=bool)
+    chan = _chan_params_host(
+        n_valid, d_crit,
+        np.zeros(C, bool) if error_cumulative is None else error_cumulative,
+        np.ones(C, bool) if eb_on is None else eb_on)
+    out, new_state = _mixed_scan()(
+        state, blocks_cn, valid, chan, rel_tol=float(rel_tol),
+        use_minmax=use_minmax, use_ks=use_ks, matcher=matcher,
+        error_bound=None if error_bound is None else float(error_bound),
+    )
+    return (out, new_state) if return_state else out
+
+
+@functools.lru_cache(maxsize=None)
+def _mixed_sharded_scan(mesh, axis_name: str):
+    """shard_map'd mixed scan: channel axis split over the mesh like
+    ``_sharded_scan``, with the ChanParams arrays sharded alongside."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    donate = (0,) if jax.default_backend() in ("tpu", "gpu") else ()
+    st_spec = state_partition_spec(axis_name)
+    blk_spec = P(axis_name, None, None)
+    msk_spec = P(axis_name, None)
+    chan_spec = ChanParams(*([P(axis_name)] * len(ChanParams._fields)))
+    out_spec = (P(axis_name, None),) * 3
+
+    @functools.partial(
+        jax.jit,
+        static_argnames=("rel_tol", "use_minmax", "use_ks", "matcher",
+                         "error_bound"),
+        donate_argnums=donate,
+    )
+    def scan(state, blocks, valid, chan, *, rel_tol, use_minmax, use_ks,
+             matcher, error_bound=None):
+        params = EncoderParams(d_crit=0.0, rel_tol=rel_tol,
+                               use_minmax=use_minmax, use_ks=use_ks,
+                               error_bound=error_bound)
+        num_dict = state.sorted_blocks.shape[-2]
+        one = _mixed_one(matcher, params, num_dict)
+
+        def shard(s, b, v, cp):
+            x = jnp.sort(b, axis=-1)
+            return jax.vmap(one)(s, b, x, v, cp)
+
+        return shard_map(
+            shard, mesh=mesh,
+            in_specs=(st_spec, blk_spec, msk_spec, chan_spec),
+            out_specs=(out_spec, st_spec),
+            check_rep=False,
+        )(state, blocks, valid, chan)
+
+    return scan
+
+
+def encode_decisions_mixed_sharded(
+    blocks_cn: jax.Array,
+    *,
+    mesh,
+    axis_name: str,
+    num_dict: int,
+    n_valid,
+    d_crit,
+    rel_tol: float = 0.1,
+    use_minmax: bool = True,
+    use_ks: bool = True,
+    error_bound: Optional[float] = None,
+    error_cumulative=None,
+    eb_on=None,
+    matcher: Optional[Union[Callable, str, Tuple]] = None,
+    state: Optional[DictState] = None,
+    valid: Optional[jax.Array] = None,
+):
+    """Channel-sharded :func:`encode_decisions_mixed`: the cohort's channel
+    axis (and its ChanParams arrays) split over the 1-D ``mesh`` exactly
+    like ``encode_decisions_sharded``.  C must be a mesh-axis multiple (an
+    ``EncodePlan`` computes the padding; inactive pad lanes carry
+    ``valid=False`` rows and a clamped width)."""
+    import numpy as np
+
+    matcher = _resolve_mixed_matcher(matcher)
+    C = blocks_cn.shape[0]
+    if C % mesh.shape[axis_name] != 0:
+        raise ValueError(
+            f"channels={C} not divisible by mesh axis "
+            f"{axis_name}={mesh.shape[axis_name]}; pad via EncodePlan")
+    return_state = state is not None
+    if state is None:
+        state = init_state(num_dict, blocks_cn.shape[-1],
+                           dtype=blocks_cn.dtype, channels=C,
+                           raw=error_bound is not None)
+    if valid is None:
+        valid = jnp.ones(blocks_cn.shape[:2], dtype=bool)
+    chan = _chan_params_host(
+        n_valid, d_crit,
+        np.zeros(C, bool) if error_cumulative is None else error_cumulative,
+        np.ones(C, bool) if eb_on is None else eb_on)
+    out, new_state = _mixed_sharded_scan(mesh, axis_name)(
+        state, blocks_cn, valid, chan, rel_tol=float(rel_tol),
+        use_minmax=use_minmax, use_ks=use_ks, matcher=matcher,
+        error_bound=None if error_bound is None else float(error_bound),
+    )
+    return (out, new_state) if return_state else out
+
+
 # ------------------------------------------------------- sharded scale-out
 def state_partition_spec(axis_name: str):
     """``DictState``-shaped PartitionSpec pytree: every carry field split
@@ -604,13 +988,15 @@ def _sharded_scan(mesh, axis_name: str):
             step = functools.partial(_step, matcher, params)
 
         def shard(s, b, v):
-            def one(s1, b1, v1):
+            x = jnp.sort(b, axis=-1)  # hoisted out of the scan step
+
+            def one(s1, b1, x1, v1):
                 if _is_fused(matcher):
                     s1 = _pad_state_d(s1, (-num_dict) % matcher[1])
-                new_s, out = jax.lax.scan(step, s1, (b1, v1))
+                new_s, out = jax.lax.scan(step, s1, (b1, x1, v1))
                 return out, _slice_state_d(new_s, num_dict)
 
-            return jax.vmap(one)(s, b, v)
+            return jax.vmap(one)(s, b, x, v)
 
         # check_rep=False: the pallas matcher has no replication rule; all
         # operands map over the channel axis anyway (no replicated outputs).
@@ -687,10 +1073,9 @@ def _step_dshard(matcher, params: EncoderParams, num_dict: int,
     shard that owns it writes (the others pass their carry through).
     ``count`` is replicated across dictionary shards and advances in
     lockstep."""
-    block, valid = block_valid
+    block, xs, valid = block_valid
     shard_d = state.sorted_blocks.shape[0]
     off = jax.lax.axis_index(dict_axis).astype(jnp.int32) * shard_d
-    xs = jnp.sort(block)
     xmin, xmax = xs[0], xs[-1]
 
     ks, mm = matcher(xs, state.sorted_blocks, state.dmin, state.dmax,
@@ -802,11 +1187,13 @@ def _dsharded_scan(mesh, ch_axis: str, dict_axis: str):
                                  dict_axis)
 
         def shard(s, b, v):
-            def one(s1, b1, v1):
-                new_s, out = jax.lax.scan(step, s1, (b1, v1))
+            x = jnp.sort(b, axis=-1)  # hoisted out of the scan step
+
+            def one(s1, b1, x1, v1):
+                new_s, out = jax.lax.scan(step, s1, (b1, x1, v1))
                 return out, new_s
 
-            return jax.vmap(one)(s, b, v)
+            return jax.vmap(one)(s, b, x, v)
 
         out, new_p = shard_map(
             shard, mesh=mesh,

@@ -23,6 +23,7 @@ __all__ = [
     "ks_statistic",
     "ks_statistic_sorted",
     "ks_statistic_many",
+    "ks_statistic_many_masked",
     "critical_distance",
 ]
 
@@ -104,6 +105,38 @@ def ks_statistic_many(xs_sorted, dict_sorted):
     This is the pure-jnp oracle for the Pallas ``dict_match`` kernel.
     """
     return jax.vmap(lambda ys: _ecdf_distance_sorted(xs_sorted, ys))(dict_sorted)
+
+
+def _ecdf_distance_sorted_masked(xs, ys, nf, col_ok):
+    """``_ecdf_distance_sorted`` for width-padded sorted samples.
+
+    Both samples share the logical length ``nf`` (float32 scalar, traced)
+    and are padded on the tail with ``+inf`` to a common physical width;
+    ``col_ok`` masks the real columns.  Because ``+inf`` pads sort last and
+    never compare ``<=`` a finite sample, every ``searchsorted`` count at a
+    real column equals its unpadded value, and the masked positions are
+    zero-filled before the max (KS >= 0), so the result is bitwise
+    identical to ``_ecdf_distance_sorted`` on the unpadded samples.
+    """
+    m = xs.shape[0]
+    fx_at_x = (jnp.arange(1, m + 1, dtype=jnp.float32)) / nf
+    fy_at_x = jnp.searchsorted(ys, xs, side="right").astype(jnp.float32) / nf
+    d1 = jnp.max(jnp.where(col_ok, jnp.abs(fx_at_x - fy_at_x), 0.0))
+    fy_at_y = (jnp.arange(1, m + 1, dtype=jnp.float32)) / nf
+    fx_at_y = jnp.searchsorted(xs, ys, side="right").astype(jnp.float32) / nf
+    d2 = jnp.max(jnp.where(col_ok, jnp.abs(fx_at_y - fy_at_y), 0.0))
+    return jnp.maximum(d1, d2)
+
+
+def ks_statistic_many_masked(xs_sorted, dict_sorted, nf, col_ok):
+    """Masked ``ks_statistic_many`` for the mixed-mode (adaptive) encoder:
+    candidate and dictionary rows are padded to a common width with +inf,
+    ``nf``/``col_ok`` give the channel's logical sample count and real
+    columns.  Bitwise identical to ``ks_statistic_many`` on the unpadded
+    width (DESIGN.md Sec. 13)."""
+    return jax.vmap(
+        lambda ys: _ecdf_distance_sorted_masked(xs_sorted, ys, nf, col_ok)
+    )(dict_sorted)
 
 
 def critical_distance(alpha: float, n1: int, n2: int) -> float:

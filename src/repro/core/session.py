@@ -34,6 +34,7 @@ throughput after the first chunk.
 """
 from __future__ import annotations
 
+import os
 from dataclasses import dataclass, field
 from typing import TYPE_CHECKING, List, NamedTuple, Optional, Union
 
@@ -58,10 +59,178 @@ _M = {
     }.items()
 }
 
+# Adaptive dispatch accounting (ISSUE 9): the batched mixed scan issues one
+# device dispatch per feed regardless of channel count; the fallback loop
+# issues one per channel.  Tests pin the per-feed dispatch contract on
+# these counters, and the cohort histogram records how many channels each
+# adaptive dispatch covered.
+_M_DISPATCH = {
+    path: obs.registry().counter(
+        "repro_encode_dispatches_total",
+        "device encode-scan dispatches by path",
+        labels={"path": path})
+    for path in ("adaptive_batched", "adaptive_loop")
+}
+_M_COHORT = obs.registry().histogram(
+    "repro_encode_adaptive_cohort",
+    "channels covered per adaptive encode dispatch (cohort size)",
+    buckets=(1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0, 512.0,
+             1024.0))
+
+# force the per-channel fallback loop (bench/debug hook; ignored for
+# plan-sharded sessions, which require the batched mixed scan)
+_ADAPTIVE_LOOP_ENV = "REPRO_ADAPTIVE_LOOP"
+
 if TYPE_CHECKING:  # pragma: no cover
     from .idealem import IdealemCodec
 
-__all__ = ["IdealemSession", "PreparedChunk", "SessionStats"]
+__all__ = ["IdealemSession", "MixedCohort", "PreparedChunk", "SessionStats"]
+
+
+def _mixed_matcher_name(codec):
+    """The batched mixed scan's matcher for a codec config, or ``None``
+    when only the per-channel loop can honor it (``"ops"``/``"auto"``/
+    custom callables have no masked variant)."""
+    m = getattr(codec, "matcher", None)
+    if codec.backend == "pallas":
+        m = m or "fused"
+    if m is None or m == "reference":
+        return "reference"
+    if m == "fused" or (isinstance(m, tuple) and len(m) == 2
+                        and m[0] == "fused"):
+        return m
+    from .encoder import matcher_reference
+    if m is matcher_reference:
+        return "reference"
+    return None
+
+
+class MixedCohort:
+    """Shared batched carry + dispatcher for heterogeneous (mixed-mode)
+    channels (DESIGN.md Sec. 13).
+
+    Owns one ``(capacity, D, n_max)`` ``DictState`` whose lanes stay
+    logically per-channel: payload widths are padded to the max across
+    live lanes with ``+inf`` (``repad_state_n`` follows the max as lanes
+    come and go), tail columns are masked per lane inside the scan, and a
+    selector switch resets a lane in place (:meth:`reset_lane`) instead of
+    rebuilding the batch.  :meth:`decide` assembles the padded cohort and
+    issues ONE device dispatch + ONE host sync per feed/flush no matter
+    how many lanes diverge in mode, width, threshold or error metric.
+    """
+
+    def __init__(self, num_dict: int, capacity: int, *, rel_tol: float,
+                 use_minmax: bool = True, use_ks: bool = True,
+                 error_bound: Optional[float] = None, matcher=None,
+                 plan=None):
+        if plan is not None and capacity != plan.padded_channels:
+            raise ValueError(
+                f"cohort capacity {capacity} != plan padded_channels "
+                f"{plan.padded_channels}")
+        self.num_dict = int(num_dict)
+        self.capacity = int(capacity)
+        self.rel_tol = float(rel_tol)
+        self.use_minmax = use_minmax
+        self.use_ks = use_ks
+        self.error_bound = None if error_bound is None else float(error_bound)
+        self.matcher = matcher
+        self.plan = plan
+        self.state = None  # batched DictState, width padded to _n_max
+        self._n_max = 0
+        self.lane_n = np.zeros(self.capacity, dtype=np.int64)
+        self.dispatches = 0
+
+    def reset_lane(self, lane: int) -> None:
+        """Drop one lane's dictionary in place (selector switch, stream
+        close): its rows turn ``valid=False`` and its FIFO count rewinds;
+        every other lane's carry is untouched."""
+        self.lane_n[lane] = 0
+        if self.state is not None:
+            st = self.state
+            self.state = st._replace(valid=st.valid.at[lane].set(False),
+                                     count=st.count.at[lane].set(0))
+
+    def grow(self, capacity: int) -> None:
+        """Extend the lane axis (coalescer capacity growth); new lanes
+        start empty."""
+        import jax.numpy as jnp
+
+        add = int(capacity) - self.capacity
+        if add <= 0:
+            return
+        if self.plan is not None:
+            raise ValueError("plan-pinned cohorts cannot grow")
+        self.lane_n = np.concatenate(
+            [self.lane_n, np.zeros(add, dtype=np.int64)])
+        if self.state is not None:
+            st = self.state
+            self.state = st._replace(**{
+                f: jnp.pad(getattr(st, f),
+                           [(0, add)] + [(0, 0)] * (getattr(st, f).ndim - 1))
+                for f in st._fields})
+        self.capacity = int(capacity)
+
+    def decide(self, entries, *, nb_pad: Optional[int] = None):
+        """One batched mixed-mode dispatch over ``entries``: a list of
+        ``(lane, payload (nb_i, n_i), d_crit, err_cum, eb_on)`` tuples.
+        Payload widths are padded to the cohort max with +inf and block
+        counts to ``nb_pad`` (default: the max over entries) via the valid
+        mask.  Returns ``{lane: (is_hit, slot, overwrite)}`` sliced back
+        to each entry's real block count, after the single host sync."""
+        import jax
+        import jax.numpy as jnp
+        from .encoder import (encode_decisions_mixed,
+                              encode_decisions_mixed_sharded, init_state,
+                              repad_state_n)
+
+        for lane, p, *_ in entries:
+            self.lane_n[lane] = p.shape[-1]
+        n_max = int(self.lane_n.max())
+        nb = max(p.shape[0] for _, p, *_ in entries)
+        if nb_pad is not None:
+            nb = max(nb, int(nb_pad))
+        batch = np.full((self.capacity, nb, n_max), np.inf, dtype=np.float32)
+        valid = np.zeros((self.capacity, nb), dtype=bool)
+        d_crit = np.ones(self.capacity, dtype=np.float32)
+        err_cum = np.zeros(self.capacity, dtype=bool)
+        eb_on = np.zeros(self.capacity, dtype=bool)
+        for lane, p, dc, ec, ebo in entries:
+            nb_i, n_i = p.shape
+            batch[lane, :nb_i, :n_i] = p
+            valid[lane, :nb_i] = True
+            d_crit[lane] = dc
+            err_cum[lane] = ec
+            eb_on[lane] = ebo
+        eb = self.error_bound
+        if self.state is None:
+            st = init_state(self.num_dict, n_max, dtype=jnp.float32,
+                            channels=self.capacity, raw=eb is not None)
+        elif n_max != self._n_max:
+            st = repad_state_n(self.state, n_max)
+        else:
+            st = self.state
+        if st is not self.state and self.plan is not None:
+            st = jax.device_put(st, self.plan.state_sharding())
+        self._n_max = n_max
+        kw = dict(num_dict=self.num_dict, n_valid=np.maximum(self.lane_n, 1),
+                  d_crit=d_crit, rel_tol=self.rel_tol,
+                  use_minmax=self.use_minmax, use_ks=self.use_ks,
+                  error_bound=eb, error_cumulative=err_cum, eb_on=eb_on,
+                  matcher=self.matcher, state=st, valid=jnp.asarray(valid))
+        pj = jnp.asarray(batch)
+        if self.plan is not None:
+            (h, s, o), self.state = encode_decisions_mixed_sharded(
+                pj, mesh=self.plan.mesh, axis_name=self.plan.axis_name, **kw)
+        else:
+            (h, s, o), self.state = encode_decisions_mixed(pj, **kw)
+        self.dispatches += 1
+        _M_DISPATCH["adaptive_batched"].inc()
+        _M_COHORT.observe(float(len(entries)))
+        h, s, o = jax.device_get((h, s, o))  # the one host sync per feed
+        return {lane: (np.asarray(h[lane, :p.shape[0]]),
+                       np.asarray(s[lane, :p.shape[0]]),
+                       np.asarray(o[lane, :p.shape[0]]))
+                for lane, p, *_ in entries}
 
 
 class PreparedChunk(NamedTuple):
@@ -163,14 +332,26 @@ class IdealemSession:
                 raise ValueError(
                     "adaptive sessions do not support container output")
             if plan is not None:
-                raise ValueError(
-                    "adaptive sessions do not support encode plans")
+                # the batched mixed scan shards the channel axis only: one
+                # lane per channel, widths padded/masked per lane.
+                if getattr(plan, "dict_shards", 1) > 1:
+                    raise ValueError(
+                        "adaptive sessions shard channels only; build the "
+                        "plan with dict_shards=1")
+                if _mixed_matcher_name(codec) is None:
+                    raise ValueError(
+                        "adaptive sessions with an encode plan need the "
+                        "reference or fused matcher (the batched mixed scan "
+                        f"has no masked variant of "
+                        f"{getattr(codec, 'matcher', None)!r})")
             from .select import ChannelSelector
             self._selectors = [
                 ChannelSelector(codec.block_size, mode=codec.mode,
                                 config=getattr(codec, "selector", None))
                 for _ in range(C)]
             self._adapt_states = [None] * C
+        self._mixed = None           # MixedCohort (device adaptive batch)
+        self._mixed_disabled = False  # matcher has no masked variant
         # host-side accumulation for emit_segments=False (one-shot assembly)
         self._buf = [
             {"raw": [], "payload": [], "bases": [], "hit": [], "slot": [],
@@ -275,9 +456,10 @@ class IdealemSession:
         return kw
 
     def _decide_adaptive(self, payloads):
-        """Per-channel decisions under per-channel codec variants.  Channels
-        loop (modes may differ in payload width and threshold), each with
-        its own resumable carry."""
+        """Per-channel decisions under per-channel codec variants: one
+        batched masked scan when the matcher has a mixed variant (one
+        device dispatch + one host sync per feed, DESIGN.md Sec. 13),
+        else the per-channel loop with a single deferred sync."""
         cdc0 = self.codec
         if cdc0.backend == "numpy":
             from .npref import encode_decisions_np, np_init_state
@@ -290,8 +472,43 @@ class IdealemSession:
                                     **self._channel_kw(ci))[0]
                 for ci in range(self._C)
             ]
+        if self._mixed is None and not self._mixed_disabled:
+            force_loop = (os.environ.get(_ADAPTIVE_LOOP_ENV)
+                          and self.plan is None)
+            m = None if force_loop else _mixed_matcher_name(cdc0)
+            if m is None:
+                self._mixed_disabled = True
+            else:
+                eb = getattr(cdc0, "error_bound", None)
+                self._mixed = MixedCohort(
+                    cdc0.num_dict,
+                    (self.plan.padded_channels if self.plan is not None
+                     else self._C),
+                    rel_tol=float(cdc0.rel_tol),
+                    use_minmax=cdc0.use_minmax, use_ks=cdc0.use_ks,
+                    error_bound=None if eb is None else float(eb),
+                    matcher=m, plan=self.plan)
+        if self._mixed is not None:
+            entries = []
+            for ci in range(self._C):
+                cdc = self._codecs[ci]
+                entries.append((ci, np.asarray(payloads[ci]),
+                                float(self._d_crit[ci]),
+                                cdc.mode == "delta",
+                                getattr(cdc, "error_bound", None) is not None))
+            dec = self._mixed.decide(entries)
+            return [dec[ci] for ci in range(self._C)]
+        return self._decide_adaptive_loop(payloads)
+
+    def _decide_adaptive_loop(self, payloads):
+        """Per-channel fallback for matchers without a masked variant
+        ("ops"/"auto"/callables): one dispatch per channel, but all
+        dispatches issue before the single ``block_until_ready`` barrier
+        so device work overlaps across channels."""
+        import jax
         import jax.numpy as jnp
         from .encoder import encode_decisions, init_state
+        cdc0 = self.codec
         outs = []
         for ci in range(self._C):
             kw = self._channel_kw(ci)
@@ -305,10 +522,13 @@ class IdealemSession:
                 self._adapt_states[ci] = init_state(
                     cdc0.num_dict, pj.shape[-1], dtype=jnp.float32,
                     raw="error_bound" in kw)
-            (h, s, o), self._adapt_states[ci] = encode_decisions(
+            out, self._adapt_states[ci] = encode_decisions(
                 pj, state=self._adapt_states[ci], **kw)
-            outs.append((np.asarray(h), np.asarray(s), np.asarray(o)))
-        return outs
+            _M_DISPATCH["adaptive_loop"].inc()
+            outs.append(out)
+        jax.block_until_ready(outs)
+        _M_COHORT.observe(float(self._C))
+        return [tuple(np.asarray(v) for v in out) for out in outs]
 
     def _apply_switch(self, ci: int, ev) -> None:
         """Commit an accepted selector switch: swap the channel's codec
@@ -326,6 +546,8 @@ class IdealemSession:
             self._np_states[ci] = np_init_state(self.codec.num_dict)
         if self._adapt_states is not None:
             self._adapt_states[ci] = None
+        if self._mixed is not None:
+            self._mixed.reset_lane(ci)
         st = self._stats[ci]
         st.mode_switches += 1
         st.events.append(ev.as_dict())

@@ -44,7 +44,9 @@ from jax.experimental import pallas as pl
 from .dict_match import TILE_D, check_tile_divisible
 
 __all__ = ["encode_step_pallas", "SENTINEL",
-           "DEC_BEST", "DEC_HIT", "DEC_SLOT", "DEC_OVER", "DEC_COUNT"]
+           "DEC_BEST", "DEC_HIT", "DEC_SLOT", "DEC_OVER", "DEC_COUNT",
+           "CHAN_NF", "CHAN_INV_N", "CHAN_DCRIT", "CHAN_ERRCUM",
+           "CHAN_EBON"]
 
 # "no entry passed" marker for the running arg-min; any real global index
 # (< 2^8 dictionary rows) is far below it.
@@ -53,9 +55,16 @@ SENTINEL = 2 ** 30
 # layout of the (8,) int32 decision block (rows 5..7 are padding)
 DEC_BEST, DEC_HIT, DEC_SLOT, DEC_OVER, DEC_COUNT = range(5)
 
+# layout of the optional (8,) f32 per-channel parameter operand (mixed-mode
+# adaptive cohorts, DESIGN.md Sec. 13; rows 5..7 are padding)
+CHAN_NF, CHAN_INV_N, CHAN_DCRIT, CHAN_ERRCUM, CHAN_EBON = range(5)
+
 
 def _encode_step_kernel(d_crit, rel_tol, use_minmax, use_ks, error_bound,
-                        error_cumulative, num_dict, tile_d, *refs):
+                        error_cumulative, num_dict, tile_d, chan, *refs):
+    chan_ref = None
+    if chan:
+        chan_ref, *refs = refs
     if error_bound is None:
         (xs_ref, meta_ref, dict_ref, dmin_ref, dmax_ref, valid_ref,
          new_dict_ref, new_dmin_ref, new_dmax_ref, new_valid_ref,
@@ -75,7 +84,17 @@ def _encode_step_kernel(d_crit, rel_tol, use_minmax, use_ks, error_bound,
     dmin = dmin_ref[:].astype(jnp.float32)
     dmax = dmax_ref[:].astype(jnp.float32)
     dvalid = valid_ref[:]
-    inv_n = 1.0 / n
+    if chan:
+        # per-channel parameters replace the static d_crit/inv_n/err_cum;
+        # tail columns beyond the channel's logical width are +inf pads,
+        # masked out of every width-dependent reduction (Sec. 13)
+        cp = chan_ref[:].astype(jnp.float32)
+        inv_n = cp[CHAN_INV_N]
+        col_ok = jax.lax.iota(jnp.float32, n) < cp[CHAN_NF]
+        # == xs[n_c - 1] on sorted data: the masked max of the real columns
+        xmax_v = jnp.max(jnp.where(col_ok, xs, -jnp.inf))
+    else:
+        inv_n = 1.0 / n
 
     @pl.when(i == 0)
     def _init():
@@ -92,7 +111,8 @@ def _encode_step_kernel(d_crit, rel_tol, use_minmax, use_ks, error_bound,
     # --- min/max gate first (eq. 3): arithmetic identical to dict_match ---
     if use_minmax:
         r = jnp.float32(rel_tol)
-        xmin, xmax = xs[0], xs[n - 1]
+        xmin = xs[0]
+        xmax = xmax_v if chan else xs[n - 1]
         t = (dmax - dmin) * r
         mm = ((xmin >= dmin - t) & (xmin <= dmin + t)
               & (xmax >= dmax - t) & (xmax <= dmax + t))
@@ -108,10 +128,21 @@ def _encode_step_kernel(d_crit, rel_tol, use_minmax, use_ks, error_bound,
         # exactly what the no-permutation decode reproduces.
         new_raw_ref[pl.ds(off, tile_d), :] = rawdict_ref[:, :]
         diff = raw_ref[:][None, :] - rawdict_ref[:, :]
-        if error_cumulative:
-            diff = jnp.cumsum(diff, axis=1)
-        err_ok = jnp.max(jnp.abs(diff), axis=1) <= jnp.asarray(
-            error_bound, diff.dtype)
+        if chan:
+            # per-channel metric choice; pad columns hold inf - inf = NaN
+            # and are masked out before the max
+            ad = jnp.where(cp[CHAN_ERRCUM] != 0.0,
+                           jnp.abs(jnp.cumsum(diff, axis=1)), jnp.abs(diff))
+            ad = jnp.where(col_ok[None, :].astype(jnp.bool_), ad,
+                           jnp.zeros((), ad.dtype))
+            err_ok = jnp.max(ad, axis=1) <= jnp.asarray(
+                error_bound, ad.dtype)
+            err_ok = err_ok | (cp[CHAN_EBON] == 0.0)
+        else:
+            if error_cumulative:
+                diff = jnp.cumsum(diff, axis=1)
+            err_ok = jnp.max(jnp.abs(diff), axis=1) <= jnp.asarray(
+                error_bound, diff.dtype)
         gate = gate & err_ok
 
     ids = off + jax.lax.iota(jnp.int32, tile_d)
@@ -128,17 +159,24 @@ def _encode_step_kernel(d_crit, rel_tol, use_minmax, use_ks, error_bound,
                           ).astype(jnp.float32)
             cnt_d = jnp.sum(cmp_d_le_x, axis=1)                 # (tile_d, n)
             f_x_at_x = (jax.lax.iota(jnp.float32, n) + 1.0) * inv_n
-            d1 = jnp.max(jnp.abs(f_x_at_x[None, :] - cnt_d * inv_n), axis=1)
+            a1 = jnp.abs(f_x_at_x[None, :] - cnt_d * inv_n)
+            if chan:  # zero-fill pad columns (KS >= 0) before the max
+                a1 = jnp.where(col_ok[None, :], a1, 0.0)
+            d1 = jnp.max(a1, axis=1)
 
             cmp_x_le_d = (xs[None, None, :] <= ds[:, :, None]
                           ).astype(jnp.float32)
             cnt_x = jnp.sum(cmp_x_le_d, axis=2)                 # (tile_d, n)
             rank_d = jnp.sum((ds[:, None, :] <= ds[:, :, None]
                               ).astype(jnp.float32), axis=2)
-            d2 = jnp.max(jnp.abs(cnt_x * inv_n - rank_d * inv_n), axis=1)
+            a2 = jnp.abs(cnt_x * inv_n - rank_d * inv_n)
+            if chan:
+                a2 = jnp.where(col_ok[None, :], a2, 0.0)
+            d2 = jnp.max(a2, axis=1)
             ks = jnp.maximum(d1, d2)
 
-            ok = gate & (ks <= jnp.float32(d_crit))
+            thresh = cp[CHAN_DCRIT] if chan else jnp.float32(d_crit)
+            ok = gate & (ks <= thresh)
             lf = jnp.min(jnp.where(ok, ids, SENTINEL))
             dec_ref[DEC_BEST] = jnp.minimum(dec_ref[DEC_BEST], lf)
     else:
@@ -165,7 +203,11 @@ def _encode_step_kernel(d_crit, rel_tol, use_minmax, use_ks, error_bound,
         def _insert():
             new_dict_ref[pl.ds(ins, 1), :] = xs_ref[:][None, :]
             new_dmin_ref[pl.ds(ins, 1)] = xs_ref[pl.ds(0, 1)]
-            new_dmax_ref[pl.ds(ins, 1)] = xs_ref[pl.ds(n - 1, 1)]
+            if chan:  # xs[n - 1] is a +inf pad; store the masked max
+                new_dmax_ref[pl.ds(ins, 1)] = xmax_v.astype(
+                    new_dmax_ref.dtype).reshape((1,))
+            else:
+                new_dmax_ref[pl.ds(ins, 1)] = xs_ref[pl.ds(n - 1, 1)]
             new_valid_ref[pl.ds(ins, 1)] = jnp.ones((1,), jnp.bool_)
             if error_bound is not None:
                 new_raw_ref[pl.ds(ins, 1), :] = raw_ref[:][None, :]
@@ -181,6 +223,7 @@ def encode_step_pallas(xs_sorted, sorted_blocks, dmin, dmax, valid, count,
                        raw=None, raw_blocks=None,
                        error_bound: float | None = None,
                        error_cumulative: bool = False,
+                       chan=None,
                        interpret: bool = True):
     """One fused encode step.
 
@@ -198,6 +241,14 @@ def encode_step_pallas(xs_sorted, sorted_blocks, dmin, dmax, valid, count,
     the stream-order rows, the pointwise max|err| demotion joins the gate,
     and the return becomes
     ``(new_sorted, new_dmin, new_dmax, new_valid, new_raw, dec)``.
+
+    ``chan`` is the optional (8,) f32 per-channel parameter operand of the
+    masked mixed-mode scan (``CHAN_*`` layout: logical width as f32, the
+    f32-rounded ``1/n``, the channel's d_crit, the cumulative-error and
+    bound-armed flags).  When set, tail columns beyond the logical width
+    must be +inf pads; the static ``d_crit``/``error_cumulative`` args are
+    ignored in favor of the operand, and the kernel is bitwise identical
+    to the static form at the unpadded width (DESIGN.md Sec. 13).
     """
     num_dp, n = sorted_blocks.shape
     check_tile_divisible(num_dp, tile_d, "encode_step_pallas")
@@ -212,7 +263,8 @@ def encode_step_pallas(xs_sorted, sorted_blocks, dmin, dmax, valid, count,
     kernel = functools.partial(
         _encode_step_kernel, float(d_crit), float(rel_tol), bool(use_minmax),
         bool(use_ks), None if error_bound is None else float(error_bound),
-        bool(error_cumulative), int(num_dict), int(tile_d))
+        bool(error_cumulative), int(num_dict), int(tile_d),
+        chan is not None)
     in_specs = [
         pl.BlockSpec((n,), lambda i: (0,)),           # candidate: reused
         pl.BlockSpec((2,), lambda i: (0,)),           # [count, valid]
@@ -247,6 +299,10 @@ def encode_step_pallas(xs_sorted, sorted_blocks, dmin, dmax, valid, count,
                                                  raw_blocks.dtype))
         operands = [xs_sorted, raw, meta, sorted_blocks, raw_blocks,
                     dmin, dmax, valid]
+    if chan is not None:
+        # channel-parameter block leads the operand list (kernel unpack)
+        in_specs.insert(0, pl.BlockSpec((8,), lambda i: (0,)))
+        operands.insert(0, chan)
     out = pl.pallas_call(
         kernel,
         grid=grid,

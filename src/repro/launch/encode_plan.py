@@ -52,6 +52,21 @@ class EncodePlan(NamedTuple):
     def num_devices(self) -> int:
         return self.mesh.shape[self.axis_name]
 
+    def validate_adaptive(self) -> "EncodePlan":
+        """Check the plan can drive adaptive (mixed-mode) sessions.
+
+        The batched mixed scan (DESIGN.md Sec. 13) shards the channel axis
+        only -- each lane carries its own mode/width/threshold as masked
+        per-channel parameters, and the dictionary rows of one lane must
+        stay resident on one device for the in-place lane resets a
+        selector switch performs.  Returns ``self`` so call sites can
+        chain ``make_encode_plan(...).validate_adaptive()``."""
+        if self.dict_shards > 1:
+            raise ValueError(
+                "adaptive sessions shard channels only; build the plan "
+                "with dict_shards=1")
+        return self
+
     def channel_sharding(self, trailing_dims: int = 0) -> NamedSharding:
         """Sharding for an array with a leading channel axis (on a 2-D
         mesh the array is replicated across dictionary shards)."""

@@ -43,7 +43,8 @@ import numpy as np
 
 from repro import obs
 from repro.core import IdealemCodec
-from repro.core.session import IdealemSession, SessionStats
+from repro.core.session import (IdealemSession, MixedCohort, SessionStats,
+                                _mixed_matcher_name)
 
 from .engine import FlushPolicy
 from .pipeline import StagePipeline, SyncExecutor, ThreadStageExecutor
@@ -245,7 +246,11 @@ class StreamCoalescer:
 
     One codec configuration per coalescer: heterogeneous configs cannot
     share a scan (route them to separate coalescers or the plain
-    ``CompressionService``).
+    ``CompressionService``).  Adaptive codecs DO coalesce: each stream's
+    selector may diverge its mode/threshold, and the flush routes the
+    whole cohort through one masked mixed-mode scan (``MixedCohort``,
+    DESIGN.md Sec. 13) instead of rejecting the config -- reference or
+    fused matchers only.
 
     ``plan`` (``repro.launch.encode_plan.EncodePlan``) shards the slot
     axis over its mesh; capacity is then pinned to the plan's padded
@@ -262,13 +267,19 @@ class StreamCoalescer:
         if self._codec.backend == "numpy":
             raise ValueError("StreamCoalescer batches on device; use "
                              "CompressionService for the numpy backend")
-        if getattr(self._codec, "adaptive", False):
+        self._adaptive = bool(getattr(self._codec, "adaptive", False))
+        if self._adaptive and _mixed_matcher_name(self._codec) is None:
             raise ValueError(
-                "adaptive codecs need per-channel transforms/thresholds and "
-                "cannot share one batched scan; use CompressionService")
+                "adaptive coalescing needs the reference or fused matcher "
+                "(the batched mixed scan has no masked variant of "
+                f"{self._codec.matcher!r})")
         if plan is not None and plan.channels != plan.padded_channels:
             raise ValueError("coalescer plans must be made for a padded "
                              "channel count (channels % devices == 0)")
+        if (self._adaptive and plan is not None
+                and getattr(plan, "dict_shards", 1) > 1):
+            raise ValueError("adaptive coalescing shards the slot axis "
+                             "only; build the plan with dict_shards=1")
         self.policy = policy or FlushPolicy()
         self.plan = plan
         self._capacity = plan.padded_channels if plan is not None else capacity
@@ -284,7 +295,8 @@ class StreamCoalescer:
         self._buffered: Dict[str, int] = {}
         self._ready_streams = 0
         self._ready_blocks = 0
-        self._state = None  # batched DictState over capacity slots
+        self._state = None  # batched DictState over capacity slots (static)
+        self._mixed = None  # MixedCohort over capacity slots (adaptive)
         self._closed: Dict[str, SessionStats] = {}
         self._retired = SessionStats()  # closed ids later reopened
         # deadline trigger (FlushPolicy.max_age_s): per-stream timestamp of
@@ -397,6 +409,8 @@ class StreamCoalescer:
         """A recycled slot must look like a fresh dictionary: clearing the
         per-entry validity and the FIFO counter is sufficient (stale block
         values are never consulted while invalid, and inserts overwrite)."""
+        if self._mixed is not None:
+            self._mixed.reset_lane(slot)
         if self._state is None:
             return
         st = self._state
@@ -413,6 +427,8 @@ class StreamCoalescer:
         old = self._capacity
         self._capacity = old * 2
         self._free.extend(range(self._capacity - 1, old - 1, -1))
+        if self._mixed is not None:
+            self._mixed.grow(self._capacity)
         if self._state is not None:
             pad = ((0, old),)
             st = self._state
@@ -447,6 +463,8 @@ class StreamCoalescer:
         return out
 
     def _flush_impl(self, stream_ids: List[str]) -> Dict[str, bytes]:
+        if self._adaptive:
+            return self._flush_adaptive(stream_ids)
         import jax.numpy as jnp
         from repro.core.encoder import (encode_decisions_batched,
                                         encode_decisions_dsharded,
@@ -522,6 +540,65 @@ class StreamCoalescer:
             dec = (h[slot, :nb], s[slot, :nb], o[slot, :nb])
             out[sid] = self._sessions[sid].commit(prep, [dec])[0]
         return out
+
+    def _flush_adaptive(self, stream_ids: List[str]) -> Dict[str, bytes]:
+        """Adaptive flush: each stream runs its per-stream feed cycle
+        (selector switch at the flush boundary, observe, prepare) but the
+        decide is ONE shared ``MixedCohort`` dispatch over the padded
+        cohort -- slots carry per-stream mode/width/threshold as masked
+        lanes (DESIGN.md Sec. 13), so heterogeneous streams no longer fall
+        back to one dispatch per stream."""
+        prepared = {}
+        B = self._codec.block_size
+        for sid in stream_ids:
+            chunks = self._pending[sid]
+            if not chunks:
+                continue  # nothing staged; the (< block) tail stays put
+            self._pending[sid] = []
+            self._staged_ts.pop(sid, None)
+            ready = self._buffered[sid] // B
+            self._buffered[sid] %= B  # the tail carries over
+            self._ready_blocks -= ready
+            if ready:
+                self._ready_streams -= 1
+            sess = self._sessions[sid]
+            arr = np.concatenate(chunks)
+            # switches commit at the flush boundary (statistics through the
+            # previous flushes), exactly like IdealemSession._feed_adaptive
+            ev = sess._selectors[0].decide(sess._stats[0].blocks)
+            if ev is not None:
+                sess._apply_switch(0, ev)
+                if self._mixed is not None:
+                    self._mixed.reset_lane(self._slots[sid])
+            sess._selectors[0].observe(arr)
+            prep = sess.prepare(arr)
+            if prep is not None:
+                prepared[sid] = prep
+        if not prepared:
+            return {}
+
+        _M_ENC_FLUSH_BLOCKS.observe(sum(p.nb for p in prepared.values()))
+        if self._mixed is None:
+            cdc = self._codec
+            eb = getattr(cdc, "error_bound", None)
+            self._mixed = MixedCohort(
+                cdc.num_dict, self._capacity, rel_tol=float(cdc.rel_tol),
+                use_minmax=cdc.use_minmax, use_ks=cdc.use_ks,
+                error_bound=None if eb is None else float(eb),
+                matcher=_mixed_matcher_name(cdc), plan=self.plan)
+        nb_max = max(p.nb for p in prepared.values())
+        nb_pad = -(-nb_max // self._bucket) * self._bucket
+        entries = []
+        for sid, prep in prepared.items():
+            sess = self._sessions[sid]
+            cdc = sess._codecs[0]
+            entries.append((self._slots[sid], np.asarray(prep.payloads[0]),
+                            float(sess._d_crit[0]), cdc.mode == "delta",
+                            getattr(cdc, "error_bound", None) is not None))
+        dec = self._mixed.decide(entries, nb_pad=nb_pad)
+        return {sid: self._sessions[sid].commit(
+                    prep, [dec[self._slots[sid]]])[0]
+                for sid, prep in prepared.items()}
 
 
 class DecompressionService:

@@ -119,5 +119,49 @@ try:
                       backend="numpy")
         return kwargs, x.astype(dtype)
 
+    @st.composite
+    def switch_schedules(draw):
+        """Per-channel regime schedules for the adaptive (mixed-mode)
+        session fuzz (ISSUE 9): each channel is a drawn sequence of
+        (regime, n_blocks) segments, so selector switches land at
+        different, per-channel feed boundaries.  Returns
+        ``(codec kwargs, (C, m) signal, feed size)``; the differential
+        runs the same schedule through the numpy oracle session and the
+        batched device session and compares bytes."""
+        B = draw(st.sampled_from([8, 16]))
+        C = draw(st.integers(min_value=1, max_value=4))
+        eb = draw(st.sampled_from([None, 0.75]))
+        seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+        rng = np.random.default_rng(seed)
+        schedules = [
+            [(draw(st.sampled_from(["noise", "smooth", "trend"])),
+              draw(st.integers(min_value=6, max_value=20)))
+             for _ in range(draw(st.integers(min_value=1, max_value=3)))]
+            for _ in range(C)]
+        total = max(sum(nb for _, nb in sch) for sch in schedules)
+        x = np.zeros((C, total * B))
+        for ci, sch in enumerate(schedules):
+            # channels shorter than the longest extend their last regime
+            segs = list(sch) + [
+                (sch[-1][0], total - sum(nb for _, nb in sch))]
+            t0 = 0
+            for regime, nb in segs:
+                n = nb * B
+                if n <= 0:
+                    continue
+                t = np.arange(t0, t0 + n)
+                if regime == "noise":
+                    seg = rng.normal(0.0, 1.0, n)
+                elif regime == "smooth":
+                    seg = np.sin(t * 0.01) * 5 + rng.normal(0, 0.01, n)
+                else:
+                    seg = t * 0.02 + rng.normal(0, 0.05, n)
+                x[ci, t0:t0 + n] = seg
+                t0 += n
+        feed = draw(st.integers(min_value=B, max_value=4 * B))
+        kwargs = dict(mode="std", block_size=B, num_dict=8, alpha=0.05,
+                      adaptive=True, error_bound=eb)
+        return kwargs, x, feed
+
 except ImportError:  # hypothesis is optional (requirements-dev.txt)
     pass

@@ -1,0 +1,338 @@
+"""Batched mixed-mode device encode (ISSUE 9, DESIGN.md Sec. 13).
+
+The adaptive session's per-channel codec variants (mode, payload width,
+quantized d_crit, error-bound arm) become masked lanes of ONE padded
+device scan.  These tests pin:
+
+  * byte identity of the batched scan vs the per-channel loop (the PR 7
+    path, forced via ``REPRO_ADAPTIVE_LOOP``) across backends, error
+    bounds, f16 channels, feed schedules and mid-stream switches;
+  * the numpy oracle (``encode_decisions_mixed_np``) against the device
+    mixed scan on padded heterogeneous cohorts, chunked and one-shot;
+  * the dispatch contract: ONE encode dispatch per feed regardless of
+    channel count (``repro_encode_dispatches_total{path=...}``);
+  * adaptive sessions through a channel-sharded encode plan, and the
+    adaptive ``StreamCoalescer`` cohort flush vs per-stream sessions;
+  * a hypothesis fuzz over drawn per-channel switch schedules (scaled up
+    by the nightly ``HYPOTHESIS_PROFILE=ci`` run).
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core import IdealemCodec
+from repro.core.encoder import (encode_decisions, encode_decisions_mixed,
+                                init_state, repad_state_n)
+from repro.core.npref import encode_decisions_mixed_np
+from repro.core.select import SelectorConfig
+from repro.core.session import _ADAPTIVE_LOOP_ENV, MixedCohort
+from repro.core.stream import decode_stream
+
+SEL = SelectorConfig(warmup_blocks=4, patience=2, min_dwell_blocks=16)
+B = 16
+
+
+def _signals(C, n, seed=0):
+    """Heterogeneous channels: noise (stays std), trend (switches to
+    delta), smooth (switches) -- rotated over C channels."""
+    rng = np.random.default_rng(seed)
+    t = np.arange(n, dtype=np.float64)
+    base = [rng.normal(0.0, 1.0, n),
+            0.03 * t + rng.normal(0, 0.02, n),
+            np.sin(t * 0.02) * 4 + rng.normal(0, 0.01, n)]
+    return np.stack([base[ci % 3] for ci in range(C)])
+
+
+def _run(backend, data, *, feed, eb=None, dtype=np.float64, plan=None):
+    kw = dict(mode="std", block_size=B, num_dict=8, backend=backend,
+              adaptive=True, selector=SEL)
+    if eb is not None:
+        kw["error_bound"] = eb
+    codec = IdealemCodec(**kw)
+    s = codec.session(channels=data.shape[0], dtype=dtype, plan=plan)
+    segs = [s.feed(data[:, lo:lo + feed])
+            for lo in range(0, data.shape[1], feed)]
+    segs.append(s.finish())
+    return segs, s
+
+
+# ------------------------------------------------- batched vs loop identity
+@pytest.mark.parametrize("backend", ["jax", "pallas"])
+@pytest.mark.parametrize("eb", [None, 0.6])
+@pytest.mark.parametrize("feed", [96, B * 40])  # chunked vs one-shot
+def test_batched_matches_loop(monkeypatch, backend, eb, feed):
+    data = _signals(3, B * 40, seed=1)
+    a, sa = _run(backend, data, feed=feed, eb=eb)
+    monkeypatch.setenv(_ADAPTIVE_LOOP_ENV, "1")
+    b, sb = _run(backend, data, feed=feed, eb=eb)
+    assert a == b
+    assert sa._mixed is not None          # batched path really ran
+    assert sb._mixed is None              # env forced the loop
+    assert ([st.mode_switches for st in sa.stats]
+            == [st.mode_switches for st in sb.stats])
+    if feed < data.shape[1]:  # one-shot has no feed boundary to switch at
+        assert any(st.mode_switches for st in sa.stats)
+
+
+def test_batched_matches_numpy_oracle():
+    data = _signals(4, B * 50, seed=2)
+    a, _ = _run("numpy", data, feed=128)
+    b, sb = _run("jax", data, feed=128)
+    assert a == b
+    assert sb._mixed is not None
+    # heterogeneous streams decode channel-by-channel
+    for ci in range(4):
+        y = decode_stream(b"".join(seg[ci] for seg in b))
+        assert len(y) == data.shape[1]
+
+
+def test_f16_channels_batched(monkeypatch):
+    data = _signals(2, B * 30, seed=3).astype(np.float16)
+    a, sa = _run("jax", data, feed=96, dtype=np.float16)
+    monkeypatch.setenv(_ADAPTIVE_LOOP_ENV, "1")
+    b, _ = _run("jax", data, feed=96, dtype=np.float16)
+    assert a == b
+    assert sa._mixed is not None
+
+
+def test_ops_matcher_falls_back_to_loop():
+    data = _signals(2, B * 20, seed=4)
+    kw = dict(mode="std", block_size=B, num_dict=8, backend="jax",
+              adaptive=True, selector=SEL)
+    ops = IdealemCodec(matcher="ops", **kw).session(channels=2)
+    ref = IdealemCodec(**kw).session(channels=2)
+    ops_segs = [ops.feed(data), ops.finish()]
+    ref_segs = [ref.feed(data), ref.finish()]
+    assert ops._mixed is None and ops._mixed_disabled  # loop fallback ran
+    assert ref._mixed is not None                      # batched path ran
+    for a, b in zip(ops_segs, ref_segs):
+        assert a == b  # ops matcher is decision-identical to reference
+
+
+# ------------------------------------------------------- dispatch contract
+def test_one_dispatch_per_feed():
+    def batched():
+        return obs.registry().get_value("repro_encode_dispatches_total",
+                                        {"path": "adaptive_batched"})
+
+    def cohort_count():
+        snap = obs.registry().snapshot().get("repro_encode_adaptive_cohort")
+        return snap["values"][0]["count"] if snap and snap["values"] else 0
+
+    before, hist_before = batched(), cohort_count()
+    data = _signals(3, B * 30, seed=4)
+    _, s = _run("jax", data, feed=B * 10)   # 3 feeds x 10 full blocks
+    assert batched() - before == 3          # one dispatch per feed, C=3
+    assert s._mixed.dispatches == 3
+    assert cohort_count() - hist_before == 3
+
+
+def test_loop_defers_sync_and_counts(monkeypatch):
+    monkeypatch.setenv(_ADAPTIVE_LOOP_ENV, "1")
+
+    def loop():
+        return obs.registry().get_value("repro_encode_dispatches_total",
+                                        {"path": "adaptive_loop"})
+
+    before = loop()
+    data = _signals(3, B * 20, seed=5)
+    _, s = _run("jax", data, feed=B * 10)   # 2 feeds x 3 channels
+    assert loop() - before == 6
+    assert s._mixed is None
+
+
+# --------------------------------------------------- direct API differential
+def _cohort_case(seed=6):
+    rng = np.random.default_rng(seed)
+    C, D, nb, n_max = 3, 4, 20, B
+    n_valid = np.array([16, 15, 12])
+    blocks = np.full((C, nb, n_max), np.inf, dtype=np.float32)
+    valid = np.zeros((C, nb), dtype=bool)
+    for ci in range(C):
+        nbi = nb - 2 * ci  # ragged block counts
+        base = rng.normal(0, 1, (nbi // 2 + 1, n_valid[ci]))
+        rows = np.repeat(base, 2, axis=0)[:nbi]  # near-duplicates -> hits
+        blocks[ci, :nbi, :n_valid[ci]] = rows + rng.normal(
+            0, 0.03, rows.shape)
+        valid[ci, :nbi] = True
+    kw = dict(num_dict=D, n_valid=n_valid,
+              d_crit=np.array([0.5, 0.4, 0.6], np.float32),
+              error_bound=0.5,
+              error_cumulative=np.array([False, True, False]),
+              eb_on=np.array([True, False, True]))
+    return blocks, valid, kw
+
+
+@pytest.mark.parametrize("matcher", [None, "fused"])
+def test_mixed_matches_numpy_oracle_one_shot(matcher):
+    blocks, valid, kw = _cohort_case()
+    dev = encode_decisions_mixed(blocks, valid=valid, matcher=matcher, **kw)
+    ref = encode_decisions_mixed_np(blocks, valid=valid, **kw)
+    for d, r in zip(dev, ref):
+        np.testing.assert_array_equal(np.where(valid, np.asarray(d), 0),
+                                      np.where(valid, r, 0))
+
+
+def test_mixed_chunked_carry_matches_one_shot():
+    blocks, valid, kw = _cohort_case(seed=7)
+    one = encode_decisions_mixed(blocks, valid=valid, **kw)
+    st = init_state(kw["num_dict"], blocks.shape[-1], channels=3, raw=True)
+    parts = []
+    for lo, hi in ((0, 8), (8, 20)):
+        out, st = encode_decisions_mixed(blocks[:, lo:hi],
+                                         valid=valid[:, lo:hi],
+                                         state=st, **kw)
+        parts.append(out)
+    for k in range(3):
+        got = np.concatenate([np.asarray(p[k]) for p in parts], axis=1)
+        np.testing.assert_array_equal(np.where(valid, got, 0),
+                                      np.where(valid, np.asarray(one[k]), 0))
+
+
+def test_repad_state_grow_shrink_is_safe():
+    st = init_state(4, 12, channels=2, raw=True)
+    wide = repad_state_n(st, 16)
+    assert wide.sorted_blocks.shape[-1] == 16
+    assert np.all(np.asarray(wide.sorted_blocks[..., 12:]) == np.inf)
+    back = repad_state_n(wide, 12)
+    np.testing.assert_array_equal(np.asarray(back.sorted_blocks),
+                                  np.asarray(st.sorted_blocks))
+
+
+def test_mixed_rejects_ops_matcher():
+    blocks, valid, kw = _cohort_case()
+    with pytest.raises(ValueError, match="mixed-mode scan"):
+        encode_decisions_mixed(blocks, valid=valid, matcher="ops", **kw)
+
+
+# ------------------------------------------------------------- encode plans
+def test_planned_adaptive_matches_unplanned():
+    from repro.launch.encode_plan import make_encode_plan
+    data = _signals(3, B * 30, seed=8)
+    plan = make_encode_plan(3, block_size=B).validate_adaptive()
+    a, _ = _run("jax", data, feed=120)
+    b, sb = _run("jax", data, feed=120, plan=plan)
+    assert a == b
+    assert sb._mixed is not None and sb._mixed.plan is plan
+
+
+def test_dict_sharded_plan_rejected_for_adaptive():
+    from repro.launch.encode_plan import make_encode_plan
+    plan = make_encode_plan(2, block_size=B)._replace(dict_shards=2)
+    with pytest.raises(ValueError, match="dict_shards=1"):
+        plan.validate_adaptive()
+    codec = IdealemCodec(mode="std", block_size=B, num_dict=8,
+                         backend="jax", adaptive=True)
+    with pytest.raises(ValueError, match="dict_shards=1"):
+        codec.session(channels=2, plan=plan)
+
+
+# --------------------------------------------------------- cohort internals
+def test_cohort_lane_reset_and_grow():
+    co = MixedCohort(4, 2, rel_tol=0.1)
+    rng = np.random.default_rng(9)
+    p = rng.normal(0, 1, (4, B)).astype(np.float32)
+    co.decide([(0, p, 0.5, False, False), (1, p[:, :B - 1], 0.5, True,
+               False)])
+    assert co.lane_n.tolist() == [B, B - 1]
+    co.reset_lane(1)
+    assert co.lane_n[1] == 0
+    assert not np.any(np.asarray(co.state.valid[1]))
+    co.grow(4)
+    assert co.capacity == 4 and co.state.valid.shape[0] == 4
+    dec = co.decide([(3, p, 0.5, False, False)])
+    assert dec[3][0].shape == (4,)
+
+
+# ------------------------------------------------------- adaptive coalescer
+def test_adaptive_coalescer_matches_sessions():
+    from repro.serve.compress import StreamCoalescer
+    from repro.serve.engine import FlushPolicy
+    kw = dict(mode="std", block_size=B, num_dict=8, backend="jax",
+              adaptive=True, selector=SEL, error_bound=0.6)
+    data = _signals(3, B * 40, seed=10)
+    sids = [f"s{ci}" for ci in range(3)]
+    co = StreamCoalescer(policy=FlushPolicy(max_batch_blocks=10 ** 9),
+                         capacity=4, **kw)
+    for sid in sids:
+        co.open_stream(sid)
+    outs = {sid: [] for sid in sids}
+    feeds = []
+    for lo in range(0, data.shape[1], 96):
+        for ci, sid in enumerate(sids):
+            assert co.submit(sid, data[ci, lo:lo + 96]) is None
+        res = co.flush()
+        feeds.append((lo, min(lo + 96, data.shape[1])))
+        for sid in sids:
+            outs[sid].append(res.get(sid, b""))
+    n_flush_dispatches = co._mixed.dispatches
+    for sid in sids:
+        outs[sid].append(co.close_stream(sid))
+    # one dispatch per flush that produced blocks, for all streams together
+    assert n_flush_dispatches == sum(
+        1 for lo, hi in feeds if (hi - lo) >= B) == len(feeds)
+
+    codec = IdealemCodec(**kw)
+    for ci, sid in enumerate(sids):
+        s = codec.session()
+        ref = [s.feed(data[ci, lo:hi]) for lo, hi in feeds] + [s.finish()]
+        assert b"".join(ref) == b"".join(outs[sid])
+        y = decode_stream(b"".join(outs[sid]))
+        assert np.max(np.abs(y - data[ci])) <= 0.6 + 1e-9
+
+
+def test_adaptive_coalescer_slot_reuse_is_fresh():
+    from repro.serve.compress import StreamCoalescer
+    from repro.serve.engine import FlushPolicy
+    kw = dict(mode="std", block_size=B, num_dict=4, backend="jax",
+              adaptive=True, selector=SEL)
+    co = StreamCoalescer(policy=FlushPolicy(max_batch_blocks=10 ** 9),
+                         capacity=1, **kw)
+    x = _signals(1, B * 12, seed=11)[0]
+    co.open_stream("a")
+    co.submit("a", x)
+    first = co.flush()["a"] + co.close_stream("a")
+    co.open_stream("b")         # recycles slot 0: must look fresh
+    co.submit("b", x)
+    second = co.flush()["b"] + co.close_stream("b")
+    assert first == second
+
+
+def test_adaptive_coalescer_rejects_ops_matcher():
+    from repro.serve.compress import StreamCoalescer
+    with pytest.raises(ValueError, match="masked variant"):
+        StreamCoalescer(mode="std", block_size=B, num_dict=8,
+                        backend="jax", adaptive=True, matcher="ops")
+
+
+# ----------------------------------------------------------- hypothesis fuzz
+try:
+    import hypothesis  # noqa: F401
+
+    from hypothesis import given, settings
+
+    from conftest import switch_schedules
+
+    _N = 40 if os.environ.get("HYPOTHESIS_PROFILE") == "ci" else 5
+
+    @given(switch_schedules())
+    @settings(max_examples=_N, deadline=None)
+    def test_fuzz_switch_schedules(case):
+        kwargs, x, feed = case
+        kwargs = dict(kwargs, selector=SEL)
+        segs = {}
+        for backend in ("numpy", "jax"):
+            codec = IdealemCodec(backend=backend, **kwargs)
+            s = codec.session(channels=x.shape[0])
+            out = [s.feed(x[:, lo:lo + feed])
+                   for lo in range(0, x.shape[1], feed)]
+            out.append(s.finish())
+            segs[backend] = out
+        assert segs["numpy"] == segs["jax"]
+
+except ImportError:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_fuzz_switch_schedules():
+        pass
