@@ -5,8 +5,8 @@ export PYTHONPATH := src
 .PHONY: test test-core bench bench-quick bench-gate bench-stream \
 	bench-shard bench-store bench-decode bench-encode bench-adaptive \
 	bench-frontier \
-	bench-obs shard-check store-check store-check-quick obs-check lint \
-	example-stream
+	bench-obs bench-frontend shard-check store-check store-check-quick \
+	obs-check serve-check serve-soak lint example-stream example-serve
 
 # Tier-1 verification (ROADMAP.md): the full suite, fail-fast.
 test:
@@ -71,6 +71,23 @@ bench-gate:
 obs-check:
 	$(PY) scripts/obs_tool.py selfcheck
 
+# Serving front end smoke (CI tier1): the closed-loop load generator at
+# the CI profile -- >= 8 concurrent verified tenants plus a rate-limited
+# one over the real wire protocol, zero byte-diffs vs direct sessions,
+# typed rejections visible in /metrics, p99 SLOs asserted from the
+# scraped exposition (scripts/loadgen.py).
+serve-check:
+	$(PY) scripts/loadgen.py --smoke --json LOADGEN_smoke.json
+
+# Nightly soak profile: longer traces, same checks, artifact uploaded.
+serve-soak:
+	$(PY) scripts/loadgen.py --tenants 12 --samples 32768 \
+	    --json LOADGEN_soak.json
+
+# Wire-level serving throughput rows (full bench profile only).
+bench-frontend:
+	$(PY) -m benchmarks.bench_frontend
+
 lint:
 	ruff check .
 
@@ -95,3 +112,6 @@ store-check-quick:
 
 example-stream:
 	$(PY) examples/stream_compress.py --channels 8 --samples 16384
+
+example-serve:
+	$(PY) examples/serve_frontend.py --tenants 4

@@ -1,0 +1,92 @@
+"""Serving front end throughput: wire feeds/decodes per second through
+the asyncio multiplexer (DESIGN.md Sec. 14).
+
+Closed-loop clients over real sockets: N tenants each replay a uPMU-like
+trace on a direct stream and then issue batched range decodes, so the
+rows price the full path -- HTTP parse, typed validation, admission,
+session/coalescer work, response encode.  Derived columns report the
+feed rate and the scrape-side p99 the SLO gate would see.
+
+Full-profile only: this bench is deliberately NOT in ``QUICK_MODULES``
+(no committed quick-baseline row exists for it, and socket latency on a
+shared PR runner is exactly the noise the perf gate excludes).  The
+nightly soak covers the sustained version via ``scripts/loadgen.py``.
+
+Rows: ``frontend/feed`` (us per feed request), ``frontend/decode``
+(us per decode request).
+"""
+from __future__ import annotations
+
+import asyncio
+import time
+
+import numpy as np
+
+from repro import api, obs
+from repro.serve import FlushPolicy, FrontendClient, ServeFrontend
+from repro.store import pack
+from repro.core import IdealemCodec
+
+from .common import csv_row
+
+TENANTS = 8
+FEEDS_PER_TENANT = 48
+DECODES_PER_TENANT = 24
+CHUNK = 512
+CFG = api.CodecConfig(mode="std", block_size=32, num_dict=63,
+                      backend="numpy")
+
+
+async def _tenant(fe, i, counts):
+    rng = np.random.default_rng(i)
+    x = rng.normal(0, 1, size=CHUNK)
+    async with FrontendClient(fe.host, fe.port, f"b{i}") as c:
+        await c.open("s", CFG)
+        t0 = time.perf_counter()
+        for _ in range(FEEDS_PER_TENANT):
+            await c.feed("s", x)
+        counts["feed_s"] += time.perf_counter() - t0
+        await c.close_stream("s")
+
+        codec = IdealemCodec.from_config(CFG)
+        stream = codec.encode(rng.normal(0, 1, size=64 * 32))
+        await c.attach("st", pack(stream))
+        t0 = time.perf_counter()
+        for k in range(DECODES_PER_TENANT):
+            await c.decode("st", k % 48, k % 48 + 8)
+        counts["decode_s"] += time.perf_counter() - t0
+
+
+async def _run(counts):
+    policy = FlushPolicy(max_batch_blocks=2048, max_batch_streams=32,
+                         max_age_s=0.01)
+    async with ServeFrontend(policy=policy, decode_backend="numpy") as fe:
+        await asyncio.gather(*(_tenant(fe, i, counts)
+                               for i in range(TENANTS)))
+        async with FrontendClient(fe.host, fe.port, "probe") as c:
+            return await c.metrics()
+
+
+def main() -> None:
+    counts = {"feed_s": 0.0, "decode_s": 0.0}
+    text = asyncio.run(_run(counts))
+    parsed = obs.parse_prometheus(text)
+    n_feed = TENANTS * FEEDS_PER_TENANT
+    n_dec = TENANTS * DECODES_PER_TENANT
+    p99_feed = obs.quantile_from_parsed(
+        parsed, "repro_frontend_request_seconds", 0.99,
+        {"route": "POST /v1/feed"})
+    p99_dec = obs.quantile_from_parsed(
+        parsed, "repro_frontend_request_seconds", 0.99,
+        {"route": "POST /v1/decode"})
+    print(csv_row("frontend/feed", counts["feed_s"] / n_feed * 1e6,
+                  f"rate={n_feed / counts['feed_s']:.0f}/s "
+                  f"p99={0 if p99_feed is None else p99_feed * 1e3:.2f}ms "
+                  f"tenants={TENANTS}"))
+    print(csv_row("frontend/decode", counts["decode_s"] / n_dec * 1e6,
+                  f"rate={n_dec / counts['decode_s']:.0f}/s "
+                  f"p99={0 if p99_dec is None else p99_dec * 1e3:.2f}ms"))
+
+
+if __name__ == "__main__":
+    main()

@@ -97,6 +97,9 @@ def main(argv=None) -> None:
         ("adaptive_batch", "bench_adaptive_batch"),
         ("frontier", "bench_frontier"),
         ("obs_overhead", "bench_obs_overhead"),
+        # full profile only: socket latency is PR-runner noise, and the
+        # quick baseline has no row for it (perf-gate contract)
+        ("frontend", "bench_frontend"),
         ("roofline", "roofline"),
     ]
     if args.quick:

@@ -5,6 +5,10 @@
              packed container -> pipelined range decode) against the
              process-default registry and print the resulting snapshot
              as Prometheus text exposition (default) or JSON.
+  slo        SCRAPE NAME:QUANTILE:MAX[:k=v,...] ...
+             evaluate latency objectives against a scraped exposition
+             file (``-`` reads stdin) -- the gate the serving soak runs
+             on the loadgen's /metrics snapshot.
   selfcheck  the CI round trip (``make obs-check``): (1) the exporter
              round trip on a scratch registry covering all three
              instrument kinds, awkward label escapes included; (2) the
@@ -49,7 +53,6 @@ def run_workload() -> None:
     pipelined ``DecompressionService``."""
     import numpy as np
 
-    from repro.core import IdealemCodec
     from repro.serve import (DecompressionService, FlushPolicy,
                              StreamCoalescer)
     from repro.store import Container, pack
@@ -129,6 +132,35 @@ def cmd_selfcheck(args) -> int:
     return 0
 
 
+def cmd_slo(args) -> int:
+    """Evaluate ``NAME:QUANTILE:MAX[:k=v,...]`` specs against a scraped
+    exposition file (``-`` = stdin) -- the same estimator the loadgen and
+    the front end's control loop use."""
+    text = (sys.stdin.read() if args.scrape == "-"
+            else open(args.scrape).read())
+    parsed = obs.parse_prometheus(text)
+    specs = []
+    for raw in args.spec:
+        parts = raw.split(":")
+        if len(parts) not in (3, 4):
+            print(f"bad spec {raw!r}: NAME:QUANTILE:MAX[:k=v,...]",
+                  file=sys.stderr)
+            return 2
+        labels = {}
+        if len(parts) == 4 and parts[3]:
+            for kv in parts[3].split(","):
+                k, _, v = kv.partition("=")
+                labels[k] = v
+        specs.append(obs.SloSpec(parts[0], float(parts[1]), float(parts[2]),
+                                 labels))
+    failed = 0
+    for res in obs.evaluate_slos(specs, parsed=parsed):
+        print(res.describe())
+        if not res.ok or (args.require_traffic and res.value is None):
+            failed += 1
+    return 1 if failed else 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(prog="obs_tool")
     sub = ap.add_subparsers(dest="cmd")
@@ -137,11 +169,22 @@ def main(argv=None) -> int:
     d.add_argument("--no-workload", action="store_true",
                    help="dump the registry as-is, without traffic")
     sub.add_parser("selfcheck", help="exporter round trip + live e2e check")
+    s = sub.add_parser("slo", help="evaluate SLO specs against a scrape")
+    s.add_argument("scrape", help="Prometheus exposition file, or - (stdin)")
+    s.add_argument("spec", nargs="+",
+                   help="NAME:QUANTILE:MAX[:k=v,...], e.g. "
+                   "repro_frontend_request_seconds:0.99:0.5:"
+                   "route=POST /v1/feed")
+    s.add_argument("--require-traffic", action="store_true",
+                   help="an absent/empty histogram fails instead of "
+                   "passing vacuously")
     args = ap.parse_args(argv)
     if args.cmd == "dump":
         return cmd_dump(args)
     if args.cmd == "selfcheck":
         return cmd_selfcheck(args)
+    if args.cmd == "slo":
+        return cmd_slo(args)
     ap.print_help()
     return 2
 

@@ -22,10 +22,11 @@ reference).  All three are decision-identical.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Optional, Tuple
+from typing import Optional, Tuple, Union
 
 import numpy as np
 
+from ..api import CodecConfig
 from . import stream as stream_mod
 from .ks import critical_distance
 from .select import SelectorConfig
@@ -114,6 +115,34 @@ class IdealemCodec:
         return t, bases
 
     # ------------------------------------------------------------ public API
+    @classmethod
+    def from_config(cls, config: Union[CodecConfig, dict]) -> "IdealemCodec":
+        """Build a codec from one :class:`repro.api.CodecConfig` (or its
+        JSON dict form) -- the wire-facing constructor.  Plain keyword
+        construction keeps working; this is the same set of knobs behind
+        one frozen, serializable type."""
+        if isinstance(config, dict):
+            config = CodecConfig.from_json(config)
+        return cls(**config.kwargs())
+
+    @property
+    def config(self) -> CodecConfig:
+        """The frozen :class:`repro.api.CodecConfig` describing this codec.
+
+        Round-trip stable: ``IdealemCodec.from_config(codec.config)``
+        makes identical decisions and bytes.  ``error_bound_rel`` is
+        resolved once at construction, so the config carries the absolute
+        ``error_bound``; a custom adaptive ``selector`` is an in-process
+        knob and is not captured (``adaptive`` itself is)."""
+        return CodecConfig(
+            mode=self.mode, block_size=self.block_size,
+            num_dict=self.num_dict, alpha=self.alpha, rel_tol=self.rel_tol,
+            use_minmax=self.use_minmax, use_ks=self.use_ks,
+            max_count=self.max_count, value_range=self.value_range,
+            backend=self.backend, matcher=self.matcher,
+            decode_seed=self.decode_seed, decode_backend=self.decode_backend,
+            error_bound=self.error_bound, adaptive=self.adaptive)
+
     def session(self, channels: Optional[int] = None,
                 emit_segments: bool = True,
                 dtype=np.float64, plan=None,

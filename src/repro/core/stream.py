@@ -50,15 +50,9 @@ from .decode import MODE_DELTA, MODE_RESIDUAL, MODE_STD  # noqa: F401 (re-export
 __all__ = ["StreamHeader", "StreamFormatError", "assemble_stream",
            "parse_stream", "decode_stream"]
 
-
-class StreamFormatError(ValueError):
-    """Malformed/truncated IDEALEM stream.  ``offset`` is the byte position
-    at which parsing failed (raw ``struct.error``/``IndexError`` from the
-    walk are never surfaced to callers)."""
-
-    def __init__(self, message: str, offset: int = 0):
-        super().__init__(f"{message} (at byte {offset})")
-        self.offset = offset
+# Historical import path: the class now lives in the unified hierarchy
+# (repro.errors) under the ReproError root; same object either way.
+from ..errors import StreamFormatError  # noqa: E402,F401
 
 
 # Number of per-segment decision walks performed since import.  Tests use

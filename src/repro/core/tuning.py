@@ -39,9 +39,9 @@ __all__ = ["AutotuneCacheError", "MeasuredTuner", "best_of", "pow2_bucket"]
 logger = logging.getLogger("repro.core.tuning")
 
 
-class AutotuneCacheError(ValueError):
-    """A persisted autotune cache failed validation (corrupt JSON, wrong
-    structure, or a stale ``version`` field)."""
+# Historical import path: the class now lives in the unified hierarchy
+# (repro.errors) under the ReproError root; same object either way.
+from ..errors import AutotuneCacheError  # noqa: E402,F401
 
 
 def best_of(fn: Callable[[], object], reps: int = 3) -> float:

@@ -31,11 +31,9 @@ TILE_D = 8  # default dictionary-tile height; sweepable via ``tile_d=``
 __all__ = ["KernelShapeError", "dict_match_pallas", "TILE_D"]
 
 
-class KernelShapeError(ValueError):
-    """An operand shape violates a kernel's tiling contract.
-
-    Raised instead of a bare assert so a bad launch plan fails with the
-    actual dimensions and the required padding in the message."""
+# Historical import path: the class now lives in the unified hierarchy
+# (repro.errors) under the ReproError root; same object either way.
+from repro.errors import KernelShapeError  # noqa: E402,F401
 
 
 def check_tile_divisible(num_d: int, tile_d: int, kernel: str) -> None:

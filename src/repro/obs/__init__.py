@@ -24,6 +24,8 @@ from .metrics import (                                        # noqa: F401
 from .trace import Span, SpanTracer, tracer, span, event      # noqa: F401
 from .export import (                                         # noqa: F401
     to_prometheus, to_json, parse_prometheus, selfcheck,
+    histogram_quantile, quantile, quantile_from_parsed,
+    SloSpec, SloResult, evaluate_slos,
 )
 
 __all__ = [
@@ -31,4 +33,6 @@ __all__ = [
     "DEFAULT_LATENCY_BUCKETS", "registry", "set_enabled",
     "Span", "SpanTracer", "tracer", "span", "event",
     "to_prometheus", "to_json", "parse_prometheus", "selfcheck",
+    "histogram_quantile", "quantile", "quantile_from_parsed",
+    "SloSpec", "SloResult", "evaluate_slos",
 ]

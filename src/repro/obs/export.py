@@ -17,10 +17,14 @@ from __future__ import annotations
 import math
 from typing import Dict, Optional, Tuple
 
-from .metrics import MetricsRegistry, registry as default_registry
+from dataclasses import dataclass, field
+
+from .metrics import Histogram, MetricsRegistry, registry as default_registry
 from .trace import SpanTracer, tracer as default_tracer
 
-__all__ = ["to_prometheus", "to_json", "parse_prometheus", "selfcheck"]
+__all__ = ["to_prometheus", "to_json", "parse_prometheus", "selfcheck",
+           "histogram_quantile", "quantile", "quantile_from_parsed",
+           "SloSpec", "SloResult", "evaluate_slos"]
 
 SNAPSHOT_VERSION = 1
 
@@ -138,6 +142,125 @@ def parse_prometheus(text: str) -> Dict[Tuple[str, Tuple[Tuple[str, str],
         else:
             value = float(value_s)
         out[(name, items)] = value
+    return out
+
+
+# ------------------------------------------------------------ SLO evaluation
+# Quantile estimation over fixed-bucket histograms, Prometheus
+# histogram_quantile-style: find the bucket the target rank falls in and
+# interpolate linearly inside it.  This is what the serving control loop
+# (repro.serve.control) steers on and what the loadgen SLO gate asserts,
+# so both read the SAME math from here (ISSUE 10).
+
+def histogram_quantile(bounds, counts, q: float) -> Optional[float]:
+    """Estimate the ``q``-quantile from per-bucket (non-cumulative)
+    ``counts`` -- one count per finite upper ``bound`` plus a trailing
+    +Inf slot, exactly :meth:`Histogram.bucket_counts` shape.  Returns
+    ``None`` on an empty histogram.  Ranks landing in the +Inf bucket
+    clamp to the largest finite bound (the estimate is then a floor)."""
+    if not 0.0 <= q <= 1.0:
+        raise ValueError(f"quantile must be in [0, 1], got {q}")
+    total = sum(counts)
+    if total <= 0:
+        return None
+    rank = q * total
+    cum = 0.0
+    for i, c in enumerate(counts[:-1]):
+        cum += c
+        if cum >= rank and c > 0:
+            hi = bounds[i]
+            lo = bounds[i - 1] if i > 0 else 0.0
+            frac = (rank - (cum - c)) / c
+            return lo + (hi - lo) * frac
+    return float(bounds[-1]) if bounds else None
+
+
+def quantile(name: str, q: float,
+             labels: Optional[Dict[str, str]] = None,
+             reg: Optional[MetricsRegistry] = None) -> Optional[float]:
+    """``q``-quantile of a live registry histogram child (``None`` when
+    the family/child does not exist or holds no observations)."""
+    reg = reg if reg is not None else default_registry()
+    items = tuple(sorted((labels or {}).items()))
+    for fam in reg.families():
+        if fam.name == name and fam.kind == "histogram":
+            child = fam.children.get(items)
+            if isinstance(child, Histogram):
+                return histogram_quantile(child.bounds,
+                                          child.bucket_counts(), q)
+    return None
+
+
+def quantile_from_parsed(parsed, name: str, q: float,
+                         labels: Optional[Dict[str, str]] = None
+                         ) -> Optional[float]:
+    """``q``-quantile from :func:`parse_prometheus` output -- the scrape
+    side of the same estimate (cumulative ``le`` series converted back to
+    per-bucket counts first)."""
+    want = dict(labels or {})
+    series = []
+    for (sample, items), value in parsed.items():
+        if sample != f"{name}_bucket":
+            continue
+        d = dict(items)
+        le = d.pop("le", None)
+        if le is None or d != want:
+            continue
+        bound = math.inf if le == "+Inf" else float(le)
+        series.append((bound, value))
+    if not series:
+        return None
+    series.sort()
+    bounds = [b for b, _ in series if not math.isinf(b)]
+    cum = [v for _, v in series]
+    counts = [cum[0]] + [cum[i] - cum[i - 1] for i in range(1, len(cum))]
+    return histogram_quantile(bounds, counts, q)
+
+
+@dataclass(frozen=True)
+class SloSpec:
+    """One latency/size objective: ``quantile`` of histogram ``name``
+    (optionally a labeled child) must stay <= ``max_value``."""
+
+    name: str
+    quantile: float
+    max_value: float
+    labels: Dict[str, str] = field(default_factory=dict)
+
+    def describe(self) -> str:
+        lbl = ("{" + ",".join(f"{k}={v}" for k, v in
+                              sorted(self.labels.items())) + "}"
+               if self.labels else "")
+        return f"p{self.quantile * 100:g} {self.name}{lbl}"
+
+
+@dataclass(frozen=True)
+class SloResult:
+    spec: SloSpec
+    value: Optional[float]  # None: histogram absent/empty (not a breach)
+    ok: bool
+
+    def describe(self) -> str:
+        v = "n/a" if self.value is None else f"{self.value:.6g}"
+        verdict = "ok" if self.ok else "BREACH"
+        return (f"{self.spec.describe()} = {v} "
+                f"(<= {self.spec.max_value:.6g}) {verdict}")
+
+
+def evaluate_slos(specs, reg: Optional[MetricsRegistry] = None,
+                  parsed=None) -> list:
+    """Evaluate SLO specs against a live registry (default) or a parsed
+    scrape (``parsed=parse_prometheus(text)``).  An absent or empty
+    histogram yields ``value=None, ok=True`` -- no traffic is not a
+    breach; gate on traffic separately if it should be."""
+    out = []
+    for spec in specs:
+        if parsed is not None:
+            v = quantile_from_parsed(parsed, spec.name, spec.quantile,
+                                     spec.labels)
+        else:
+            v = quantile(spec.name, spec.quantile, spec.labels, reg)
+        out.append(SloResult(spec, v, v is None or v <= spec.max_value))
     return out
 
 

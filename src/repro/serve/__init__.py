@@ -3,8 +3,16 @@ from .compress import (CompressionService, DecompressionService,
                        StreamCoalescer)
 from .pipeline import (StageFuture, StagePipeline, SyncExecutor,
                        ThreadStageExecutor)
+from .tenancy import (Tenant, TenantQuota, TenantRegistry, TenantStream,
+                      TokenBucket)
+from .control import ControlConfig, ControlDecision, ControlLoop
+from .frontend import FrontendClient, ServeFrontend
 
 __all__ = ["FlushPolicy", "ServeEngine", "prefill_step", "serve_step",
            "CompressionService", "DecompressionService", "StreamCoalescer",
            "StageFuture", "StagePipeline", "SyncExecutor",
-           "ThreadStageExecutor"]
+           "ThreadStageExecutor",
+           "Tenant", "TenantQuota", "TenantRegistry", "TenantStream",
+           "TokenBucket",
+           "ControlConfig", "ControlDecision", "ControlLoop",
+           "FrontendClient", "ServeFrontend"]

@@ -205,6 +205,27 @@ class CompressionService:
         _M_STREAMS_OPEN["session"].dec()
         return seg
 
+    def handle(self, req) -> "object":
+        """Serve one wire-typed :class:`repro.api.CompressRequest` -- the
+        SAME object the network front end decodes off the wire -- and
+        return its :class:`repro.api.FeedResult` with per-call stat
+        deltas.  Single-channel streams only (the wire shape)."""
+        from repro import api
+        sess = self._session(req.stream_id)
+        st = sess.stats
+        if isinstance(st, list):
+            from repro.errors import ApiError
+            raise ApiError(
+                "handle() serves single-channel streams; use feed() for "
+                "batched multi-channel sessions")
+        before = (st.blocks, st.hits, st.bytes_in, st.bytes_out)
+        seg = sess.feed(np.asarray(req.samples))
+        after = (st.blocks, st.hits, st.bytes_in, st.bytes_out)
+        d = tuple(a - b for a, b in zip(after, before))
+        return api.FeedResult(stream_id=req.stream_id, segment=seg,
+                              blocks=d[0], hits=d[1], bytes_in=d[2],
+                              bytes_out=d[3])
+
     def stats(self, stream_id: Optional[str] = None) -> dict:
         """Per-stream stats dict, or the aggregate over all streams."""
         if stream_id is not None:
@@ -313,6 +334,23 @@ class StreamCoalescer:
     @property
     def capacity(self) -> int:
         return self._capacity
+
+    @property
+    def block_size(self) -> int:
+        return self._codec.block_size
+
+    @property
+    def pending_blocks(self) -> int:
+        """Whole blocks staged host-side awaiting a flush, summed over
+        open streams -- the tenancy layer's admission pressure signal
+        (``repro.serve.tenancy``)."""
+        return self._ready_blocks
+
+    def staged_samples(self, stream_id: str) -> int:
+        """Samples staged for one stream (tail included), host-side."""
+        if stream_id not in self._sessions:
+            raise KeyError(f"stream {stream_id!r} is not open")
+        return self._buffered[stream_id]
 
     # ------------------------------------------------------------- lifecycle
     def open_stream(self, stream_id: str) -> None:
@@ -740,6 +778,17 @@ class DecompressionService:
         self._acct("requests")
         self._acct("blocks_out", stop_block - start_block)
         return out
+
+    def handle(self, req) -> "object":
+        """Serve one wire-typed :class:`repro.api.DecodeRangeRequest`
+        synchronously (through the segment cache, same path as
+        :meth:`read`) and return its :class:`repro.api.RangeResult`.
+        Batched/pipelined serving goes through ``submit``/``flush``; the
+        front end's decode mux feeds those from the same request type."""
+        from repro import api
+        values = self.read(req.store_id, req.start_block, req.stop_block,
+                           channel=req.channel)
+        return api.RangeResult(request_id=req.request_id, values=values)
 
     def read_channels(self, store_id: str,
                       channels: Optional[Sequence[int]] = None

@@ -57,6 +57,20 @@ class FlushPolicy:
         if self.pipeline_depth < 1:
             raise ValueError("pipeline_depth must be >= 1")
 
+    def with_updates(self, **changes) -> "FlushPolicy":
+        """A copy with the given knobs replaced -- the control loop's
+        (``repro.serve.control``) actuation helper; the policy itself
+        stays frozen/hashable."""
+        import dataclasses
+        return dataclasses.replace(self, **changes)
+
+    def as_dict(self) -> dict:
+        """JSON-ready knob dump (the front end's ``GET /v1/control``)."""
+        return {"max_batch_blocks": self.max_batch_blocks,
+                "max_batch_streams": self.max_batch_streams,
+                "max_age_s": self.max_age_s,
+                "pipeline_depth": self.pipeline_depth}
+
     def should_flush(self, n_streams: int, n_blocks: int,
                      age_s: Optional[float] = None) -> bool:
         if (self.max_age_s is not None and age_s is not None

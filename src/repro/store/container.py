@@ -90,8 +90,9 @@ _COLUMNS = [
 ]
 
 
-class ContainerFormatError(ValueError):
-    """Malformed container: bad magic/version/CRC or inconsistent index."""
+# Historical import path: the class now lives in the unified hierarchy
+# (repro.errors) under the ReproError root; same object either way.
+from repro.errors import ContainerFormatError  # noqa: E402,F401
 
 
 # --------------------------------------------------------------------- writer

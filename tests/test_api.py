@@ -1,0 +1,186 @@
+"""Wire-typed public API: JSON round trips, strict validation, the
+CodecConfig <-> IdealemCodec round trip, the unified error hierarchy, and
+the curated ``repro`` facade (ISSUE 10)."""
+import numpy as np
+import pytest
+
+from repro import api
+from repro.errors import (ApiError, AutotuneCacheError, ERROR_CODES,
+                          NotFoundError, OverloadedError, QuotaExceededError,
+                          RateLimitedError, ReproError, StreamFormatError,
+                          error_from_payload, error_payload)
+
+
+# ------------------------------------------------------------- wire types
+def test_compress_request_round_trip():
+    req = api.CompressRequest("s0", np.arange(7, dtype=np.float64))
+    back = api.CompressRequest.from_json(req.to_json())
+    assert back.stream_id == "s0"
+    np.testing.assert_array_equal(back.samples, req.samples)
+    assert back.samples.dtype == np.float64
+
+
+def test_compress_request_preserves_dtype():
+    req = api.CompressRequest("s", np.arange(4, dtype=np.float16))
+    back = api.CompressRequest.from_json(req.to_json())
+    assert back.samples.dtype == np.float16
+
+
+@pytest.mark.parametrize("doc", [
+    None, [], {"stream_id": "s"},                           # missing samples
+    {"stream_id": 3, "samples": {"dtype": "<f8", "b64": ""}},
+    {"stream_id": "s", "samples": {"dtype": "<f8", "b64": "!!"}},
+    {"stream_id": "s", "samples": {"dtype": "<f8", "b64": "AAAA"}},  # ragged
+    {"stream_id": "s", "samples": {"dtype": "<f8", "b64": ""}, "x": 1},
+])
+def test_compress_request_rejects_malformed(doc):
+    with pytest.raises(ApiError):
+        api.CompressRequest.from_json(doc)
+
+
+def test_compress_request_requires_1d():
+    with pytest.raises(ApiError):
+        api.CompressRequest("s", np.zeros((2, 2)))
+
+
+def test_feed_result_round_trip():
+    r = api.FeedResult("s", b"\x00\xff", blocks=3, hits=2, bytes_in=96,
+                       bytes_out=5, final=True)
+    back = api.FeedResult.from_json(r.to_json())
+    assert (back.segment, back.blocks, back.hits, back.final) == \
+        (b"\x00\xff", 3, 2, True)
+
+
+def test_decode_range_request_round_trip_and_validation():
+    req = api.DecodeRangeRequest("st", 2, 9, channel=1, request_id="r1")
+    back = api.DecodeRangeRequest.from_json(req.to_json())
+    assert (back.store_id, back.start_block, back.stop_block,
+            back.channel, back.request_id) == ("st", 2, 9, 1, "r1")
+    with pytest.raises(ApiError):
+        api.DecodeRangeRequest("st", 5, 5)
+    with pytest.raises(ApiError):
+        api.DecodeRangeRequest("st", -1, 4)
+
+
+def test_range_result_round_trip():
+    r = api.RangeResult("r1", np.linspace(0, 1, 9))
+    back = api.RangeResult.from_json(r.to_json())
+    np.testing.assert_array_equal(back.values, r.values)
+
+
+# ------------------------------------------------------------ codec config
+def test_codec_config_to_json_holds_only_non_defaults():
+    assert api.CodecConfig().to_json() == {}
+    doc = api.CodecConfig(mode="delta", num_dict=7).to_json()
+    assert doc == {"mode": "delta", "num_dict": 7}
+
+
+def test_codec_config_json_round_trip():
+    cfg = api.CodecConfig(mode="residual", block_size=16, num_dict=31,
+                          alpha=0.05, rel_tol=0.5,
+                          value_range=(0.0, 360.0), backend="numpy")
+    assert api.CodecConfig.from_json(cfg.to_json()) == cfg
+    assert api.CodecConfig.from_json(None) == api.CodecConfig()
+    with pytest.raises(ApiError):
+        api.CodecConfig.from_json({"no_such_knob": 1})
+    with pytest.raises(ApiError):
+        api.CodecConfig.from_json({"value_range": [1.0]})
+
+
+def test_codec_config_is_hashable_cache_key():
+    a = api.CodecConfig(mode="std", value_range=(0, 1))
+    b = api.CodecConfig(mode="std", value_range=(0.0, 1.0))
+    assert a == b and hash(a) == hash(b)
+
+
+def test_idealem_codec_from_config_round_trip():
+    from repro.core import IdealemCodec
+    cfg = api.CodecConfig(mode="residual", block_size=16, num_dict=31,
+                          alpha=0.05, rel_tol=0.5, backend="numpy")
+    codec = IdealemCodec.from_config(cfg)
+    assert codec.config == cfg
+    assert IdealemCodec.from_config(cfg.to_json()).config == cfg
+    # config-built codec encodes exactly like the kwargs-built one
+    x = np.sin(np.linspace(0, 20, 640))
+    assert codec.encode(x) == IdealemCodec(**cfg.kwargs()).encode(x)
+
+
+def test_codec_config_survives_error_bound_resolution():
+    from repro.core import IdealemCodec
+    codec = IdealemCodec(mode="std", block_size=16, backend="numpy",
+                         error_bound=0.25)
+    again = IdealemCodec.from_config(codec.config)
+    assert again.config == codec.config
+    assert again.error_bound == codec.error_bound
+
+
+# ------------------------------------------------------------------ errors
+def test_error_hierarchy_roots_and_legacy_bases():
+    # every typed error is a ReproError; re-parented classes keep their
+    # historical stdlib bases so existing except clauses still catch them
+    assert issubclass(StreamFormatError, ReproError)
+    assert issubclass(StreamFormatError, ValueError)
+    assert issubclass(AutotuneCacheError, ReproError)
+    assert issubclass(NotFoundError, KeyError)
+    assert issubclass(ApiError, ValueError)
+
+
+def test_error_legacy_import_paths():
+    from repro.core.stream import StreamFormatError as via_stream
+    from repro.core.tuning import AutotuneCacheError as via_tuning
+    assert via_stream is StreamFormatError
+    assert via_tuning is AutotuneCacheError
+
+
+def test_error_codes_and_statuses():
+    assert QuotaExceededError("x").http_status == 429
+    assert RateLimitedError("x").http_status == 429
+    assert OverloadedError("x").http_status == 503
+    assert ApiError("x").http_status == 400
+    assert StreamFormatError("x").http_status == 400
+    for code, cls in ERROR_CODES.items():
+        assert cls("m").code == code
+
+
+def test_error_payload_round_trip():
+    exc = RateLimitedError("slow down", retry_after_s=1.5)
+    doc = error_payload(exc)
+    assert doc["error"]["code"] == "rate_limited"
+    assert doc["error"]["retry_after_s"] == 1.5
+    back = error_from_payload(doc)
+    assert isinstance(back, RateLimitedError)
+    assert back.retry_after_s == 1.5
+    # unknown codes fall back to the root without losing the message
+    odd = error_from_payload({"error": {"code": "???", "message": "m"}})
+    assert isinstance(odd, ReproError)
+
+
+def test_stream_format_error_offset_message():
+    e = StreamFormatError("bad tag", offset=17)
+    assert "17" in str(e)
+
+
+# ------------------------------------------------------------------ facade
+def test_repro_facade_exports_curated_names():
+    import repro
+    for name in ("CodecConfig", "CompressRequest", "FeedResult",
+                 "DecodeRangeRequest", "RangeResult", "IdealemCodec",
+                 "ReproError", "QuotaExceededError", "FlushPolicy",
+                 "ServeFrontend", "FrontendClient", "TenantQuota",
+                 "ControlLoop", "Container", "pack"):
+        assert name in repro.__all__
+        assert getattr(repro, name) is not None
+    assert sorted(dir(repro)) == sorted(set(dir(repro)))
+    with pytest.raises(AttributeError):
+        repro.no_such_symbol
+
+
+def test_facade_import_is_lazy():
+    # `import repro` alone must not pull the device stack
+    import subprocess
+    import sys
+    code = ("import sys; import repro; "
+            "sys.exit(1 if 'jax' in sys.modules else 0)")
+    proc = subprocess.run([sys.executable, "-c", code],
+                          capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stderr
